@@ -1,0 +1,89 @@
+"""Paper Figs. 10-11: per-bit-position '1' probability and transition
+probability, float-32 and fixed-8, random vs trained LeNet weights,
+baseline vs descending-ordered.
+
+The figure itself is a bar chart; the benchmark emits the underlying
+arrays (written to experiments/fig10_11.json) plus the summary statistics
+the paper narrates: the sign/exponent/mantissa structure for float-32 and
+the ordered-vs-baseline transition-probability gap.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (pack, bt_per_position, ones_prob_per_position,
+                        descending_order)
+from repro.quant import quantize_fixed8
+
+from ._trained import get_trained, random_params
+
+LANES = 8
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def _analyze(vals):
+    base = pack(vals, LANES)
+    ordered = pack(descending_order(vals).values, LANES)
+    return {
+        "ones_prob": ones_prob_per_position(base).tolist(),
+        "bt_prob_baseline": bt_per_position(base).tolist(),
+        "bt_prob_ordered": bt_per_position(ordered).tolist(),
+    }
+
+
+def run():
+    model, trained, _ = get_trained("lenet")
+    _, rand = random_params("lenet")
+    out = {}
+    for tag, params in (("random", rand), ("trained", trained)):
+        stream = model.weight_stream(params)
+        out[f"float32-{tag}"] = _analyze(stream)
+        out[f"fixed8-{tag}"] = _analyze(quantize_fixed8(stream).values)
+    return out
+
+
+def summarize(out):
+    rows = []
+    for case, d in out.items():
+        ones = jnp.asarray(d["ones_prob"])
+        base = jnp.asarray(d["bt_prob_baseline"])
+        ord_ = jnp.asarray(d["bt_prob_ordered"])
+        if "float32" in case:
+            regions = {"sign": slice(0, 1), "exponent": slice(1, 9),
+                       "mantissa": slice(9, 32)}
+        else:
+            regions = {"all8": slice(0, 8)}
+        for rname, sl in regions.items():
+            rows.append({
+                "case": case, "region": rname,
+                "ones_prob": float(ones[sl].mean()),
+                "bt_prob_baseline": float(base[sl].mean()),
+                "bt_prob_ordered": float(ord_[sl].mean()),
+            })
+    return rows
+
+
+def main(print_csv=True):
+    t0 = time.perf_counter()
+    out = run()
+    us = (time.perf_counter() - t0) * 1e6
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "fig10_11.json"), "w") as f:
+        json.dump(out, f)
+    rows = summarize(out)
+    if print_csv:
+        for r in rows:
+            print(f"fig10_11/{r['case']}/{r['region']},{us / len(rows):.1f},"
+                  f"p1={r['ones_prob']:.3f}"
+                  f" ptrans_base={r['bt_prob_baseline']:.3f}"
+                  f" ptrans_ord={r['bt_prob_ordered']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Paper Fig. 12: BTs across NoC sizes (4x4/MC2, 8x8/MC4, 8x8/MC8) under
+O0/O1/O2 with full LeNet inference traffic, float-32 and fixed-8.
+
+Traffic is deterministic-stride subsampled per layer to keep CPU simulation
+time bounded; BT *rates* are per-flit quantities, so subsampling is
+unbiased (the paper's absolute counts scale with traffic volume).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from repro.core.wire import by_name
+from repro.noc import PAPER_NOCS, simulate, build_traffic
+from repro.quant import quantize_fixed8
+from repro.data import glyph_batch
+
+from ._trained import get_trained
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments")
+PAPER_BANDS = {
+    # Sec. V-B1: reduction ranges across NoC sizes
+    "float32": {"O1": (12.09, 18.58), "O2": (23.30, 32.01)},
+    "fixed8": {"O1": (7.88, 17.75), "O2": (16.95, 35.93)},
+}
+
+
+def run(max_packets=40, tiebreak="pattern", count_headers=True):
+    model, params, _ = get_trained("lenet")
+    x, _ = glyph_batch(jax.random.PRNGKey(7), 1)
+    layers = model.layer_traffic(params, x[0])
+    results = {}
+    for noc_name, cfg in PAPER_NOCS.items():
+        for fmt in ("float32", "fixed8"):
+            q = None if fmt == "float32" else (lambda t: quantize_fixed8(t).values)
+            base_bt = None
+            for o in ("O0", "O1", "O2"):
+                tr = build_traffic(layers, cfg, by_name(o, tiebreak=tiebreak),
+                                   quantizer=q, max_packets_per_layer=max_packets)
+                t0 = time.perf_counter()
+                res = simulate(cfg, tr, chunk=2048, count_headers=count_headers)
+                dt = time.perf_counter() - t0
+                key = f"{noc_name}/{fmt}/{o}"
+                red = None
+                if o == "O0":
+                    base_bt = res.total_bt
+                else:
+                    red = (1 - res.total_bt / base_bt) * 100
+                results[key] = {
+                    "total_bt": res.total_bt, "cycles": res.cycles,
+                    "flits": res.injected, "reduction_pct": red,
+                    "sim_s": round(dt, 2),
+                }
+    return results
+
+
+def main(print_csv=True):
+    results = run()
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "fig12.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    if print_csv:
+        for key, r in results.items():
+            red = "" if r["reduction_pct"] is None else \
+                f" reduction={r['reduction_pct']:.2f}%"
+            print(f"fig12/{key},{r['sim_s'] * 1e6:.0f},"
+                  f"bt={r['total_bt']}{red} cycles={r['cycles']}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

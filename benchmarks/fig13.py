@@ -1,0 +1,64 @@
+"""Paper Fig. 13: normalized BTs for different DNN models (LeNet vs the
+DarkNet-like model, 64x64x3 input) on the default 4x4/MC2 NoC, O0/O1/O2.
+Paper: up to 35.93% (LeNet) and 40.85% (DarkNet) reduction."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from repro.core.wire import by_name
+from repro.noc import PAPER_NOCS, simulate, build_traffic
+from repro.quant import quantize_fixed8
+from repro.data import glyph_batch
+
+from ._trained import get_trained
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def run(max_packets=40, tiebreak="pattern"):
+    cfg = PAPER_NOCS["4x4_mc2"]
+    results = {}
+    for net in ("lenet", "darknet"):
+        model, params, _ = get_trained(net)
+        hw = model.input_shape[0]
+        ch = model.input_shape[-1]
+        x, _ = glyph_batch(jax.random.PRNGKey(11), 1, hw=hw, channels=ch)
+        layers = model.layer_traffic(params, x[0])
+        for fmt in ("float32", "fixed8"):
+            q = None if fmt == "float32" else (lambda t: quantize_fixed8(t).values)
+            base = None
+            for o in ("O0", "O1", "O2"):
+                tr = build_traffic(layers, cfg, by_name(o, tiebreak=tiebreak),
+                                   quantizer=q, max_packets_per_layer=max_packets)
+                t0 = time.perf_counter()
+                res = simulate(cfg, tr, chunk=2048)
+                dt = time.perf_counter() - t0
+                base = res.total_bt if o == "O0" else base
+                results[f"{net}/{fmt}/{o}"] = {
+                    "total_bt": res.total_bt,
+                    "normalized": res.total_bt / base,
+                    "reduction_pct": (1 - res.total_bt / base) * 100,
+                    "sim_s": round(dt, 2),
+                }
+    return results
+
+
+def main(print_csv=True):
+    results = run()
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "fig13.json"), "w") as f:
+        json.dump(results, f, indent=1)
+    if print_csv:
+        for key, r in results.items():
+            print(f"fig13/{key},{r['sim_s'] * 1e6:.0f},"
+                  f"normalized={r['normalized']:.3f}"
+                  f" reduction={r['reduction_pct']:.2f}%")
+    return results
+
+
+if __name__ == "__main__":
+    main()

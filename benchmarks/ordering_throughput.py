@@ -1,0 +1,67 @@
+"""Ordering-unit software throughput: the jitted XLA path and the Pallas
+kernel path (interpret mode on CPU - correctness harness, not TPU perf).
+
+Derived column reports values/second through the full O2 pipeline
+(popcount -> windowed sort -> pack) - the number a deployment compares
+against the memory-controller line rate.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import descending_order, pack
+from repro.kernels import popcount as pc_kernel, sort_windows_desc, on_tpu
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(n=1 << 18, window=512):
+    key = jax.random.PRNGKey(0)
+    vals = jax.random.normal(key, (n,), jnp.float32)
+
+    @jax.jit
+    def xla_o2(v):
+        o = descending_order(v, window=window)
+        return pack(o.values, 16).words
+
+    us_xla = _time(xla_o2, vals)
+
+    keys = jax.random.randint(key, (n // window, window), 0, 33, jnp.int32)
+    payload = jax.random.randint(key, (n // window, window), 0, 2**31 - 1,
+                                 jnp.int32).astype(jnp.uint32)
+    us_pallas_sort = _time(lambda k, p: sort_windows_desc(k, p)[0],
+                           keys, payload)
+    us_pallas_pc = _time(pc_kernel, vals)
+    return {
+        "n": n,
+        "xla_o2_us": us_xla,
+        "xla_o2_values_per_s": n / (us_xla / 1e6),
+        "pallas_sort_us_interpret": us_pallas_sort,
+        "pallas_popcount_us_interpret": us_pallas_pc,
+        "backend": "tpu" if on_tpu() else "cpu-interpret",
+    }
+
+
+def main(print_csv=True):
+    r = run()
+    if print_csv:
+        print(f"ordering_throughput/xla_o2,{r['xla_o2_us']:.0f},"
+              f"{r['xla_o2_values_per_s']:.3g} values/s (n={r['n']})")
+        print(f"ordering_throughput/pallas_sort,{r['pallas_sort_us_interpret']:.0f},"
+              f"mode={r['backend']}")
+        print(f"ordering_throughput/pallas_popcount,"
+              f"{r['pallas_popcount_us_interpret']:.0f},mode={r['backend']}")
+    return r
+
+
+if __name__ == "__main__":
+    main()

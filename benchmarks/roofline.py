@@ -1,0 +1,274 @@
+"""Roofline analysis per (arch x shape x mesh) from the dry-run artifacts.
+
+Three terms, in seconds per step, per chip (TPU v5e):
+
+    compute    = HW_FLOPs / (chips * 197e12)
+    memory     = HBM_bytes / (chips * 819e9)
+    collective = collective_bytes_per_chip / 50e9
+
+Methodology notes (full discussion in EXPERIMENTS.md):
+  * collective bytes come from the compiled partitioned HLO with while-body
+    traffic multiplied by loop trip counts (repro.launch.dryrun).
+  * XLA-CPU cost_analysis does NOT scale loop bodies by trip count and its
+    'bytes accessed' lacks fusion-aware cache modeling (calibrated 5x high
+    on a bare dot), so the compute/memory terms use an analytic hardware
+    model (the industry MFU convention, plus attention/recurrence terms),
+    with the raw HLO numbers recorded alongside for reference.
+  * MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE); the ratio against
+    hardware FLOPs shows remat/attention overhead; the roofline fraction =
+    useful-compute time / dominant term time.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+from repro.configs import ARCHS, SHAPES
+from repro.models.spec import is_spec
+
+import jax
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / chip (ICI)
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter/flop model
+# ---------------------------------------------------------------------------
+
+def _param_split(arch):
+    """(matmul_params_active, matmul_params_total, embed_params)."""
+    model = arch.build()
+    specs = model.specs()
+    leaves = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=is_spec)[0]
+    active = total = embed = 0
+    cfg = arch.config
+    for path, s in leaves:
+        n = 1
+        for d in s.shape:
+            n *= d
+        pstr = "/".join(str(getattr(p, "key", p)) for p in path)
+        if "embed" == pstr or "pos_dec" in pstr or "vis_proj" in pstr:
+            embed += n
+            continue
+        total += n
+        if "experts" in (s.axes or ()):
+            frac = cfg.top_k / cfg.n_experts
+            active += int(n * frac)
+        else:
+            active += n
+    # logits matmul: tied embeddings reuse the embed table as a matmul
+    v = getattr(cfg, "padded_vocab", 0)
+    d = cfg.d_model
+    if getattr(cfg, "tied_embeddings", True) and v:
+        active += v * d
+        total += v * d
+    return active, total, embed
+
+
+def _attn_layers(cfg):
+    if hasattr(cfg, "pattern"):
+        n_attn = sum(1 for k in cfg.pattern) * 0  # recomputed below
+        per = len(cfg.pattern)
+        full_groups = cfg.n_layers // per
+        counts = {}
+        for k in cfg.pattern:
+            counts[k] = counts.get(k, 0) + 1
+        tail = cfg.pattern[:cfg.n_layers % per]
+        for k in tail:
+            counts[k] = counts.get(k, 0)  # ensure key
+        n = {k: counts.get(k, 0) * full_groups for k in counts}
+        for k in tail:
+            n[k] = n.get(k, 0) + 1
+        return n
+    return {"attn": cfg.n_layers * 2}   # enc-dec: both stacks (+cross below)
+
+
+def _cell_flops(arch, cell):
+    """(hw_flops_global, model_flops_global) for one step."""
+    cfg = arch.config
+    b, s = cell.global_batch, cell.seq_len
+    act, tot, _ = _param_split(arch)
+    d_kv = cfg.hd * cfg.n_heads if hasattr(cfg, "pattern") else cfg.d_model
+    layer_counts = _attn_layers(cfg)
+
+    def attn_fwd(q_len, kv_len, causal=True):
+        window = getattr(cfg, "window", 0)
+        eff = min(kv_len, window) if window else kv_len
+        frac = 0.5 if (causal and not window and q_len == kv_len) else 1.0
+        return 4.0 * b * q_len * eff * d_kv * frac
+
+    n_attn = layer_counts.get("attn", 0)
+    extra = 0.0
+    # mLSTM/sLSTM state updates: ~8 * B * S * H * hd^2-equivalent per layer
+    for kind in ("mlstm", "slstm"):
+        if kind in layer_counts and hasattr(cfg, "hd"):
+            hd = cfg.d_model // cfg.n_heads
+            per_tok = 8.0 * cfg.n_heads * hd * hd if kind == "mlstm" \
+                else 8.0 * cfg.d_model
+            extra += layer_counts[kind] * per_tok
+
+    if cell.mode == "train":
+        tokens = b * s
+        fwd = 2.0 * act * tokens + n_attn * attn_fwd(s, s) + extra * tokens
+        if arch.kind == "encdec":
+            s_dec = max(s // 4, 8)
+            tokens = b * (s + s_dec)
+            fwd = (2.0 * act * tokens
+                   + cfg.n_layers * (attn_fwd(s, s, False)
+                                     + attn_fwd(s_dec, s_dec)
+                                     + attn_fwd(s_dec, s, False)))
+        hw = fwd * 4.0          # bwd = 2x fwd, remat re-fwd = 1x
+        model = fwd * 3.0
+    elif cell.mode == "prefill":
+        tokens = b * s
+        fwd = 2.0 * act * tokens + n_attn * attn_fwd(s, s) + extra * tokens
+        if arch.kind == "encdec":
+            s_dec = max(s // 4, 8)
+            fwd = (2.0 * act * b * (s + s_dec)
+                   + cfg.n_layers * (attn_fwd(s, s, False)
+                                     + attn_fwd(s_dec, s_dec)
+                                     + attn_fwd(s_dec, s, False)))
+        hw = model = fwd
+    else:  # decode: one token per sequence
+        cache = cfg.cache_len(s) if hasattr(cfg, "cache_len") else s
+        fwd = 2.0 * act * b + n_attn * attn_fwd(1, cache, causal=False) + extra * b
+        if arch.kind == "encdec":
+            fwd = 2.0 * act * b + cfg.n_layers * (
+                attn_fwd(1, max(s // 4, 8), False) + attn_fwd(1, s, False))
+        hw = model = fwd
+    return hw, model
+
+
+def _cell_bytes(arch, cell, devices, rec):
+    """Analytic per-device HBM traffic per step (lower-bound model)."""
+    cfg = arch.config
+    b, s = cell.global_batch, cell.seq_len
+    act, tot, embed = _param_split(arch)
+    p_bytes = rec.get("param_bytes_global", tot * 2)
+    p_dev = p_bytes / devices
+    d = cfg.d_model
+    layers = cfg.n_layers
+    if cell.mode == "train":
+        # params r/w + fp32-equivalent opt states r/w + grads r/w +
+        # one activation checkpoint per layer r/w (remat recompute covers
+        # the rest from those)
+        opt_factor = 2.0 if arch.optimizer_state == "int8" else 8.0
+        act_ckpt = layers * (b * s / devices) * d * 2 * 4
+        return p_dev * 4 + p_dev * opt_factor + act_ckpt
+    if cell.mode == "prefill":
+        kv = 2 * layers * (b * s / devices) * cfg.n_kv * cfg.hd * 2 \
+            if hasattr(cfg, "n_kv") else 0
+        acts = layers * (b * s / devices) * d * 2 * 2
+        return p_dev + kv + acts
+    # decode: touch active params once + read/write the cache
+    cache = cfg.cache_len(s) if hasattr(cfg, "cache_len") else s
+    act_dev = act * 2 / min(devices, 256)   # active params, bf16, sharded
+    kv_dev = 2 * layers * (b / max(devices // 16, 1)) * cache \
+        * getattr(cfg, "n_kv", 1) * getattr(cfg, "hd", d) * 2 / 16
+    # simpler: global cache bytes / devices
+    kv_global = 2 * layers * b * cache * getattr(cfg, "n_kv", 1) \
+        * getattr(cfg, "hd", d) * 2
+    return act * 2 / devices + kv_global / devices
+
+
+# ---------------------------------------------------------------------------
+# table construction
+# ---------------------------------------------------------------------------
+
+def load_records(mesh="pod16x16", tag=""):
+    recs = {}
+    for path in glob.glob(os.path.join(DRYRUN_DIR, f"*__{mesh}{tag}.json")):
+        base = os.path.basename(path)
+        if tag == "" and base.count("__") != 2:
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        recs[(r["arch"], r["shape"])] = r
+    return recs
+
+
+def build_table(mesh="pod16x16", tag=""):
+    recs = load_records(mesh, tag)
+    rows = []
+    for arch_name in ARCHS:
+        arch = ARCHS[arch_name]
+        for shape_name, cell in SHAPES.items():
+            r = recs.get((arch_name, shape_name))
+            if r is None:
+                continue
+            if r["status"] == "skip":
+                rows.append({"arch": arch_name, "shape": shape_name,
+                             "status": "skip", "reason": r["reason"]})
+                continue
+            if r["status"] != "ok":
+                rows.append({"arch": arch_name, "shape": shape_name,
+                             "status": "fail", "reason": r.get("error", "")})
+                continue
+            devices = r["devices"]
+            hw_flops, model_flops = _cell_flops(arch, cell)
+            compute_s = hw_flops / devices / PEAK_FLOPS
+            mem_bytes = _cell_bytes(arch, cell, devices, r)
+            memory_s = mem_bytes / HBM_BW
+            coll_bytes = r["collective_bytes_per_device"]["total"]
+            coll_s = coll_bytes / LINK_BW
+            terms = {"compute": compute_s, "memory": memory_s,
+                     "collective": coll_s}
+            dominant = max(terms, key=terms.get)
+            useful_s = model_flops / devices / PEAK_FLOPS
+            fraction = useful_s / max(terms.values()) if max(terms.values()) else 0
+            rows.append({
+                "arch": arch_name, "shape": shape_name, "status": "ok",
+                "devices": devices,
+                "compute_s": compute_s, "memory_s": memory_s,
+                "collective_s": coll_s, "dominant": dominant,
+                "model_flops": model_flops, "hw_flops": hw_flops,
+                "hlo_flops_raw_per_dev": r.get("flops_per_device"),
+                "model_over_hw": model_flops / hw_flops,
+                "roofline_fraction": fraction,
+                "collective_breakdown": r["collective_bytes_per_device"],
+            })
+    return rows
+
+
+def to_markdown(rows):
+    md = ["| arch | shape | compute s | memory s | collective s | dominant "
+          "| roofline frac | note |",
+          "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "ok":
+            md.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | - | "
+                      f"{r['status']}: {r.get('reason','')[:60]} |")
+            continue
+        md.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['dominant']} | {r['roofline_fraction']:.3f} | |")
+    return "\n".join(md)
+
+
+def main(print_csv=True, mesh="pod16x16", tag=""):
+    t0 = time.perf_counter()
+    rows = build_table(mesh, tag)
+    us = (time.perf_counter() - t0) * 1e6
+    if print_csv:
+        for r in rows:
+            if r["status"] != "ok":
+                print(f"roofline/{r['arch']}/{r['shape']},0,{r['status']}")
+                continue
+            print(f"roofline/{r['arch']}/{r['shape']},{us/len(rows):.0f},"
+                  f"dominant={r['dominant']}"
+                  f" frac={r['roofline_fraction']:.3f}"
+                  f" c={r['compute_s']:.2e}s m={r['memory_s']:.2e}s"
+                  f" x={r['collective_s']:.2e}s")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

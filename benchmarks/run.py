@@ -1,0 +1,44 @@
+"""Benchmark suite entry point - one module per paper table/figure plus the
+framework-level analyses. Prints ``name,us_per_call,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run table1 fig12
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+from . import (table1, fig1_expectation, fig10_11, fig12, fig13,
+               table2_power, ordered_collectives, ordering_throughput,
+               roofline)
+
+SUITES = {
+    "table1": table1.main,                    # Tab. I: BT reduction w/o NoC
+    "fig1": fig1_expectation.main,            # Fig. 1: E[BT] surface
+    "fig10_11": fig10_11.main,                # Figs. 10-11: bit distributions
+    "fig12": fig12.main,                      # Fig. 12: NoC sizes x O0/O1/O2
+    "fig13": fig13.main,                      # Fig. 13: LeNet vs DarkNet
+    "table2": table2_power.main,              # Tab. II + link power model
+    "ordered_collectives": ordered_collectives.main,  # beyond-paper: ICI
+    "ordering_throughput": ordering_throughput.main,
+    "roofline": roofline.main,                # from dry-run artifacts
+}
+
+
+def main() -> None:
+    picks = sys.argv[1:] or list(SUITES)
+    failed = []
+    for name in picks:
+        try:
+            SUITES[name]()
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            print(f"{name},0,FAILED:{type(e).__name__}:{e}")
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"failed suites: {failed}")
+
+
+if __name__ == "__main__":
+    main()

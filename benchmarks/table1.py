@@ -1,0 +1,78 @@
+"""Paper Tab. I: BT reduction without NoC.
+
+Protocol (Sec. V-A): flits of 8 weights; LeNet weights, random-init and
+trained; float-32 (256-bit flits) and fixed-8 (64-bit flits); kernels
+zero-padded to flit boundaries; stream ordered descending by '1'-bit count.
+The paper's packet granularity is not fully specified, so the bench also
+reports a window sensitivity row (EXPERIMENTS.md discusses the bands).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pack, bt_per_flit, descending_order, reduction_rate
+from repro.core.ordering import pad_to_window
+from repro.quant import quantize_fixed8
+
+from ._trained import get_trained, random_params
+
+LANES = 8
+PAPER = {  # (baseline BT/flit, ordered, reduction %) from Tab. I
+    "float32-random": (113.27, 90.18, 20.38),
+    "fixed8-random": (31.01, 22.42, 27.70),
+    "float32-trained": (112.80, 91.46, 18.92),
+    "fixed8-trained": (30.55, 13.73, 55.71),
+}
+
+
+def _measure(stream, window, tiebreak):
+    base = pack(pad_to_window(stream, window), LANES)
+    t0 = time.perf_counter()
+    ordered = descending_order(stream, window=window, tiebreak=tiebreak)
+    jax.block_until_ready(ordered.values)
+    us = (time.perf_counter() - t0) * 1e6
+    opt = pack(ordered.values, LANES)
+    b, o = float(bt_per_flit(base)), float(bt_per_flit(opt))
+    return b, o, float(reduction_rate(jnp.asarray(b), jnp.asarray(o))) * 100, us
+
+
+def run(window=None):
+    model, trained, acc = get_trained("lenet")
+    _, rand = random_params("lenet")
+    rows = []
+    for tag, params in (("random", rand), ("trained", trained)):
+        stream = model.weight_stream(params)
+        for fmt in ("float32", "fixed8"):
+            vals = stream if fmt == "float32" else quantize_fixed8(stream).values
+            key = f"{fmt}-{tag}"
+            pb, po, pr = PAPER[key]
+            for tiebreak in ("stable", "pattern"):
+                b, o, red, us = _measure(vals, window, tiebreak)
+                rows.append({
+                    "case": key, "tiebreak": tiebreak,
+                    "baseline_bt_per_flit": b, "ordered_bt_per_flit": o,
+                    "reduction_pct": red, "paper_reduction_pct": pr, "us": us,
+                })
+    return {"rows": rows, "lenet_glyph_acc": acc}
+
+
+def main(print_csv=True):
+    out = run()
+    lines = []
+    for r in out["rows"]:
+        lines.append(f"table1/{r['case']}/{r['tiebreak']},{r['us']:.1f},"
+                     f"reduction={r['reduction_pct']:.2f}%"
+                     f"(paper {r['paper_reduction_pct']}%)"
+                     f" base={r['baseline_bt_per_flit']:.2f}"
+                     f" ord={r['ordered_bt_per_flit']:.2f}")
+    if print_csv:
+        for ln in lines:
+            print(ln)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Batched serving example: prefill + KV-cache decode on a reduced config.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import jax
+
+from repro.configs import get
+from repro.models.spec import init_params
+from repro.serve import Engine, GenerationConfig
+
+arch = get("h2o-danube-3-4b")          # SWA arch: ring KV cache path
+model = arch.build_reduced()
+params = init_params(model.specs(), jax.random.PRNGKey(0))
+engine = Engine(model, params, context=64)
+
+prompts = jax.random.randint(jax.random.PRNGKey(1), (4, 16), 0,
+                             model.cfg.vocab)
+out = engine.generate(prompts, GenerationConfig(max_new_tokens=24,
+                                                temperature=0.7))
+print("generated token ids:")
+print(out)

@@ -1,0 +1,22 @@
+"""End-to-end LM training driver example: trains the xlstm-125m FULL config
+(~71M backbone) for a few hundred steps on CPU with checkpoint/restart and
+gradient-wire BT telemetry. This is a thin veneer over repro.launch.train,
+which the production launcher uses on real meshes.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 200
+"""
+import subprocess
+import sys
+
+steps = "200"
+for i, a in enumerate(sys.argv):
+    if a == "--steps":
+        steps = sys.argv[i + 1]
+
+subprocess.run([
+    sys.executable, "-m", "repro.launch.train",
+    "--arch", "xlstm-125m",
+    "--steps", steps, "--seq", "128", "--batch", "8",
+    "--ckpt", "/tmp/repro_xlstm_ckpt", "--ckpt-every", "50",
+    "--wire-telemetry",
+], check=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})

@@ -1,0 +1,198 @@
+"""Architecture definitions: config + shapes + input specs + shardings.
+
+Each assigned architecture is one ArchDef. ``input_specs(shape)`` returns
+ShapeDtypeStruct stand-ins for every input of the function the dry-run
+lowers (weak-type-correct, shardable, no allocation). Modality frontends
+are stubs: VLM archs get precomputed patch embeddings, audio archs get
+precomputed frame embeddings, exactly as assigned.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import (DEFAULT_RULES, Rules, logical_to_pspec,
+                                 spec_shardings)
+from repro.models import LM, LMConfig, EncDec, EncDecConfig
+
+__all__ = ["SHAPES", "ShapeCell", "ArchDef", "lm_arch"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str                  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+_I32 = jnp.int32
+_BF16 = jnp.bfloat16
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# Cache logical-axes tables, by structure key pattern (see cache_shardings).
+# Decode caches shard the SEQUENCE axis over 'model' (vLLM-page style):
+# scatter updates stay local and the per-step score reduction is tiny,
+# vs. head-dim sharding which forced a full cache rematerialization per
+# step (EXPERIMENTS.md SSPerf "decode cache layout": 384x on starcoder2).
+_CACHE_RULES: Rules = {
+    "batch": "data", "seq": "model", "kv_heads": None, "head_dim": None,
+    "state": "model", "heads": "model", "layers": None, "embed": "model",
+}
+
+
+def _cache_axes_for(path: str, rank: int) -> Tuple[Optional[str], ...]:
+    """Logical axes of one cache leaf, from its pytree path + rank."""
+    if "memory" in path:
+        return ("batch", "seq", "embed")
+    if "attn" in path or "self" in path or "cross" in path:  # KVCache k/v
+        base = ("batch", "seq", "kv_heads", "head_dim")
+        return ("layers",) + base if rank == 5 else base
+    if "conv" in path:                               # (.., B, width, D)
+        base = ("batch", None, "state")
+        return ("layers",) + base if rank == 4 else base
+    if rank >= 3 and ("mlstm" in path or "slstm" in path):
+        # mlstm c (L,B,H,hd,hd) / n (L,B,H,hd) / m (L,B,H); slstm (L,B,D)
+        names = ("layers", "batch", "heads", "head_dim", "head_dim")
+        return names[:rank] if "mlstm" in path else ("layers", "batch", "state")[:rank]
+    if rank == 2:                                    # rec h (B, D)
+        return ("batch", "state")
+    if rank == 3:                                    # rec h stacked (L, B, D)
+        return ("layers", "batch", "state")
+    return tuple([None] * rank)
+
+
+def cache_shardings(cache_abstract, mesh: Mesh):
+    """NamedSharding pytree for a decode cache (from jax.eval_shape)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_abstract)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        axes = _cache_axes_for(pstr, len(leaf.shape))
+        out.append(NamedSharding(
+            mesh, logical_to_pspec(axes, leaf.shape, _CACHE_RULES, mesh)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchDef:
+    name: str
+    kind: str                               # "lm" | "encdec"
+    config: object                          # LMConfig | EncDecConfig
+    rules: Rules
+    reduced_config: object                  # small same-family config
+    optimizer_state: str = "fp32"           # "int8" for the 1T arch
+    notes: str = ""
+
+    def build(self):
+        return LM(self.config) if self.kind == "lm" else EncDec(self.config)
+
+    def build_reduced(self):
+        return (LM(self.reduced_config) if self.kind == "lm"
+                else EncDec(self.reduced_config))
+
+    # -- shape support -------------------------------------------------
+    def supports(self, shape_name: str) -> Tuple[bool, str]:
+        cell = SHAPES[shape_name]
+        if cell.name == "long_500k":
+            sub_q = self.config.sub_quadratic
+            if not sub_q:
+                return False, ("full-attention KV at 500k context is "
+                               "unbounded; skipped per assignment policy")
+        return True, ""
+
+    # -- abstract inputs -------------------------------------------------
+    def input_specs(self, shape_name: str) -> Dict[str, object]:
+        """ShapeDtypeStructs for the non-(params/state) inputs of the cell."""
+        cell = SHAPES[shape_name]
+        cfg = self.config
+        b, s = cell.global_batch, cell.seq_len
+        if self.kind == "encdec":
+            s_dec = max(s // 4, 8)
+            if cell.mode == "train":
+                return {"frames": _sds((b, s, cfg.d_model), _BF16),
+                        "tokens": _sds((b, s_dec), _I32),
+                        "targets": _sds((b, s_dec), _I32),
+                        "mask": _sds((b, s_dec), jnp.float32)}
+            if cell.mode == "prefill":
+                return {"frames": _sds((b, s, cfg.d_model), _BF16),
+                        "tokens": _sds((b, s_dec), _I32)}
+            return {"token": _sds((b,), _I32), "pos": _sds((b,), _I32)}
+        # LM family
+        if cell.mode == "train":
+            specs = {"tokens": _sds((b, s), _I32),
+                     "targets": _sds((b, s), _I32),
+                     "mask": _sds((b, s), jnp.float32)}
+        elif cell.mode == "prefill":
+            specs = {"tokens": _sds((b, s), _I32)}
+        else:
+            specs = {"token": _sds((b,), _I32), "pos": _sds((b,), _I32)}
+        if getattr(cfg, "vlm_prefix", 0) and cell.mode != "decode":
+            specs["patch_embeds"] = _sds((b, cfg.vlm_prefix, cfg.d_model), _BF16)
+        return specs
+
+    def input_shardings(self, specs: Dict[str, object], mesh: Mesh):
+        """Batch-sharded inputs (falls back to replication for batch=1).
+
+        Token-like inputs carry a logical 'seq' second axis so a per-arch
+        rule can turn on sequence parallelism (None under default rules).
+        """
+        out = {}
+        for k, v in specs.items():
+            axes = ("batch",) + tuple([None] * (len(v.shape) - 1))
+            if k in ("tokens", "targets", "mask", "frames") and len(v.shape) >= 2:
+                axes = ("batch", "seq") + tuple([None] * (len(v.shape) - 2))
+            out[k] = NamedSharding(
+                mesh, logical_to_pspec(axes, v.shape, self.rules, mesh))
+        return out
+
+    def param_shardings(self, mesh: Mesh):
+        return spec_shardings(self.build().specs(), self.rules, mesh)
+
+
+def lm_arch(name: str, *, reduced_overrides: Optional[dict] = None,
+            rules_overrides: Optional[dict] = None,
+            optimizer_state: str = "fp32", notes: str = "",
+            **cfg_kw) -> ArchDef:
+    cfg = LMConfig(name=name, **cfg_kw)
+    red_kw = dict(cfg_kw)
+    pattern = cfg_kw.get("pattern", ("attn",))
+    red_kw.update({
+        "n_layers": max(2 * len(pattern), 2),
+        "d_model": 128,
+        "n_heads": 4, "n_kv": min(cfg_kw.get("n_kv", 4), 4),
+        "d_ff": 256 if cfg_kw.get("d_ff", 0) else 0,
+        "vocab": 512,
+    })
+    if cfg_kw.get("n_experts"):
+        red_kw["n_experts"] = 4
+        red_kw["top_k"] = min(cfg_kw.get("top_k", 2), 2)
+    if cfg_kw.get("window"):
+        red_kw["window"] = 16
+    if cfg_kw.get("vlm_prefix"):
+        red_kw["vlm_prefix"] = 8
+    if cfg_kw.get("kv_chunk"):
+        red_kw["kv_chunk"] = 0
+    if cfg_kw.get("head_dim"):
+        red_kw["head_dim"] = 32
+    red_kw.update(reduced_overrides or {})
+    rules = dict(DEFAULT_RULES)
+    rules.update(rules_overrides or {})
+    return ArchDef(name=name, kind="lm", config=cfg, rules=rules,
+                   reduced_config=LMConfig(name=name + "-reduced", **red_kw),
+                   optimizer_state=optimizer_state, notes=notes)

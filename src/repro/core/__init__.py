@@ -1,0 +1,35 @@
+"""Core of the paper's contribution: bit-transition math + transmission ordering.
+
+Public API:
+    bits      - popcount / unsigned views / per-element transitions
+    flits     - packing value streams into link flits
+    bt        - measured + expected bit-transition metrics (Eqs. 1-3)
+    ordering  - descending / affiliated (O1) / separated (O2) orderings
+    wire      - composable WireTransform API used by the NoC and dist layers
+"""
+from . import bits, flits, bt, ordering, wire
+from .bits import popcount, transitions
+from .flits import FlitStream, pack, pack_paired, unpack
+from .bt import (
+    bt_stream, bt_per_flit, bt_between, expected_bt_pair, expected_bt_stream,
+    pairing_objective, reduction_rate, bt_per_position, ones_prob_per_position,
+)
+from .ordering import (
+    descending_order, affiliated_order, separated_order, descending_perm,
+    inverse_permutation, apply_permutation, index_overhead_bits,
+    Ordered, PairedOrdered,
+)
+from .wire import WireTransform, by_name as wire_transform, measure as measure_stream
+
+__all__ = [
+    "bits", "flits", "bt", "ordering", "wire",
+    "popcount", "transitions",
+    "FlitStream", "pack", "pack_paired", "unpack",
+    "bt_stream", "bt_per_flit", "bt_between", "expected_bt_pair",
+    "expected_bt_stream", "pairing_objective", "reduction_rate",
+    "bt_per_position", "ones_prob_per_position",
+    "descending_order", "affiliated_order", "separated_order",
+    "descending_perm", "inverse_permutation", "apply_permutation",
+    "index_overhead_bits", "Ordered", "PairedOrdered",
+    "WireTransform", "wire_transform", "measure_stream",
+]

@@ -1,0 +1,114 @@
+"""Bit-level primitives: unsigned views, SWAR popcount, transition counts.
+
+These are the scalar building blocks of the paper's technique: every ordering
+decision is keyed on the '1'-bit count (popcount) of a transmitted value, and
+every evaluation metric is a count of 0<->1 transitions between consecutive
+flits on a link.
+
+TPU note: there is no hardware popcount instruction on the VPU, so we use the
+classic SWAR (SIMD-within-a-register) bit-twiddling reduction - exactly the
+circuit the paper's ordering unit implements in RTL (Fig. 14). The same code
+path is used by the pure-jnp reference and (in vector form) by the Pallas
+kernel in ``repro.kernels.popcount``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "unsigned_view",
+    "popcount",
+    "popcount32",
+    "popcount8",
+    "bit_width",
+    "bits_of",
+    "transitions",
+]
+
+_UNSIGNED = {
+    jnp.dtype(jnp.float32): jnp.uint32,
+    jnp.dtype(jnp.int32): jnp.uint32,
+    jnp.dtype(jnp.uint32): jnp.uint32,
+    jnp.dtype(jnp.bfloat16): jnp.uint16,
+    jnp.dtype(jnp.float16): jnp.uint16,
+    jnp.dtype(jnp.int16): jnp.uint16,
+    jnp.dtype(jnp.uint16): jnp.uint16,
+    jnp.dtype(jnp.int8): jnp.uint8,
+    jnp.dtype(jnp.uint8): jnp.uint8,
+}
+
+
+def bit_width(dtype) -> int:
+    """Number of bits in one element of ``dtype``."""
+    return jnp.dtype(dtype).itemsize * 8
+
+
+def unsigned_view(values: jax.Array) -> jax.Array:
+    """Reinterpret ``values`` as the same-width unsigned integer type.
+
+    This is a bitcast (no numeric conversion): the float32 ``-0.0`` maps to
+    ``0x80000000``, matching what travels on the physical link.
+    """
+    dt = jnp.dtype(values.dtype)
+    if dt not in _UNSIGNED:
+        raise TypeError(f"no unsigned view for dtype {dt}")
+    target = _UNSIGNED[dt]
+    if dt == jnp.dtype(target):
+        return values
+    return jax.lax.bitcast_convert_type(values, target)
+
+
+def popcount32(x: jax.Array) -> jax.Array:
+    """SWAR popcount of a uint32 array. Returns uint32 counts in [0, 32]."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (x * jnp.uint32(0x01010101)) >> 24
+
+
+def popcount8(x: jax.Array) -> jax.Array:
+    """SWAR popcount of a uint8 array. Returns uint8 counts in [0, 8]."""
+    x = x.astype(jnp.uint8)
+    x = x - ((x >> 1) & jnp.uint8(0x55))
+    x = (x & jnp.uint8(0x33)) + ((x >> 2) & jnp.uint8(0x33))
+    return (x + (x >> 4)) & jnp.uint8(0x0F)
+
+
+def popcount(values: jax.Array) -> jax.Array:
+    """'1'-bit count of each element, via its unsigned bit pattern.
+
+    Works for any dtype with an unsigned view (float32, bf16, int8, ...).
+    Returns an int32 array of the same shape.
+    """
+    u = unsigned_view(values)
+    nbits = bit_width(u.dtype)
+    if nbits == 8:
+        return popcount8(u).astype(jnp.int32)
+    # Promote 16-bit lanes to 32-bit; popcount32 handles both.
+    return popcount32(u.astype(jnp.uint32)).astype(jnp.int32)
+
+
+def bits_of(values: jax.Array) -> jax.Array:
+    """Expand each element into its bits, MSB first.
+
+    Returns a uint8 array of shape ``values.shape + (nbits,)``. Used for the
+    bit-position distribution analyses (paper Figs. 10-11).
+    """
+    u = unsigned_view(values)
+    nbits = bit_width(u.dtype)
+    u32 = u.astype(jnp.uint32)
+    shifts = jnp.arange(nbits - 1, -1, -1, dtype=jnp.uint32)
+    return ((u32[..., None] >> shifts) & jnp.uint32(1)).astype(jnp.uint8)
+
+
+def transitions(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Per-element count of toggling bits between ``a`` and ``b``.
+
+    A bit transition is a 0->1 or 1->0 change on one wire between two
+    consecutive flits (paper Sec. III-A); XOR marks toggling wires and the
+    popcount tallies them.
+    """
+    ua, ub = unsigned_view(a), unsigned_view(b)
+    return popcount(ua ^ ub)

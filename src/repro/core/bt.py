@@ -1,0 +1,102 @@
+"""Bit-transition metrics and the paper's expected-BT model (Sec. III).
+
+Two families of function live here:
+
+* **Measured BT** - exact transition counts on a concrete flit stream
+  (what the paper's "BT recording" hardware of Fig. 8 tallies).
+* **Expected BT** - the analytical i.i.d.-bit model of Eqs. (1)-(3), which is
+  what the ordering strategy provably optimizes. ``pairing_objective`` is the
+  F = sum(x_i * y_i) of Eq. (4) that descending ordering maximizes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .bits import popcount, transitions, bits_of
+from .flits import FlitStream
+
+__all__ = [
+    "bt_between",
+    "bt_stream",
+    "bt_per_flit",
+    "bt_per_position",
+    "ones_prob_per_position",
+    "expected_bt_pair",
+    "expected_bt_stream",
+    "pairing_objective",
+    "reduction_rate",
+]
+
+
+# ---------------------------------------------------------------------------
+# Measured BT
+# ---------------------------------------------------------------------------
+
+def bt_between(flit_a: jax.Array, flit_b: jax.Array) -> jax.Array:
+    """Total bit transitions when ``flit_b`` follows ``flit_a`` on the link."""
+    return jnp.sum(transitions(flit_a, flit_b))
+
+
+def bt_stream(stream: FlitStream) -> jax.Array:
+    """Total BTs over a stream of consecutive flits (sum over row pairs)."""
+    w = stream.words
+    return jnp.sum(transitions(w[:-1], w[1:]))
+
+
+def bt_per_flit(stream: FlitStream) -> jax.Array:
+    """Average BTs per flit boundary - the paper's Tab. I metric."""
+    w = stream.words
+    n_pairs = max(w.shape[0] - 1, 1)
+    return bt_stream(stream) / n_pairs
+
+
+def bt_per_position(stream: FlitStream) -> jax.Array:
+    """Probability of a transition at each bit position within a value.
+
+    Paper Figs. 10-11 (bottom): x-axis is the bit position inside one value
+    (sign / exponent / mantissa for float-32), y-axis the transition
+    probability, averaged over lanes and flit boundaries.
+    """
+    bits = bits_of(stream.words)              # (nf, lanes, nbits)
+    tog = bits[:-1] ^ bits[1:]
+    return jnp.mean(tog.astype(jnp.float32), axis=(0, 1))
+
+
+def ones_prob_per_position(stream: FlitStream) -> jax.Array:
+    """Probability of a '1' at each bit position (paper Figs. 10-11 top)."""
+    bits = bits_of(stream.words)
+    return jnp.mean(bits.astype(jnp.float32), axis=(0, 1))
+
+
+# ---------------------------------------------------------------------------
+# Expected BT (Eqs. 1-3) under the i.i.d.-bit-position model
+# ---------------------------------------------------------------------------
+
+def expected_bt_pair(x: jax.Array, y: jax.Array, value_bits: int) -> jax.Array:
+    """Eq. (2), generalized from 32 to ``value_bits`` = b:
+
+        E = b * P(t) = x + y - 2xy/b          (b = 32 -> x + y - xy/16)
+
+    ``x``/``y`` are '1'-bit counts of the two values sharing a lane.
+    """
+    x = x.astype(jnp.float32)
+    y = y.astype(jnp.float32)
+    return x + y - 2.0 * x * y / value_bits
+
+
+def expected_bt_stream(stream: FlitStream) -> jax.Array:
+    """Eq. (3) summed over every consecutive flit pair of the stream."""
+    c = popcount(stream.words)                # (nf, lanes)
+    e = expected_bt_pair(c[:-1], c[1:], stream.value_bits)
+    return jnp.sum(e)
+
+
+def pairing_objective(x_counts: jax.Array, y_counts: jax.Array) -> jax.Array:
+    """F = sum_i x_i * y_i (Eq. 4). Ordering maximizes this; BT ~ const - 2F/b."""
+    return jnp.sum(x_counts.astype(jnp.float32) * y_counts.astype(jnp.float32))
+
+
+def reduction_rate(baseline: jax.Array, optimized: jax.Array) -> jax.Array:
+    """BT reduction rate = 1 - optimized/baseline (paper's headline metric)."""
+    return 1.0 - optimized / baseline

@@ -1,0 +1,88 @@
+"""Flit packing: turning value streams into link flits.
+
+A flit is the atomic unit that crosses one NoC link in one cycle. The paper
+uses two link widths (Sec. V-B): a 512-bit link carrying 16 float-32 values
+and a 128-bit link carrying 16 fixed-8 values; the no-NoC study (Tab. I) uses
+8-value flits. We represent a flit stream as a 2D array of unsigned words,
+``(num_flits, lanes)``, one row per flit - the bit pattern of row ``i`` is what
+the wires hold on cycle ``i``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .bits import unsigned_view, bit_width
+
+__all__ = ["FlitStream", "pack", "pack_paired", "unpack", "num_flits"]
+
+
+class FlitStream(NamedTuple):
+    """A stream of flits.
+
+    words: ``(num_flits, lanes)`` unsigned array - the raw link payload.
+    lanes: number of values per flit.
+    value_bits: bit width of one value (32 for float-32, 8 for fixed-8).
+    """
+
+    words: jax.Array
+    lanes: int
+    value_bits: int
+
+    @property
+    def flit_bits(self) -> int:
+        return self.lanes * self.value_bits
+
+
+def num_flits(n_values: int, lanes: int) -> int:
+    return -(-n_values // lanes)
+
+
+def pack(values: jax.Array, lanes: int) -> FlitStream:
+    """Pack a flat value stream into ``lanes``-wide flits, zero-padded.
+
+    Zero padding matches the paper (Sec. V-A: "Zeros are padded when the
+    weight's kernel size doesn't exactly match the flit size").
+    """
+    u = unsigned_view(values.reshape(-1))
+    n = u.shape[0]
+    nf = num_flits(n, lanes)
+    pad = nf * lanes - n
+    u = jnp.pad(u, (0, pad))
+    return FlitStream(u.reshape(nf, lanes), lanes, bit_width(u.dtype))
+
+
+def pack_paired(inputs: jax.Array, weights: jax.Array, lanes: int) -> FlitStream:
+    """Pack (input, weight) pairs: inputs in the left half-flit, weights right.
+
+    This is the paper's Fig. 2 layout: each flit carries ``lanes//2`` inputs
+    followed by ``lanes//2`` weights, so the weight half of consecutive flits
+    toggles against itself and the input half against itself.
+    """
+    if lanes % 2:
+        raise ValueError("paired packing needs an even lane count")
+    half = lanes // 2
+    ui = unsigned_view(inputs.reshape(-1))
+    uw = unsigned_view(weights.reshape(-1))
+    if ui.shape != uw.shape:
+        raise ValueError("inputs and weights must have the same element count")
+    if ui.dtype != uw.dtype:
+        raise ValueError("inputs and weights must share a dtype")
+    n = ui.shape[0]
+    nf = num_flits(n, half)
+    pad = nf * half - n
+    ui = jnp.pad(ui, (0, pad)).reshape(nf, half)
+    uw = jnp.pad(uw, (0, pad)).reshape(nf, half)
+    words = jnp.concatenate([ui, uw], axis=1)
+    return FlitStream(words, lanes, bit_width(words.dtype))
+
+
+def unpack(stream: FlitStream, n_values: int, dtype) -> jax.Array:
+    """Invert :func:`pack` - recover the first ``n_values`` values."""
+    flat = stream.words.reshape(-1)[:n_values]
+    target = jnp.dtype(dtype)
+    if flat.dtype == target:
+        return flat
+    return jax.lax.bitcast_convert_type(flat, target)

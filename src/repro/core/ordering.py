@@ -1,0 +1,211 @@
+"""The paper's contribution: '1'-bit-count-based data transmission ordering.
+
+Three orderings are provided:
+
+* :func:`descending_order` - sort a value stream by popcount, descending.
+  Packed row-major into flits this realizes the paper's Fig. 9 layout; the
+  ``fill='interleave'`` variant deals the sorted stream round-robin across
+  flits, which realizes the exact ``x1 >= y1 >= x2 >= y2 ...`` interleave the
+  Sec. III-B proof shows is globally optimal for a flit pair.
+* :func:`affiliated_order` (O1) - weights sorted by their own popcount,
+  inputs carried along so (input, weight) pairs stay matched. Zero recovery
+  cost: convolution / linear contractions are order-invariant (Fig. 5).
+* :func:`separated_order` (O2) - weights and inputs each sorted by their own
+  popcount. Larger BT win, at the cost of a minimal-bit-width permutation
+  index for recovery.
+
+All orderings accept a ``window`` size: the ordering unit at a memory
+controller only holds a packet's worth of data, so sorting happens inside
+consecutive windows of the stream (window = the packet payload). ``window =
+None`` sorts the full stream, which matches the no-NoC study of Sec. V-A.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .bits import popcount
+
+__all__ = [
+    "Ordered",
+    "PairedOrdered",
+    "descending_perm",
+    "descending_order",
+    "affiliated_order",
+    "separated_order",
+    "inverse_permutation",
+    "apply_permutation",
+    "index_overhead_bits",
+]
+
+
+class Ordered(NamedTuple):
+    values: jax.Array     # reordered stream, same multiset as the input
+    perm: jax.Array       # values = input[perm]
+
+
+class PairedOrdered(NamedTuple):
+    inputs: jax.Array
+    weights: jax.Array
+    input_perm: jax.Array
+    weight_perm: jax.Array
+
+
+def _windowed(n: int, window: Optional[int]) -> tuple[int, int]:
+    """Resolve (num_windows, window) for a length-n stream."""
+    if window is None or window >= n:
+        return 1, n
+    if n % window:
+        raise ValueError(
+            f"stream length {n} is not a multiple of window {window}; "
+            "pad the stream before ordering (the packetizer does this)")
+    return n // window, window
+
+
+def pad_to_window(values: jax.Array, window: Optional[int]) -> jax.Array:
+    """Zero-pad a flat stream to the next packet (window) boundary.
+
+    This is what the memory-controller packetizer does before the ordering
+    unit sees the data (paper Sec. V-A pads kernels to flit boundaries).
+    """
+    flat = values.reshape(-1)
+    if window is None:
+        return flat
+    pad = (-flat.shape[0]) % window
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat
+
+
+def descending_perm(values: jax.Array, window: Optional[int] = None,
+                    tiebreak: str = "stable") -> jax.Array:
+    """Permutation that sorts ``values`` by '1'-bit count, descending.
+
+    tiebreak='stable' keeps original order among equal counts (the paper's
+    proof only constrains the count order, and this is the cheapest
+    hardware). tiebreak='pattern' additionally orders equal-count values by
+    their bit pattern - the paper does not specify its tie-break, and
+    pattern-clustering reproduces its float-32 reduction band (EXPERIMENTS.md
+    SSTab.I); it costs one wider comparator in the ordering unit.
+
+    Windowed if requested. Returns flat indices into the (zero-padded)
+    stream; the stream is padded to a window multiple first, so the
+    permutation length may exceed the input length.
+    """
+    from .bits import unsigned_view
+
+    flat = pad_to_window(values, window)
+    n = flat.shape[0]
+    nw, w = _windowed(n, window)
+    counts = popcount(flat).reshape(nw, w)
+    if tiebreak == "pattern":
+        u = unsigned_view(flat).reshape(nw, w)
+        # secondary key first: pattern descending (~u ascending), then a
+        # stable primary sort on the count.
+        p1 = jnp.argsort(~u, axis=1)
+        c1 = jnp.take_along_axis(counts, p1, axis=1)
+        p2 = jnp.argsort(-c1, axis=1)
+        perm = jnp.take_along_axis(p1, p2, axis=1)
+    elif tiebreak == "stable":
+        # argsort ascending on the negated count = descending on the count;
+        # jnp.argsort is stable, preserving original order among ties.
+        perm = jnp.argsort(-counts, axis=1)
+    else:
+        raise ValueError(f"unknown tiebreak {tiebreak!r}")
+    offset = (jnp.arange(nw, dtype=perm.dtype) * w)[:, None]
+    return (perm + offset).reshape(-1)
+
+
+def apply_permutation(values: jax.Array, perm: jax.Array) -> jax.Array:
+    return values.reshape(-1)[perm]
+
+
+def inverse_permutation(perm: jax.Array) -> jax.Array:
+    """inv with inv[perm] = arange; used to de-order separated streams."""
+    n = perm.shape[0]
+    inv = jnp.zeros((n,), dtype=perm.dtype)
+    return inv.at[perm].set(jnp.arange(n, dtype=perm.dtype))
+
+
+def descending_order(
+    values: jax.Array,
+    window: Optional[int] = None,
+    fill: str = "rowmajor",
+    lanes: Optional[int] = None,
+    tiebreak: str = "stable",
+) -> Ordered:
+    """Sort a stream by popcount descending (the paper's core transform).
+
+    fill='rowmajor': flit k gets sorted values [k*lanes, (k+1)*lanes) -
+        the paper's Fig. 9 layout (each row descending, stream descending).
+    fill='interleave': the sorted stream is dealt round-robin across the
+        window's flits, realizing x1>=y1>=x2>=y2... between every consecutive
+        flit pair (the Sec. III-B optimal interleave). Requires ``lanes``.
+    """
+    flat = pad_to_window(values, window)
+    perm = descending_perm(flat, window, tiebreak)
+    if fill == "rowmajor":
+        return Ordered(flat[perm], perm)
+    if fill != "interleave":
+        raise ValueError(f"unknown fill {fill!r}")
+    if lanes is None:
+        raise ValueError("fill='interleave' needs the flit lane count")
+    n = flat.shape[0]
+    nw, w = _windowed(n, window)
+    if w % lanes:
+        raise ValueError("window must be a multiple of lanes for interleave")
+    flits_per_window = w // lanes
+    # Deal the sorted window column-major: lane j of flit f receives sorted
+    # element j*flits_per_window + f, so each lane of consecutive flits holds
+    # popcount-adjacent values (x1 >= y1 >= x2 >= y2 ... per lane pair).
+    dealt = perm.reshape(nw, lanes, flits_per_window).transpose(0, 2, 1)
+    dealt = dealt.reshape(-1)
+    return Ordered(flat[dealt], dealt)
+
+
+def affiliated_order(
+    inputs: jax.Array,
+    weights: jax.Array,
+    window: Optional[int] = None,
+    tiebreak: str = "stable",
+) -> PairedOrdered:
+    """O1: order (input, weight) pairs by the *weight's* popcount.
+
+    The pairing survives, so a convolution/linear layer consuming the stream
+    produces bit-identical partial sums with no de-ordering (paper Fig. 5).
+    """
+    if weights.size != inputs.size:
+        raise ValueError("affiliated ordering needs paired streams of equal length")
+    wflat = pad_to_window(weights, window)
+    iflat = pad_to_window(inputs, window)
+    perm = descending_perm(wflat, window, tiebreak)
+    return PairedOrdered(iflat[perm], wflat[perm], perm, perm)
+
+
+def separated_order(
+    inputs: jax.Array,
+    weights: jax.Array,
+    window: Optional[int] = None,
+    tiebreak: str = "stable",
+) -> PairedOrdered:
+    """O2: order inputs and weights independently, each by its own popcount.
+
+    Both flit halves see reduced BT; the consumer needs the permutations (or
+    their composition) to re-pair - see :func:`index_overhead_bits`.
+    """
+    wflat = pad_to_window(weights, window)
+    iflat = pad_to_window(inputs, window)
+    wperm = descending_perm(wflat, window, tiebreak)
+    iperm = descending_perm(iflat, window, tiebreak)
+    return PairedOrdered(iflat[iperm], wflat[wperm], iperm, wperm)
+
+
+def index_overhead_bits(window: int) -> int:
+    """Bits per value of the separated-ordering recovery index.
+
+    A minimal-bit-width index addressing positions inside one ordering window
+    (paper Sec. IV-C1: "just a minimal-bit-width index is required").
+    """
+    return max(1, (window - 1).bit_length())

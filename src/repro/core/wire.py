@@ -1,0 +1,150 @@
+"""WireTransform: the composable link-payload transform API.
+
+A WireTransform is what an ordering unit at a memory controller (paper
+Fig. 6) -- or, in the beyond-paper extension, at a TPU ICI boundary -- applies
+to a value stream before it hits the wires. It captures the three paper
+configurations:
+
+    O0 (baseline)  -> IdentityTransform
+    O1 (affiliated)-> AffiliatedTransform   (keyed on the weight stream)
+    O2 (separated) -> SeparatedTransform
+
+plus the interleaved optimal variant used in the beyond-paper study. All
+transforms are pure functions of the payload (jit-safe) and report their
+recovery overhead so benchmarks can charge it honestly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from . import ordering
+from .flits import FlitStream, pack, pack_paired
+from . import bt as bt_mod
+
+__all__ = [
+    "WireTransform",
+    "IdentityTransform",
+    "DescendingTransform",
+    "AffiliatedTransform",
+    "SeparatedTransform",
+    "TRANSFORMS",
+    "by_name",
+    "measure",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class WireTransform:
+    """Base: pack a paired (inputs, weights) stream into flits untouched."""
+
+    name: str = "O0"
+    window: Optional[int] = None
+    tiebreak: str = "stable"   # "pattern" clusters equal-count values
+
+    def overhead_bits_per_value(self, window: int) -> int:
+        return 0
+
+    def apply(self, inputs: jax.Array, weights: jax.Array, lanes: int) -> FlitStream:
+        return pack_paired(inputs, weights, lanes)
+
+    def apply_single(self, values: jax.Array, lanes: int) -> FlitStream:
+        return pack(values, lanes)
+
+
+class IdentityTransform(WireTransform):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class DescendingTransform(WireTransform):
+    """Single-stream popcount-descending ordering (no pairing semantics).
+
+    ``fill='interleave'`` gives the provably optimal per-lane interleave;
+    ``fill='rowmajor'`` is the paper's Fig. 9 layout.
+    """
+
+    name: str = "desc"
+    fill: str = "rowmajor"
+
+    def apply_single(self, values: jax.Array, lanes: int) -> FlitStream:
+        ordered = ordering.descending_order(
+            values, window=self.window, fill=self.fill,
+            lanes=lanes if self.fill == "interleave" else None,
+            tiebreak=self.tiebreak)
+        return pack(ordered.values, lanes)
+
+    def apply(self, inputs: jax.Array, weights: jax.Array, lanes: int) -> FlitStream:
+        # Without pairing semantics, order each half independently.
+        oi = ordering.descending_order(
+            inputs, window=self.window, fill=self.fill,
+            lanes=(lanes // 2) if self.fill == "interleave" else None,
+            tiebreak=self.tiebreak)
+        ow = ordering.descending_order(
+            weights, window=self.window, fill=self.fill,
+            lanes=(lanes // 2) if self.fill == "interleave" else None,
+            tiebreak=self.tiebreak)
+        return pack_paired(oi.values, ow.values, lanes)
+
+
+@dataclasses.dataclass(frozen=True)
+class AffiliatedTransform(WireTransform):
+    """O1: order pairs by weight popcount; pairing intact, zero recovery cost."""
+
+    name: str = "O1"
+
+    def apply(self, inputs: jax.Array, weights: jax.Array, lanes: int) -> FlitStream:
+        po = ordering.affiliated_order(inputs, weights, window=self.window,
+                                       tiebreak=self.tiebreak)
+        return pack_paired(po.inputs, po.weights, lanes)
+
+    def apply_single(self, values: jax.Array, lanes: int) -> FlitStream:
+        # A lone weight stream under O1 is just descending ordering.
+        ordered = ordering.descending_order(values, window=self.window,
+                                            tiebreak=self.tiebreak)
+        return pack(ordered.values, lanes)
+
+
+@dataclasses.dataclass(frozen=True)
+class SeparatedTransform(WireTransform):
+    """O2: order each stream by its own popcount; index needed to re-pair."""
+
+    name: str = "O2"
+
+    def overhead_bits_per_value(self, window: int) -> int:
+        return ordering.index_overhead_bits(window)
+
+    def apply(self, inputs: jax.Array, weights: jax.Array, lanes: int) -> FlitStream:
+        po = ordering.separated_order(inputs, weights, window=self.window,
+                                      tiebreak=self.tiebreak)
+        return pack_paired(po.inputs, po.weights, lanes)
+
+    def apply_single(self, values: jax.Array, lanes: int) -> FlitStream:
+        ordered = ordering.descending_order(values, window=self.window,
+                                            tiebreak=self.tiebreak)
+        return pack(ordered.values, lanes)
+
+
+TRANSFORMS = {
+    "O0": IdentityTransform,
+    "O1": AffiliatedTransform,
+    "O2": SeparatedTransform,
+    "desc": DescendingTransform,
+}
+
+
+def by_name(name: str, window: Optional[int] = None, **kw) -> WireTransform:
+    return TRANSFORMS[name](name=name, window=window, **kw)
+
+
+def measure(stream: FlitStream) -> dict:
+    """BT metrics of one flit stream (the Fig. 8 recorder)."""
+    return {
+        "total_bt": float(bt_mod.bt_stream(stream)),
+        "bt_per_flit": float(bt_mod.bt_per_flit(stream)),
+        "expected_bt": float(bt_mod.expected_bt_stream(stream)),
+        "num_flits": int(stream.words.shape[0]),
+        "flit_bits": stream.flit_bits,
+    }

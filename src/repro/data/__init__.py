@@ -1,0 +1,3 @@
+from .pipeline import TokenStream, glyph_batch, GLYPHS
+
+__all__ = ["TokenStream", "glyph_batch", "GLYPHS"]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+The ordering unit (paper Fig. 14) = popcount + sort; the BT recorder
+(Fig. 8) = XOR + popcount + accumulate. Each kernel has a pure-jnp oracle
+in ref.py and a shape-adapting public wrapper in ops.py.
+"""
+from .ops import (popcount, bt_boundaries, sort_windows_desc,
+                  order_unit, on_tpu)
+from . import ref
+
+__all__ = ["popcount", "bt_boundaries", "sort_windows_desc",
+           "order_unit", "on_tpu", "ref"]

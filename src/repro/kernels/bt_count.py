@@ -1,0 +1,58 @@
+"""Pallas TPU kernel: bit-transition counter between consecutive flits.
+
+The hardware analogue is the paper's BT recorder (Fig. 8): hold the previous
+flit, XOR it with the current one, popcount the toggles, accumulate. Here the
+stream is materialized as a (F, L) word array, and the kernel receives two
+row-aligned views - rows [0, F-1) and rows [1, F) - so that tile i of the
+two inputs covers the flit pairs of tile i without overlapping block reads.
+
+Per boundary the kernel reduces over the L lanes, emitting one int32 per
+flit boundary. Arithmetic intensity is ~1 op/byte so the kernel is memory
+bound; the (8, L) tiles stream through VMEM at full HBM bandwidth.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["bt_boundaries_pallas", "ROW_TILE"]
+
+ROW_TILE = 8
+
+
+def _bt_kernel(prev_ref, cur_ref, o_ref):
+    x = prev_ref[...].astype(jnp.uint32) ^ cur_ref[...].astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    counts = ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+    o_ref[...] = jnp.sum(counts, axis=1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bt_boundaries_pallas(prev_rows: jax.Array, cur_rows: jax.Array,
+                         *, interpret: bool = True) -> jax.Array:
+    """Transitions per flit boundary.
+
+    prev_rows = words[:-1], cur_rows = words[1:], both (P, L) uint32 with L a
+    multiple of 128 and P a multiple of ROW_TILE (ops.py pads). Returns
+    int32 (P, 1).
+    """
+    p, l = prev_rows.shape
+    if l % 128 or p % ROW_TILE:
+        raise ValueError(f"bt kernel needs (8k, 128k) shape, got {prev_rows.shape}")
+    grid = (p // ROW_TILE,)
+    return pl.pallas_call(
+        _bt_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((ROW_TILE, l), lambda i: (i, 0)),
+            pl.BlockSpec((ROW_TILE, l), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROW_TILE, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((p, 1), jnp.int32),
+        interpret=interpret,
+    )(prev_rows, cur_rows)

@@ -1,0 +1,110 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These adapt arbitrary shapes/dtypes to the kernels' (8k, 128k) tiling
+contracts (padding + unsigned views), and select interpret mode
+automatically: compiled Mosaic on TPU, interpret=True elsewhere (this
+container is CPU-only, so tests exercise the kernel bodies in interpret
+mode against the ref.py oracles).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bits import unsigned_view, bit_width
+from . import popcount as _pc
+from . import bt_count as _bt
+from . import bitonic_sort as _bs
+from . import order_unit as _ou
+
+__all__ = ["popcount", "bt_boundaries", "sort_windows_desc", "order_unit",
+           "on_tpu"]
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return not on_tpu()
+
+
+def _pad2d(x: jax.Array, row_mult: int, col_mult: int):
+    m, n = x.shape
+    pm = (-m) % row_mult
+    pn = (-n) % col_mult
+    if pm or pn:
+        x = jnp.pad(x, ((0, pm), (0, pn)))
+    return x, m, n
+
+
+def popcount(values: jax.Array) -> jax.Array:
+    """'1'-bit count per element via the Pallas kernel. Any shape/dtype."""
+    u = unsigned_view(values)
+    nbits = bit_width(u.dtype)
+    flat = u.reshape(-1).astype(jnp.uint32)
+    if nbits < 32:
+        # Sub-32-bit values are zero-extended; SWAR popcount is unaffected.
+        pass
+    n = flat.shape[0]
+    cols = 128
+    rows = -(-n // cols)
+    pad = rows * cols - n
+    arr = jnp.pad(flat, (0, pad)).reshape(rows, cols)
+    arr, m0, _ = _pad2d(arr, _pc.ROW_TILE, 128)
+    out = _pc.popcount_words_pallas(arr, interpret=_interpret())
+    return out[:m0].reshape(-1)[:n].reshape(values.shape)
+
+
+def bt_boundaries(words: jax.Array) -> jax.Array:
+    """Bit transitions at each boundary of a (F, L) flit stream -> (F-1,)."""
+    u = unsigned_view(words).astype(jnp.uint32)
+    prev_rows, cur_rows = u[:-1], u[1:]
+    p = prev_rows.shape[0]
+    if p == 0:
+        return jnp.zeros((0,), jnp.int32)
+    prev_p, p0, _ = _pad2d(prev_rows, _bt.ROW_TILE, 128)
+    cur_p, _, _ = _pad2d(cur_rows, _bt.ROW_TILE, 128)
+    out = _bt.bt_boundaries_pallas(prev_p, cur_p, interpret=_interpret())
+    return out[:p0, 0]
+
+
+def sort_windows_desc(keys: jax.Array, *payloads: jax.Array):
+    """Descending key sort within each row of (R, W) arrays via bitonic net.
+
+    W must be a power of two >= 128 (the framework's packet windows are).
+    Payloads are carried through the same swaps (weights / paired inputs).
+    """
+    r, w = keys.shape
+    kp, r0, _ = _pad2d(keys.astype(jnp.int32), _bs.ROW_TILE, w)
+    # Pad keys with -1 so padding rows sort harmlessly (rows are independent,
+    # so padded rows never mix with real data; -1 keeps them inert).
+    pads = []
+    for p in payloads:
+        u = unsigned_view(p)
+        pp, _, _ = _pad2d(u, _bs.ROW_TILE, w)
+        pads.append(pp)
+    outs = _bs.sort_windows_pallas(kp, *pads, interpret=_interpret())
+    sk = outs[0][:r0]
+    sp = []
+    for orig, s in zip(payloads, outs[1:]):
+        s = s[:r0]
+        if s.dtype != orig.dtype:
+            s = jax.lax.bitcast_convert_type(s, orig.dtype)
+        sp.append(s)
+    return (sk, *sp)
+
+
+def order_unit(values: jax.Array):
+    """Fused ordering unit: (R, W) values -> (descending-popcount-ordered
+    values, window-local permutation). One HBM round-trip (Fig. 14 fused)."""
+    u = unsigned_view(values)
+    r, w = u.shape
+    up, r0, _ = _pad2d(u.astype(jnp.uint32), _ou.ROW_TILE, w)
+    out, perm = _ou.order_unit_pallas(up, interpret=_interpret())
+    out = out[:r0]
+    if out.dtype != values.dtype:
+        out = jax.lax.bitcast_convert_type(out, values.dtype)
+    return out, perm[:r0]

@@ -1,0 +1,51 @@
+"""Pallas TPU kernel: SWAR popcount over a 2D word array.
+
+This is the TPU-native version of the paper's ordering-unit front half
+(Fig. 14: "Pop-count" stage). The VPU has no popcount instruction, so the
+kernel runs the SWAR reduction on 32-bit lanes - 4 shifts, 4 ands, 2 adds,
+1 multiply per word, all elementwise, so the kernel is trivially memory
+bound and tiles cleanly into VMEM.
+
+Layout: input is (M, N) uint32 with N a multiple of 128 (lane width); the
+grid walks row tiles of 8 sublanes, the natural (8, 128) TPU vreg tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["popcount_words_pallas", "ROW_TILE"]
+
+ROW_TILE = 8  # sublanes per vreg
+
+
+def _popcount_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    o_ref[...] = ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def popcount_words_pallas(words: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Popcount of each element of a (M, N) uint32 array -> int32 (M, N).
+
+    N must be a multiple of 128 and M a multiple of ROW_TILE; the ops.py
+    wrapper pads arbitrary shapes to this contract.
+    """
+    m, n = words.shape
+    if n % 128 or m % ROW_TILE:
+        raise ValueError(f"popcount kernel needs (8k, 128k) shape, got {words.shape}")
+    grid = (m // ROW_TILE,)
+    return pl.pallas_call(
+        _popcount_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((ROW_TILE, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((ROW_TILE, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=interpret,
+    )(words)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function here is the semantic ground truth the kernels are tested
+against (tests/test_kernels.py sweeps shapes and dtypes and asserts
+exact equality - these are integer/bit ops, so no tolerance is needed).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bits as _bits
+
+__all__ = ["popcount_ref", "bt_boundaries_ref", "sort_windows_desc_ref",
+           "order_unit_ref"]
+
+
+def popcount_ref(x: jax.Array) -> jax.Array:
+    """'1'-bit count per element (int32), any dtype with an unsigned view."""
+    return _bits.popcount(x)
+
+
+def bt_boundaries_ref(words: jax.Array) -> jax.Array:
+    """Bit transitions at each flit boundary of a (F, L) word stream.
+
+    Returns int32 (F-1,): entry i is the number of wires that toggle when
+    flit i+1 follows flit i (the paper's Fig. 8 recorder).
+    """
+    tog = _bits.transitions(words[:-1], words[1:])
+    return jnp.sum(tog, axis=-1).astype(jnp.int32)
+
+
+def sort_windows_desc_ref(keys: jax.Array, *payloads: jax.Array):
+    """Descending stable key sort within each row of (R, W) arrays.
+
+    Returns (sorted_keys, *sorted_payloads). This is the ordering unit's
+    semantics: each window (packet) independently sorted by '1'-bit count,
+    descending, stable among ties.
+    """
+    order = jnp.argsort(-keys, axis=-1)  # stable
+    sk = jnp.take_along_axis(keys, order, axis=-1)
+    sp = tuple(jnp.take_along_axis(p, order, axis=-1) for p in payloads)
+    return (sk, *sp)
+
+
+def order_unit_ref(values: jax.Array):
+    """Oracle for the fused ordering unit: descending stable popcount sort
+    per row, returning (ordered values, permutation)."""
+    keys = _bits.popcount(values)
+    order = jnp.argsort(-keys, axis=-1)
+    return jnp.take_along_axis(values, order, axis=-1), order

@@ -1,0 +1,397 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) on the production
+meshes, record memory/cost/collective analyses for the roofline study.
+
+MUST be imported before any other jax-touching module in the process (the
+device count locks on first jax init), hence the XLA_FLAGS lines above
+everything else.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch minicpm-2b \
+        --shape train_4k [--multipod] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, SHAPES, get, cache_shardings
+from repro.dist.sharding import spec_shardings
+from repro.models.spec import abstract_params, param_bytes, param_count
+from repro.optim import AdamW, wsd
+from repro.launch.mesh import make_production_mesh
+
+# ---------------------------------------------------------------------------
+# collective-traffic extraction from the partitioned HLO
+# ---------------------------------------------------------------------------
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_TYPE_RE = re.compile(r"\b(f64|f32|f16|bf16|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "s32": 4,
+          "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _BYTES[dtype]
+
+
+_WHILE_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"[su]32\[\] constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str):
+    """-> (comps: name -> [op lines], order preserved)."""
+    comps = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        if line and not line[0].isspace() and "{" in line and "(" in line:
+            name = line.split("(")[0].replace("ENTRY", "").strip().lstrip("%")
+            cur = name
+            comps[cur] = []
+        elif line.startswith("}"):
+            cur = None
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def _loop_multipliers(comps) -> dict:
+    """Trip-count multiplier per computation, resolving nested while loops.
+
+    XLA prints a scan's while body once; costs and collective traffic inside
+    it occur trip_count times per step. The trip count is the bound constant
+    in the loop condition computation.
+    """
+    edges = []   # (parent_comp, body_comp, trip)
+    for parent, lines in comps.items():
+        for line in lines:
+            if " while(" not in line:
+                continue
+            mb = _WHILE_RE.search(line)
+            mc = _COND_RE.search(line)
+            trip = 1
+            if mc and mc.group(1) in comps:
+                consts = [int(x) for x in
+                          _CONST_RE.findall("\n".join(comps[mc.group(1)]))]
+                if consts:
+                    trip = max(consts)
+            if mb:
+                edges.append((parent, mb.group(1), max(trip, 1)))
+    mult = {name: 1 for name in comps}
+    # propagate: a body's multiplier = parent's multiplier * trip
+    for _ in range(8):  # few nesting levels; fixed-point quickly
+        changed = False
+        for parent, body, trip in edges:
+            new = mult.get(parent, 1) * trip
+            if mult.get(body, 1) != new:
+                mult[body] = new
+                changed = True
+        if not changed:
+            break
+    return mult
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Per-device collective traffic from the partitioned module.
+
+    For each collective op the largest typed shape on the line is the
+    traffic proxy (covers reduce-scatter's big operand and all-gather's big
+    result); ops inside while bodies are multiplied by the loop trip count
+    (XLA prints scan bodies once - see EXPERIMENTS.md SSMethodology).
+    """
+    comps = _split_computations(hlo_text)
+    mult = _loop_multipliers(comps)
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for name, lines in comps.items():
+        m = mult.get(name, 1)
+        for line in lines:
+            s = line.strip()
+            for kind in _COLLECTIVES:
+                # match the op use, not tuple types or metadata mentions
+                if f" {kind}(" in s or f"{kind}-start(" in s:
+                    sizes = [_shape_bytes(t, d) for t, d in _TYPE_RE.findall(s)]
+                    if sizes:
+                        out[kind] += max(sizes) * m
+                        counts[kind] += m
+                    break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+# ---------------------------------------------------------------------------
+# cell construction: the exact jitted function per (arch, shape)
+# ---------------------------------------------------------------------------
+
+def _train_setup(arch, mesh):
+    model = arch.build()
+    specs = model.specs()
+    params_abs = abstract_params(specs)
+    params_shard = spec_shardings(specs, arch.rules, mesh)
+    opt = AdamW(wsd(3e-4, 10000, warmup=500), state_dtype=arch.optimizer_state)
+    opt_abs = jax.eval_shape(opt.init, params_abs)
+
+    def opt_shard_like(_abs, pshard_tree):
+        # step -> replicated; m/v trees mirror params. Q8 moments inherit
+        # the parameter's PartitionSpec verbatim on the leading axes (their
+        # block layout preserves them by construction - see optim.adamw.Q8);
+        # the block-count axis reuses the param's last-dim axis only if it
+        # still divides.
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.optim.adamw import Q8
+
+        def _axsize(ax):
+            if ax is None:
+                return 1
+            if isinstance(ax, tuple):
+                n = 1
+                for a in ax:
+                    n *= mesh.shape[a]
+                return n
+            return mesh.shape[ax]
+
+        def for_moment(subtree_abs, ps):
+            def one(leaf_abs, psh):
+                if isinstance(leaf_abs, Q8):
+                    parts = list(psh.spec) if psh.spec else []
+                    rank = leaf_abs.q.ndim
+                    parts = (parts + [None] * rank)[:rank - 1]
+                    last_ax = parts[-1] if parts else None
+                    nb = leaf_abs.q.shape[-2]
+                    nb_ax = last_ax if (last_ax and nb % _axsize(last_ax) == 0) \
+                        else None
+                    qspec = P(*(parts[:-1] + [nb_ax, None])) if parts else P(nb_ax, None)
+                    sspec = P(*(parts[:-1] + [nb_ax])) if parts else P(nb_ax)
+                    return Q8(NamedSharding(mesh, qspec),
+                              NamedSharding(mesh, sspec))
+                return psh
+            return jax.tree.map(one, subtree_abs, ps,
+                                is_leaf=lambda x: isinstance(x, Q8))
+
+        return type(_abs)(NamedSharding(mesh, P()),
+                          for_moment(_abs.m, pshard_tree),
+                          for_moment(_abs.v, pshard_tree))
+
+    opt_shard = opt_shard_like(opt_abs, params_shard)
+    return model, params_abs, params_shard, opt, opt_abs, opt_shard
+
+
+def build_cell(arch_name, shape_name: str, mesh):
+    """Returns (fn, example_args, in_shardings) ready for jit().lower().
+
+    ``arch_name`` may be an --arch id or an ArchDef (e.g. one carrying
+    config overrides for a perf-iteration run)."""
+    arch = get(arch_name) if isinstance(arch_name, str) else arch_name
+    cell = SHAPES[shape_name]
+    ins = arch.input_specs(shape_name)
+    in_shard = arch.input_shardings(ins, mesh)
+
+    if cell.mode == "train":
+        model, p_abs, p_shard, opt, o_abs, o_shard = _train_setup(arch, mesh)
+
+        if arch.kind == "encdec":
+            def loss_fn(params, batch):
+                return model.loss(params, batch["frames"], batch["tokens"],
+                                  batch["targets"], batch["mask"])
+        elif getattr(arch.config, "vlm_prefix", 0):
+            def loss_fn(params, batch):
+                return model.loss(params, batch["tokens"], batch["targets"],
+                                  batch["mask"], batch["patch_embeds"])
+        else:
+            def loss_fn(params, batch):
+                return model.loss(params, batch["tokens"], batch["targets"],
+                                  batch["mask"])
+
+        def train_step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            new_params, new_opt = opt.update(grads, opt_state, params)
+            return new_params, new_opt, loss
+
+        args = (p_abs, o_abs, ins)
+        shardings = (p_shard, o_shard, in_shard)
+        return train_step, args, shardings
+
+    model = arch.build()
+    specs = model.specs()
+    p_abs = abstract_params(specs)
+    p_shard = arch.param_shardings(mesh)
+
+    if cell.mode == "prefill":
+        if arch.kind == "encdec":
+            def prefill(params, batch):
+                memory = model.encode(params, batch["frames"])
+                logits = model.decode_train(params, batch["tokens"], memory)
+                return logits[:, -1], memory
+        elif getattr(arch.config, "vlm_prefix", 0):
+            def prefill(params, batch):
+                return model.prefill(params, batch["tokens"], cell.seq_len,
+                                     batch["patch_embeds"])
+        else:
+            def prefill(params, batch):
+                return model.prefill(params, batch["tokens"], cell.seq_len)
+        return prefill, (p_abs, ins), (p_shard, in_shard)
+
+    # decode: cache is an input; build its abstract pytree via eval_shape
+    b = cell.global_batch
+    ctx = cell.seq_len
+    if arch.kind == "encdec":
+        mem_abs = jax.ShapeDtypeStruct((b, ctx, arch.config.d_model),
+                                       jnp.bfloat16)
+        dec_ctx = max(ctx // 4, 8)
+        cache_abs = jax.eval_shape(
+            lambda m, p: model.init_cache(b, dec_ctx, m, p), mem_abs, p_abs)
+    else:
+        cache_abs = jax.eval_shape(lambda: model.init_cache(b, arch.config.cache_len(ctx)))
+    cache_shard = cache_shardings(cache_abs, mesh)
+
+    def decode(params, token, cache, pos):
+        return model.decode_step(params, token, cache, pos)
+
+    args = (p_abs, ins["token"], cache_abs, ins["pos"])
+    shardings = (p_shard, in_shard["token"], cache_shard, in_shard["pos"])
+    return decode, args, shardings
+
+
+# ---------------------------------------------------------------------------
+# the dry run itself
+# ---------------------------------------------------------------------------
+
+def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str, kv_chunk: int = None, moe_groups: int = None,
+             moe_shard: tuple = None, rules_override: dict = None,
+             tag: str = "") -> dict:
+    arch = get(arch_name)
+    ok, reason = arch.supports(shape_name)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {"arch": arch_name, "shape": shape_name, "mesh": mesh_name,
+           "status": "skip", "reason": reason}
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(
+        out_dir, f"{arch_name}__{shape_name}__{mesh_name}{tag}.json")
+    if not ok:
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+
+    import dataclasses as _dc
+    cfg_over = {}
+    if kv_chunk is not None:
+        cfg_over["kv_chunk"] = kv_chunk
+    if moe_groups is not None and hasattr(arch.config, "moe_groups"):
+        cfg_over["moe_groups"] = moe_groups
+    if moe_shard is not None and hasattr(arch.config, "moe_shard"):
+        cfg_over["moe_shard"] = tuple(moe_shard)
+    if os.environ.get("REPRO_TP_BF16"):
+        cfg_over["tp_bf16_boundary"] = True
+    if cfg_over:
+        arch = _dc.replace(arch, config=_dc.replace(arch.config, **cfg_over))
+    if rules_override:
+        arch = _dc.replace(arch, rules={**arch.rules, **rules_override})
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    try:
+        fn, args, shardings = build_cell(arch, shape_name, mesh)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=shardings).lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        coll = collective_bytes(hlo)
+        model = arch.build()
+        rec.update({
+            "status": "ok",
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "devices": int(mesh.devices.size),
+            "params": param_count(model.specs()),
+            "param_bytes_global": param_bytes(model.specs()),
+            "flops_per_device": cost.get("flops", -1.0) if cost else -1.0,
+            "bytes_per_device": cost.get("bytes accessed", -1.0) if cost else -1.0,
+            "collective_bytes_per_device": coll,
+            "memory_analysis": _mem_dict(mem),
+            "hlo_bytes": len(hlo),
+        })
+    except Exception as e:  # noqa: BLE001 - a failed cell is a recorded bug
+        rec.update({"status": "fail", "error": f"{type(e).__name__}: {e}",
+                    "trace": traceback.format_exc()[-4000:]})
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    if mem is None:
+        return {}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--kv-chunk", type=int, default=None)
+    ap.add_argument("--moe-groups", type=int, default=None)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    archs = list(ARCHS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if (args.all or args.both_meshes) else [args.multipod]
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    n_fail = 0
+    for a, s, mp in cells:
+        rec = run_cell(a, s, multi_pod=mp, out_dir=args.out,
+                       kv_chunk=args.kv_chunk, moe_groups=args.moe_groups,
+                       tag=args.tag)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            extra = (f" lower {rec['lower_s']}s compile {rec['compile_s']}s "
+                     f"flops/dev {rec['flops_per_device']:.3g} "
+                     f"coll/dev {rec['collective_bytes_per_device']['total']:.3g}B")
+        elif status == "fail":
+            n_fail += 1
+            extra = " " + rec["error"][:160]
+        print(f"[{status:4s}] {a} x {s} x "
+              f"{'2x16x16' if mp else '16x16'}{extra}", flush=True)
+    if n_fail:
+        raise SystemExit(f"{n_fail} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Perf-iteration driver: re-lowers the three hillclimb cells under named
+configuration variants and records tagged dry-run artifacts that
+benchmarks.roofline and EXPERIMENTS.md SSPerf consume.
+
+Each variant encodes one hypothesis from the iteration log; run:
+    PYTHONPATH=src python -m repro.launch.hillclimb [variant ...]
+"""
+import sys
+
+from repro.launch.dryrun import run_cell
+
+# (arch, shape, tag, overrides) - tags match EXPERIMENTS.md SSPerf iterations
+VARIANTS = {
+    # -- phi3-medium-14b x prefill_32k (worst roofline fraction) ----------
+    # H1: head_dim-TP makes qk^T contract over a sharded axis -> the fp32
+    #     (B,KV,S,S,G) score tensor is all-reduced every layer. Replicating
+    #     attention (TP only in mlp/vocab) removes it.
+    "phi3_it1": ("phi3-medium-14b", "prefill_32k", "_it1_nohd",
+                 dict(rules_override={"head_dim": None})),
+    # H2: blockwise (flash-style) attention removes the S^2 materialization
+    #     -> memory term and the 710 GB temp footprint collapse.
+    "phi3_it2": ("phi3-medium-14b", "prefill_32k", "_it2_chunk",
+                 dict(rules_override={"head_dim": None}, kv_chunk=2048)),
+    # H3: batch over both axes (pure DP for attention-heavy prefill);
+    #     kv_chunk retained.
+    "phi3_it3": ("phi3-medium-14b", "prefill_32k", "_it3_dp256",
+                 dict(rules_override={"head_dim": None,
+                                      "batch": ("data", "model"),
+                                      "mlp": None, "heads": None,
+                                      "kv_heads": None},
+                      kv_chunk=2048)),
+
+    # -- kimi-k2-1t-a32b x train_4k (most collective-bound) ---------------
+    # H1: the flat (-1, 256) int8-moment layout forces a full resharding
+    #     all-gather (6 x 1.375 TB in the baseline HLO). The last-axis block
+    #     layout (optim.adamw.Q8) inherits the param sharding: those gathers
+    #     should vanish. (Layout fix is now the default; this isolates it.)
+    "kimi_it1": ("kimi-k2-1t-a32b", "train_4k", "_it1_q8layout", dict()),
+    # H2: global top-k dispatch makes capacity buffers global -> expert
+    #     compute replicates and xt all-gathers. Shard-local dispatch
+    #     groups (= data axis) keep routing inside each shard.
+    "kimi_it2": ("kimi-k2-1t-a32b", "train_4k", "_it2_groups",
+                 dict(moe_groups=16)),
+    # H3: EP over BOTH mesh axes (experts 384 = 256 x 1.5 -> only model) -
+    #     instead push the FSDP axis onto the expert mlp dim to shrink the
+    #     per-layer weight gathers.
+    "kimi_it3": ("kimi-k2-1t-a32b", "train_4k", "_it3_mlpshard",
+                 dict(moe_groups=16,
+                      rules_override={"embed": None, "mlp": "data"})),
+
+    # -- minicpm-2b x train_4k (representative dense DP cell) -------------
+    # H1: the two per-layer TP all-reduces move fp32 activations; a 2.7B
+    #     model on 256 chips doesn't need TP at all - batch over both axes
+    #     (DP-256) leaves only FSDP weight gathers + grad reductions.
+    "minicpm_it1": ("minicpm-2b", "train_4k", "_it1_dp256",
+                    dict(rules_override={"batch": ("data", "model"),
+                                         "mlp": None, "heads": None,
+                                         "kv_heads": None,
+                                         "vocab": "model", "embed": "data"})),
+    # H2: keep TP but sequence-shard the residual stream so the partial-sum
+    #     reduction happens on the (B, S/16, D) slice (Megatron-SP layout).
+    "minicpm_it2": ("minicpm-2b", "train_4k", "_it2_seqshard",
+                    dict(rules_override={"seq": "model"})),
+
+    # H4 (kimi): propagation alone left the dispatch replicated (it2
+    #     refuted); pin the capacity buffers with explicit sharding
+    #     constraints on (group->data, expert->model).
+    "kimi_it4": ("kimi-k2-1t-a32b", "train_4k", "_it4_moeshard",
+                 dict(moe_groups=16, moe_shard=("data", "model"))),
+
+    # H5 (kimi): it4 refuted - constraining the expert axis fights the
+    #     einsum partitioner. Constrain only the group axis (mixtral's
+    #     winning recipe).
+    "kimi_it5": ("kimi-k2-1t-a32b", "train_4k", "_it5_groupshard",
+                 dict(moe_groups=16, moe_shard=("data", None))),
+
+    # H6 (kimi): constrain only the token-side tensors (xt, combine);
+    #     leave the capacity buffers to the einsum partitioner.
+    "kimi_it6": ("kimi-k2-1t-a32b", "train_4k", "_it6_tokonly",
+                 dict(moe_groups=16, moe_shard=("data", "tokens-only"))),
+
+    # -- bonus: mixtral inherits the kimi dispatch fixes -------------------
+    "mixtral_groups": ("mixtral-8x7b", "train_4k", "_it1_groups",
+                       dict(moe_groups=16)),
+    "mixtral_it2": ("mixtral-8x7b", "train_4k", "_it2_moeshard",
+                    dict(moe_groups=16, moe_shard=("data", None))),
+
+    # H4 (phi3): shard attention over the sequence instead of heads/hd -
+    #     flops split over both axes, k/v all-gathered per layer (64x fewer
+    #     bytes than the score all-reduce), blockwise scores.
+    "phi3_it4": ("phi3-medium-14b", "prefill_32k", "_it4_seqshard",
+                 dict(rules_override={"head_dim": None, "seq": "model"},
+                      kv_chunk=2048)),
+}
+
+
+def main():
+    picks = sys.argv[1:] or list(VARIANTS)
+    for name in picks:
+        arch, shape, tag, ov = VARIANTS[name]
+        rec = run_cell(arch, shape, multi_pod=False,
+                       out_dir="experiments/dryrun", tag=tag, **ov)
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            extra = (f" compile {rec['compile_s']}s"
+                     f" coll/dev {rec['collective_bytes_per_device']['total']:.3g}B"
+                     f" temps {rec['memory_analysis'].get('temp_size_in_bytes', 0)/1e9:.0f}GB")
+        elif status == "fail":
+            extra = " " + rec["error"][:200]
+        print(f"[{status}] {name}: {arch} x {shape} {tag}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

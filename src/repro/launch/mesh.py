@@ -1,0 +1,30 @@
+"""Production mesh construction.
+
+Deliberately a function, not a module-level constant: importing this module
+must never touch jax device state (the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before any jax import,
+and smoke tests must keep seeing 1 device).
+
+Topology: TPU v5e pods of 256 chips arranged (data=16, model=16); the
+multi-pod mesh adds a leading 'pod' axis over DCN, giving
+(pod=2, data=16, model=16) = 512 chips. Batch shards over ('pod', 'data'),
+tensor dims over 'model' (intra-pod ICI), so the only cross-pod collective
+is the gradient all-reduce - the standard multi-pod layout.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever this host actually has - used by examples/smoke tests."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

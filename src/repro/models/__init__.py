@@ -1,0 +1,9 @@
+from .spec import (ParamSpec, init_params, abstract_params, axes_tree,
+                   param_count, param_bytes)
+from .transformer import LM, LMConfig
+from .encdec import EncDec, EncDecConfig
+from .convnets import LeNet, DarkNetLike
+
+__all__ = ["ParamSpec", "init_params", "abstract_params", "axes_tree",
+           "param_count", "param_bytes", "LM", "LMConfig",
+           "EncDec", "EncDecConfig", "LeNet", "DarkNetLike"]

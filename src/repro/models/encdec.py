@@ -1,0 +1,237 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio conv frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings (B, S_enc, D) directly (what the two
+conv layers + sinusoidal embedding of real Whisper would produce). The
+transformer backbone is complete: bidirectional encoder, causal decoder
+with cross-attention, cached decode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from .spec import ParamSpec
+
+_F32 = jnp.float32
+
+__all__ = ["EncDecConfig", "EncDec"]
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    name: str
+    n_layers: int            # per stack (24 enc + 24 dec for whisper-medium)
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    remat: bool = True
+    norm_eps: float = 1e-6
+
+    @property
+    def hd(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        return -(-self.vocab // 256) * 256
+
+    def attn_cfg(self, causal: bool) -> L.AttnConfig:
+        # Whisper uses learned absolute positions, not RoPE.
+        return L.AttnConfig(self.d_model, self.n_heads, self.n_kv, self.hd,
+                            use_rope=False, causal=causal)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        return False
+
+    def cache_len(self, context: int) -> int:
+        return context
+
+
+def _enc_block_specs(cfg: EncDecConfig) -> dict:
+    return {"ln1": L.rms_norm_spec(cfg.d_model),
+            "attn": L.attention_specs(cfg.attn_cfg(False)),
+            "ln2": L.rms_norm_spec(cfg.d_model),
+            "mlp": L.mlp_specs(cfg.d_model, cfg.d_ff, gated=False)}
+
+
+def _dec_block_specs(cfg: EncDecConfig) -> dict:
+    return {"ln1": L.rms_norm_spec(cfg.d_model),
+            "self_attn": L.attention_specs(cfg.attn_cfg(True)),
+            "ln_x": L.rms_norm_spec(cfg.d_model),
+            "cross_attn": L.attention_specs(cfg.attn_cfg(False)),
+            "ln2": L.rms_norm_spec(cfg.d_model),
+            "mlp": L.mlp_specs(cfg.d_model, cfg.d_ff, gated=False)}
+
+
+class EncDec:
+    def __init__(self, cfg: EncDecConfig):
+        self.cfg = cfg
+
+    def specs(self) -> dict:
+        cfg = self.cfg
+
+        def stack(s: ParamSpec) -> ParamSpec:
+            return ParamSpec((cfg.n_layers,) + s.shape, ("layers",) + s.axes,
+                             s.dtype, s.init, s.scale)
+
+        leaf = lambda x: isinstance(x, ParamSpec)
+        return {
+            "embed": ParamSpec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                               init="embed", scale=0.02),
+            "pos_dec": ParamSpec((8192, cfg.d_model), (None, "embed"),
+                                 init="embed", scale=0.01),
+            "enc": jax.tree.map(stack, _enc_block_specs(cfg), is_leaf=leaf),
+            "dec": jax.tree.map(stack, _dec_block_specs(cfg), is_leaf=leaf),
+            "ln_enc": L.rms_norm_spec(cfg.d_model),
+            "ln_f": L.rms_norm_spec(cfg.d_model),
+        }
+
+    # -- encoder --------------------------------------------------------
+    def encode(self, params, frames: jax.Array) -> jax.Array:
+        """frames (B, S_enc, D) stubbed frame embeddings -> memory."""
+        cfg = self.cfg
+        acfg = cfg.attn_cfg(False)
+
+        def body(x, p):
+            h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+            x = x + L.attention(p["attn"], h, acfg)
+            h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+            x = x + L.mlp(p["mlp"], h, gated=False)
+            return x, ()
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, frames.astype(jnp.bfloat16), params["enc"])
+        return L.rms_norm(x, params["ln_enc"], cfg.norm_eps)
+
+    # -- decoder --------------------------------------------------------
+    def _dec_embed(self, params, tokens, pos0=0):
+        b, s = tokens.shape
+        pos = pos0 + jnp.arange(s)
+        return (params["embed"][tokens] + params["pos_dec"][pos][None]
+                ).astype(jnp.bfloat16)
+
+    def decode_train(self, params, tokens, memory):
+        """Teacher-forced decoding: tokens (B, S_dec), memory (B, S_enc, D)."""
+        cfg = self.cfg
+        self_cfg, cross_cfg = cfg.attn_cfg(True), cfg.attn_cfg(False)
+        b, s_enc, _ = memory.shape
+        mem_pos = jnp.broadcast_to(jnp.arange(s_enc), (b, s_enc))
+        # cross k/v recomputed per layer from memory inside the scan
+        x = self._dec_embed(params, tokens)
+
+        def body(x, p):
+            h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+            x = x + L.attention(p["self_attn"], h, self_cfg)
+            h = L.rms_norm(x, p["ln_x"], cfg.norm_eps)
+            mk = jnp.einsum("bsd,dnh->bsnh", memory, p["cross_attn"]["wk"])
+            mv = jnp.einsum("bsd,dnh->bsnh", memory, p["cross_attn"]["wv"])
+            x = x + L.attention(p["cross_attn"], h, cross_cfg,
+                                kv_override=(mk, mv, mem_pos))
+            h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+            x = x + L.mlp(p["mlp"], h, gated=False)
+            return x, ()
+
+        if cfg.remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["dec"])
+        return self._logits(params, x)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"],
+                            preferred_element_type=_F32)
+        if cfg.padded_vocab != cfg.vocab:
+            pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+            logits = jnp.where(pad_mask, -1e30, logits)
+        return logits
+
+    def forward(self, params, frames, tokens):
+        memory = self.encode(params, frames)
+        return self.decode_train(params, tokens, memory)
+
+    def loss(self, params, frames, tokens, targets, mask):
+        logits = self.forward(params, frames, tokens)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+
+    # -- cached decode ---------------------------------------------------
+    def init_cache(self, b: int, context: int, memory: jax.Array,
+                   params=None):
+        """Self-attn KV cache (per layer) + cross-attention k/v.
+
+        Cross k/v are PRECOMPUTED per layer from the encoder memory at
+        cache-init time (pass ``params``): recomputing two (B, S_enc, D)
+        projections per layer per token made decode collective/memory-bound
+        in the roofline table (EXPERIMENTS.md whisper decode diagnosis).
+        Legacy path (params=None) stores the raw memory instead.
+        """
+        cfg = self.cfg
+        kv, hd, nl = cfg.n_kv, cfg.hd, cfg.n_layers
+        self_k = jnp.zeros((nl, b, context, kv, hd), jnp.bfloat16)
+        cache = {"self": L.KVCache(self_k, jnp.zeros_like(self_k))}
+        if params is not None:
+            mk = jnp.einsum("bsd,ldnh->lbsnh", memory,
+                            params["dec"]["cross_attn"]["wk"])
+            mv = jnp.einsum("bsd,ldnh->lbsnh", memory,
+                            params["dec"]["cross_attn"]["wv"])
+            cache["cross"] = L.KVCache(mk.astype(jnp.bfloat16),
+                                       mv.astype(jnp.bfloat16))
+        else:
+            cache["memory"] = memory
+        return cache
+
+    def decode_step(self, params, token, cache, pos):
+        """token (B,), pos (B,). Cross-attends cached (or recomputed) k/v."""
+        cfg = self.cfg
+        self_cfg, cross_cfg = cfg.attn_cfg(True), cfg.attn_cfg(False)
+        precomputed = "cross" in cache
+        if precomputed:
+            b, s_enc = cache["cross"].k.shape[1], cache["cross"].k.shape[2]
+        else:
+            b, s_enc, _ = cache["memory"].shape
+        mem_pos = jnp.broadcast_to(jnp.arange(s_enc), (b, s_enc))
+        x = (params["embed"][token[:, None]]
+             + params["pos_dec"][pos][:, None]).astype(jnp.bfloat16)
+
+        def body(carry, xs):
+            x = carry
+            p, kc, vc, mk, mv = xs
+            h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+            a, new_kv = L.attention_decode(p["self_attn"], h, self_cfg,
+                                           L.KVCache(kc, vc), pos)
+            x = x + a
+            h = L.rms_norm(x, p["ln_x"], cfg.norm_eps)
+            if not precomputed:
+                mk = jnp.einsum("bsd,dnh->bsnh", cache["memory"],
+                                p["cross_attn"]["wk"])
+                mv = jnp.einsum("bsd,dnh->bsnh", cache["memory"],
+                                p["cross_attn"]["wv"])
+            x = x + L.attention(p["cross_attn"], h, cross_cfg,
+                                kv_override=(mk, mv, mem_pos))
+            h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+            x = x + L.mlp(p["mlp"], h, gated=False)
+            return x, (new_kv.k, new_kv.v)
+
+        if precomputed:
+            xs = (params["dec"], cache["self"].k, cache["self"].v,
+                  cache["cross"].k, cache["cross"].v)
+        else:
+            dummy = (jnp.zeros((cfg.n_layers,)),) * 2
+            xs = (params["dec"], cache["self"].k, cache["self"].v) + dummy
+        x, (nk, nv) = jax.lax.scan(body, x, xs)
+        logits = self._logits(params, x)[:, 0]
+        new_cache = dict(cache)
+        new_cache["self"] = L.KVCache(nk, nv)
+        return logits, new_cache

@@ -1,0 +1,359 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention, MLPs, MoE.
+
+Pure-functional JAX. Every block comes as a (specs(), apply()) pair; specs()
+returns the ParamSpec pytree (shapes + logical sharding axes) and apply()
+consumes the materialized (or abstract) params.
+
+Numerics follow large-model practice: bf16 weights/activations, fp32
+softmax/norm statistics and fp32 logits, accumulation in fp32 via
+``preferred_element_type``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .spec import ParamSpec
+
+__all__ = [
+    "rms_norm_spec", "rms_norm",
+    "rope",
+    "AttnConfig", "attention_specs", "attention", "attention_decode",
+    "KVCache",
+    "mlp_specs", "mlp", "MoEConfig", "moe_specs", "moe",
+]
+
+_F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rms_norm_spec(d: int) -> ParamSpec:
+    return ParamSpec((d,), ("embed",), dtype=jnp.bfloat16, init="ones")
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(_F32)), axis=-1, keepdims=True)
+    y = x.astype(_F32) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(_F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x (..., S, n, hd), positions (..., S) -> same shape, rotated pairs."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = jnp.exp(-jnp.log(theta) * jnp.arange(half, dtype=_F32) / half)
+    ang = positions[..., None].astype(_F32) * freq          # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                        # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half].astype(_F32), x[..., half:].astype(_F32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention (optional sliding window), train + cached decode paths
+# ---------------------------------------------------------------------------
+
+class AttnConfig(NamedTuple):
+    d_model: int
+    n_heads: int
+    n_kv: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    window: int = 0           # 0 = full causal; >0 = sliding-window attention
+    kv_chunk: int = 0         # >0: blockwise scores over key chunks (memory opt)
+    use_rope: bool = True
+    causal: bool = True
+
+
+class KVCache(NamedTuple):
+    k: jax.Array    # (B, S_cache, n_kv, hd)
+    v: jax.Array
+
+
+def attention_specs(cfg: AttnConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    return {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _qkv(params, x, cfg: AttnConfig, positions):
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask(q_pos, k_pos, cfg: AttnConfig):
+    """(..., Sq, Sk) additive mask in fp32."""
+    dif = q_pos[..., :, None] - k_pos[..., None, :]
+    ok = dif >= 0 if cfg.causal else jnp.ones_like(dif, bool)
+    if cfg.window > 0:
+        ok &= dif < cfg.window
+    return jnp.where(ok, 0.0, -1e30).astype(_F32)
+
+
+def _sdpa(q, k, v, mask, cfg: AttnConfig):
+    """q (B,Sq,H,hd), k/v (B,Sk,KV,hd), mask (B|1, Sq, Sk) additive."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    q = q.reshape(b, sq, kvh, g, hd)
+    scale = hd ** -0.5
+    if cfg.kv_chunk and k.shape[1] > cfg.kv_chunk:
+        return _sdpa_chunked(q, k, v, mask, scale, cfg)
+    scores = jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                        preferred_element_type=_F32) * scale
+    scores = scores + mask[:, None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskh->bqkgh", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _sdpa_chunked(q, k, v, mask, scale, cfg: AttnConfig):
+    """Blockwise (flash-style) attention over key chunks via lax.scan.
+
+    Never materializes the (Sq, Sk) score tensor; this is the memory-term
+    optimization used in the perf hillclimb for long prefill. Online softmax
+    with running (max, sum, acc) per query.
+    """
+    b, sq, kvh, g, hd = q.shape
+    sk = k.shape[1]
+    c = cfg.kv_chunk
+    n_chunks = sk // c
+    assert sk % c == 0, "kv_chunk must divide key length"
+    kc = k.reshape(b, n_chunks, c, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, c, kvh, hd).transpose(1, 0, 2, 3, 4)
+    mc = mask.reshape(mask.shape[0], sq, n_chunks, c).transpose(2, 0, 1, 3)
+
+    def body(carry, xs):
+        m_run, l_run, acc = carry
+        kb, vb, mb = xs
+        s = jnp.einsum("bqkgh,bskh->bkgqs", q, kb,
+                       preferred_element_type=_F32) * scale
+        s = s + mb[:, None, None, :, :]
+        m_new = jnp.maximum(m_run, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_run - m_new)
+        l_new = l_run * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqs,bskh->bkgqh", p.astype(q.dtype), vb,
+            preferred_element_type=_F32)
+        return (m_new, l_new, acc), ()
+
+    m0 = jnp.full((b, kvh, g, sq), -jnp.inf, _F32)
+    l0 = jnp.zeros((b, kvh, g, sq), _F32)
+    a0 = jnp.zeros((b, kvh, g, sq, hd), _F32)
+    (m_f, l_f, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, mc))
+    out = acc / jnp.maximum(l_f, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, kvh * g, hd).astype(q.dtype)
+
+
+def attention(params, x: jax.Array, cfg: AttnConfig,
+              positions: Optional[jax.Array] = None,
+              kv_override: Optional[tuple] = None) -> jax.Array:
+    """Training/prefill path: full-sequence self-attention.
+
+    kv_override: (k, v, k_positions) for cross-attention (enc-dec).
+    """
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = _qkv(params, x, cfg, positions)
+    if kv_override is not None:
+        k, v, k_pos = kv_override
+    else:
+        k_pos = positions
+    mask = _mask(positions, k_pos, cfg)
+    out = _sdpa(q, k, v, mask, cfg)
+    return jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+
+
+def attention_decode(params, x: jax.Array, cfg: AttnConfig, cache: KVCache,
+                     pos: jax.Array):
+    """One-token decode: x (B, 1, D), pos (B,) absolute position.
+
+    Returns (out (B, 1, D), new cache). For SWA archs the cache length is
+    min(window, context) and acts as a ring buffer indexed by pos % len.
+    """
+    b = x.shape[0]
+    s_cache = cache.k.shape[1]
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
+    v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
+    if cfg.use_rope:
+        q = rope(q, pos[:, None], cfg.rope_theta)
+        k = rope(k, pos[:, None], cfg.rope_theta)
+    slot = (pos % s_cache)[:, None]
+    bidx = jnp.arange(b)[:, None]
+    new_k = cache.k.at[bidx, slot].set(k)
+    new_v = cache.v.at[bidx, slot].set(v)
+    # positions currently held by each cache slot (ring semantics)
+    slots = jnp.arange(s_cache)[None, :]
+    wraps = (pos[:, None] // s_cache)
+    slot_pos = slots + wraps * s_cache
+    slot_pos = jnp.where(slots > slot, slot_pos - s_cache, slot_pos)
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None])
+    k_pos = jnp.where(valid, slot_pos, -1)
+    dif = pos[:, None, None] - k_pos[:, None, :]
+    ok = (dif >= 0) & valid[:, None, :]
+    if cfg.window > 0:
+        ok &= dif < cfg.window
+    mask = jnp.where(ok, 0.0, -1e30).astype(_F32)
+    out = _sdpa(q, new_k, new_v, mask, cfg._replace(kv_chunk=0))
+    out = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+    return out, KVCache(new_k, new_v)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_specs(d: int, f: int, gated: bool = True) -> dict:
+    s = {
+        "wu": ParamSpec((d, f), ("embed", "mlp")),
+        "wd": ParamSpec((f, d), ("mlp", "embed")),
+    }
+    if gated:
+        s["wg"] = ParamSpec((d, f), ("embed", "mlp"))
+    return s
+
+
+def mlp(params, x: jax.Array, gated: bool = True) -> jax.Array:
+    up = jnp.einsum("bsd,df->bsf", x, params["wu"])
+    if gated:
+        gate = jnp.einsum("bsd,df->bsf", x, params["wg"])
+        h = jax.nn.silu(gate.astype(_F32)).astype(x.dtype) * up
+    else:
+        h = jax.nn.gelu(up.astype(_F32)).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, params["wd"])
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (GShard-style capacity dispatch, EP-shardable)
+# ---------------------------------------------------------------------------
+
+class MoEConfig(NamedTuple):
+    d_model: int
+    d_ff: int
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+
+
+def moe_specs(cfg: MoEConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamSpec((d, e), ("embed", None), dtype=jnp.float32),
+        "wg": ParamSpec((e, d, f), ("experts", "embed", "mlp")),
+        "wu": ParamSpec((e, d, f), ("experts", "embed", "mlp")),
+        "wd": ParamSpec((e, f, d), ("experts", "mlp", "embed")),
+    }
+
+
+def moe(params, x: jax.Array, cfg: MoEConfig, groups: int = 1,
+        shard: Optional[tuple] = None):
+    """Top-k routed MoE with per-expert capacity buffers.
+
+    x (B, S, D) -> (y (B, S, D), aux_loss scalar). Tokens over capacity are
+    dropped (contribute zero), standard GShard semantics.
+
+    ``groups`` partitions the token axis into independent dispatch groups,
+    each with its own capacity budget (cap/groups). Setting groups to the
+    data-parallel degree makes routing *shard-local*: the cumsum/scatter
+    stay inside one data shard, GSPMD keeps the capacity buffers sharded
+    on the token-group axis, and expert compute scales with the data axis
+    instead of replicating (EXPERIMENTS.md SSPerf documents the before/
+    after on kimi-k2 and mixtral). groups=1 is the naive global dispatch.
+
+    ``shard = (group_axis, expert_axis)`` pins the dispatch/capacity
+    tensors with explicit sharding constraints - propagation alone leaves
+    the scatter replicated (kimi iteration 3's refutation); either axis
+    may be None.
+    """
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    g = groups
+    if t % g:
+        raise ValueError(f"token count {t} not divisible by groups {g}")
+    tl = t // g
+    cap = max(int(cfg.capacity_factor * tl * k / e), 1)
+    xt = x.reshape(g, tl, d)
+
+    constrain_buffers = True
+    if shard is not None and g > 1:
+        from jax.sharding import PartitionSpec as _P
+        ga, ea = shard
+        if ea == "tokens-only":
+            ea, constrain_buffers = None, False
+        wsc = jax.lax.with_sharding_constraint
+        xt = wsc(xt, _P(ga, None, None))
+    else:
+        wsc = None
+
+    logits = jnp.einsum("gtd,de->gte", xt.astype(_F32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)            # (G, TL, k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, axis=-1, keepdims=True)
+
+    # position of each (token, choice) within its group-local expert queue
+    onehot = jax.nn.one_hot(gate_idx, e, dtype=jnp.int32)    # (G, TL, k, E)
+    flat = onehot.reshape(g, tl * k, e)
+    pie = jnp.cumsum(flat, axis=1) * flat                    # 1-based positions
+    pos = jnp.max(pie.reshape(g, tl, k, e), axis=-1) - 1     # (G, TL, k)
+    keep = (pos >= 0) & (pos < cap)
+    eidx = jnp.where(keep, gate_idx, e)                       # e = drop bucket
+    pidx = jnp.where(keep, pos, 0)
+
+    # dispatch: scatter tokens into (G, E+1, cap, D); drop bucket absorbs
+    buf = jnp.zeros((g, e + 1, cap, d), x.dtype)
+    gi = jnp.broadcast_to(jnp.arange(g)[:, None], (g, tl * k)).reshape(-1)
+    tok_rep = jnp.broadcast_to(jnp.arange(tl)[:, None], (tl, k)).reshape(-1)
+    src = xt[:, tok_rep].reshape(-1, d)                       # (G*TL*k, D)
+    buf = buf.at[gi, eidx.reshape(-1), pidx.reshape(-1)].set(src)
+    buf = buf[:, :e]
+    if wsc is not None and constrain_buffers:
+        buf = wsc(buf, _P(ga, ea, None, None))
+
+    # expert FFN, batched over (group, expert) - shardable on both axes
+    gate = jnp.einsum("gecd,edf->gecf", buf, params["wg"])
+    up = jnp.einsum("gecd,edf->gecf", buf, params["wu"])
+    h = jax.nn.silu(gate.astype(_F32)).astype(x.dtype) * up
+    out = jnp.einsum("gecf,efd->gecd", h, params["wd"])      # (G, E, cap, D)
+    if wsc is not None and constrain_buffers:
+        out = wsc(out, _P(ga, ea, None, None))
+
+    # combine: gather each token's expert outputs, weight by gates
+    zero = jnp.zeros((g, 1, cap, d), out.dtype)
+    out_pad = jnp.concatenate([out, zero], axis=1)
+    gathered = out_pad[gi, eidx.reshape(-1), pidx.reshape(-1)]
+    gathered = gathered.reshape(g, tl, k, d)
+    if wsc is not None:
+        gathered = wsc(gathered, _P(ga, None, None, None))
+    y = jnp.einsum("gtkd,gtk->gtd", gathered.astype(_F32),
+                   gate_vals * keep.astype(_F32))
+    y = y.astype(x.dtype).reshape(b, s, d)
+
+    # load-balancing aux loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], e, dtype=_F32),
+                       axis=(0, 1))
+    router_prob = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * router_prob) * e
+    return y, aux

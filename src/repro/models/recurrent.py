@@ -1,0 +1,273 @@
+"""Recurrent blocks: RG-LRU (RecurrentGemma/Griffin) and xLSTM (mLSTM/sLSTM).
+
+Training paths use lax.associative_scan where the recurrence is linear
+(RG-LRU) and lax.scan otherwise (mLSTM/sLSTM exponential gating). Decode
+paths are single-step state updates - these archs are the sub-quadratic
+ones that make the ``long_500k`` shape feasible (state is O(1) in context).
+
+DESIGN.md notes: the time axis of these recurrences is NOT order-invariant,
+so the paper's transmission ordering applies only to their weight streams
+and channel dimensions, never to the sequence axis.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .spec import ParamSpec
+
+_F32 = jnp.float32
+
+__all__ = [
+    "rglru_specs", "rglru_scan", "rglru_step", "RGLRUState",
+    "conv1d_specs", "causal_conv1d", "causal_conv1d_step",
+    "mlstm_specs", "mlstm_scan", "mlstm_step", "MLSTMState",
+    "slstm_specs", "slstm_scan", "slstm_step", "SLSTMState",
+]
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU: h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+# ---------------------------------------------------------------------------
+
+class RGLRUState(NamedTuple):
+    h: jax.Array      # (B, D)
+
+
+def rglru_specs(d: int) -> dict:
+    return {
+        "wa": ParamSpec((d, d), ("embed", "state")),
+        "ba": ParamSpec((d,), ("state",), init="zeros", dtype=jnp.float32),
+        "wx": ParamSpec((d, d), ("embed", "state")),
+        "bx": ParamSpec((d,), ("state",), init="zeros", dtype=jnp.float32),
+        # log-space decay parameter Lambda; init so a ~ 0.9..0.999
+        "lam": ParamSpec((d,), ("state",), init="ones", dtype=jnp.float32),
+    }
+
+
+_C = 8.0  # Griffin's fixed exponent scale
+
+
+def _rglru_gates(params, x):
+    r = jax.nn.sigmoid(jnp.einsum("...d,de->...e", x.astype(_F32),
+                                  params["wa"].astype(_F32)) + params["ba"])
+    i = jax.nn.sigmoid(jnp.einsum("...d,de->...e", x.astype(_F32),
+                                  params["wx"].astype(_F32)) + params["bx"])
+    # a_t = a^(c*r_t) with log a = log sigmoid(Lambda) < 0 (Griffin Eq. 4)
+    log_a = _C * r * (-jax.nn.softplus(-params["lam"]))
+    a = jnp.exp(log_a)
+    gated_x = i * x.astype(_F32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.square(a), 1e-9)) * gated_x
+    return a, b
+
+
+def rglru_scan(params, x: jax.Array) -> jax.Array:
+    """x (B, S, D) -> (B, S, D); parallel associative scan over time."""
+    a, b = _rglru_gates(params, x)
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_s, b_s = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return b_s.astype(x.dtype)
+
+
+def rglru_step(params, x: jax.Array, state: RGLRUState):
+    """x (B, D) one step."""
+    a, b = _rglru_gates(params, x)
+    h = a * state.h + b
+    return h.astype(x.dtype), RGLRUState(h)
+
+
+# ---------------------------------------------------------------------------
+# Causal temporal conv (width w), used in Griffin and xLSTM blocks
+# ---------------------------------------------------------------------------
+
+def conv1d_specs(d: int, width: int = 4) -> dict:
+    return {
+        "w": ParamSpec((width, d), (None, "state"), dtype=jnp.bfloat16),
+        "b": ParamSpec((d,), ("state",), init="zeros", dtype=jnp.bfloat16),
+    }
+
+
+def causal_conv1d(params, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time: x (B, S, D)."""
+    w = params["w"]
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(width))
+    return out + params["b"]
+
+
+def causal_conv1d_step(params, x: jax.Array, history: jax.Array):
+    """x (B, D), history (B, width-1, D) -> (out (B, D), new history)."""
+    w = params["w"]
+    width = w.shape[0]
+    window = jnp.concatenate([history, x[:, None, :]], axis=1)  # (B, width, D)
+    out = jnp.einsum("bwd,wd->bd", window, w) + params["b"]
+    return out, window[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM: matrix memory C_t = f C_{t-1} + i v k^T (exponential gating)
+# ---------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    c: jax.Array     # (B, H, hd, hd)  memory matrix (value x key)
+    n: jax.Array     # (B, H, hd)      normalizer
+    m: jax.Array     # (B, H)          gate stabilizer (log space)
+
+
+def mlstm_specs(d: int, n_heads: int) -> dict:
+    hd = d // n_heads
+    return {
+        "wq": ParamSpec((d, n_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, n_heads, hd), ("embed", "heads", "head_dim")),
+        "wv": ParamSpec((d, n_heads, hd), ("embed", "heads", "head_dim")),
+        "wi": ParamSpec((d, n_heads), ("embed", "heads"), dtype=jnp.float32),
+        "wf": ParamSpec((d, n_heads), ("embed", "heads"), dtype=jnp.float32),
+        "wo_gate": ParamSpec((d, d), ("embed", "state")),
+    }
+
+
+def _mlstm_qkv(params, x):
+    q = jnp.einsum("...d,dnh->...nh", x, params["wq"])
+    k = jnp.einsum("...d,dnh->...nh", x, params["wk"])
+    v = jnp.einsum("...d,dnh->...nh", x, params["wv"])
+    i_pre = jnp.einsum("...d,dn->...n", x.astype(_F32), params["wi"])
+    f_pre = jnp.einsum("...d,dn->...n", x.astype(_F32), params["wf"])
+    return q, k, v, i_pre, f_pre
+
+
+def _mlstm_cell(state: MLSTMState, q, k, v, i_pre, f_pre, hd):
+    """One stabilized mLSTM step; all (B, H, ...) fp32."""
+    log_f = -jax.nn.softplus(-f_pre)                  # log sigmoid(f)
+    m_new = jnp.maximum(log_f + state.m, i_pre)
+    f_st = jnp.exp(log_f + state.m - m_new)
+    i_st = jnp.exp(i_pre - m_new)
+    kn = k * (hd ** -0.5)
+    c_new = f_st[..., None, None] * state.c + i_st[..., None, None] * (
+        v[..., :, None] * kn[..., None, :])
+    n_new = f_st[..., None] * state.n + i_st[..., None] * kn
+    num = jnp.einsum("bhvk,bhk->bhv", c_new, q)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q))
+    h = num / jnp.maximum(den, 1.0)[..., None]
+    return h, MLSTMState(c_new, n_new, m_new)
+
+
+def mlstm_init_state(b: int, h: int, hd: int) -> MLSTMState:
+    return MLSTMState(jnp.zeros((b, h, hd, hd), _F32),
+                      jnp.zeros((b, h, hd), _F32),
+                      jnp.full((b, h), -1e30, _F32))
+
+
+def mlstm_scan(params, x: jax.Array, n_heads: int) -> jax.Array:
+    """x (B, S, D) -> (B, S, D) via scan over time."""
+    b, s, d = x.shape
+    hd = d // n_heads
+    q, k, v, i_pre, f_pre = _mlstm_qkv(params, x)
+
+    def body(state, xs):
+        qt, kt, vt, it, ft = xs
+        h, state = _mlstm_cell(state, qt.astype(_F32), kt.astype(_F32),
+                               vt.astype(_F32), it, ft, hd)
+        return state, h
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), i_pre.transpose(1, 0, 2),
+          f_pre.transpose(1, 0, 2))
+    _, hs = jax.lax.scan(body, mlstm_init_state(b, n_heads, hd), xs)
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, d)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x.astype(_F32),
+                                  params["wo_gate"].astype(_F32)))
+    return (o * h).astype(x.dtype)
+
+
+def mlstm_step(params, x: jax.Array, state: MLSTMState, n_heads: int):
+    """x (B, D) one decode step."""
+    b, d = x.shape
+    hd = d // n_heads
+    q, k, v, i_pre, f_pre = _mlstm_qkv(params, x)
+    h, state = _mlstm_cell(state, q.astype(_F32), k.astype(_F32),
+                           v.astype(_F32), i_pre, f_pre, hd)
+    o = jax.nn.sigmoid(jnp.einsum("bd,de->be", x.astype(_F32),
+                                  params["wo_gate"].astype(_F32)))
+    return (o * h.reshape(b, d)).astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM: scalar memory with exponential gating + recurrent h feedback
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    c: jax.Array     # (B, D)
+    n: jax.Array     # (B, D)
+    m: jax.Array     # (B, D)
+    h: jax.Array     # (B, D)
+
+
+def slstm_specs(d: int, n_heads: int) -> dict:
+    hd = d // n_heads
+    # recurrent R matrices are head-wise block diagonal: (H, hd, hd)
+    return {
+        "wz": ParamSpec((d, d), ("embed", "state")),
+        "wi": ParamSpec((d, d), ("embed", "state"), dtype=jnp.float32),
+        "wf": ParamSpec((d, d), ("embed", "state"), dtype=jnp.float32),
+        "wo": ParamSpec((d, d), ("embed", "state")),
+        "rz": ParamSpec((n_heads, hd, hd), ("heads", None, None)),
+        "ri": ParamSpec((n_heads, hd, hd), ("heads", None, None), dtype=jnp.float32),
+        "rf": ParamSpec((n_heads, hd, hd), ("heads", None, None), dtype=jnp.float32),
+        "ro": ParamSpec((n_heads, hd, hd), ("heads", None, None)),
+    }
+
+
+def _headwise(r, h, n_heads):
+    b, d = h.shape
+    hd = d // n_heads
+    hh = h.reshape(b, n_heads, hd)
+    return jnp.einsum("bnh,nhk->bnk", hh, r.astype(h.dtype)).reshape(b, d)
+
+
+def slstm_cell(params, x, state: SLSTMState, n_heads: int):
+    """x (B, D) fp32 preactivations; returns (h, new state)."""
+    xf = x.astype(_F32)
+    hprev = state.h
+    z_pre = xf @ params["wz"].astype(_F32) + _headwise(params["rz"], hprev, n_heads).astype(_F32)
+    i_pre = xf @ params["wi"] + _headwise(params["ri"], hprev, n_heads)
+    f_pre = xf @ params["wf"] + _headwise(params["rf"], hprev, n_heads)
+    o_pre = xf @ params["wo"].astype(_F32) + _headwise(params["ro"], hprev, n_heads).astype(_F32)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    log_f = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(log_f + state.m, i_pre)
+    i_st = jnp.exp(i_pre - m_new)
+    f_st = jnp.exp(log_f + state.m - m_new)
+    c_new = f_st * state.c + i_st * z
+    n_new = f_st * state.n + i_st
+    h_new = o * (c_new / jnp.maximum(n_new, 1e-6))
+    return h_new, SLSTMState(c_new, n_new, m_new, h_new)
+
+
+def slstm_init_state(b: int, d: int) -> SLSTMState:
+    z = jnp.zeros((b, d), _F32)
+    return SLSTMState(z, z, jnp.full((b, d), -1e30, _F32), z)
+
+
+def slstm_scan(params, x: jax.Array, n_heads: int) -> jax.Array:
+    b, s, d = x.shape
+
+    def body(state, xt):
+        h, state = slstm_cell(params, xt, state, n_heads)
+        return state, h
+
+    _, hs = jax.lax.scan(body, slstm_init_state(b, d), x.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2).astype(x.dtype)
+
+
+def slstm_step(params, x: jax.Array, state: SLSTMState, n_heads: int):
+    h, state = slstm_cell(params, x, state, n_heads)
+    return h.astype(x.dtype), state

@@ -1,0 +1,100 @@
+"""Parameter specs: shapes + logical sharding axes, materialization-free.
+
+Every model module describes its parameters as a pytree of ParamSpec before
+any array exists. This single source of truth serves three consumers:
+
+  * ``init_params``     - materialize real arrays (smoke tests, training)
+  * ``abstract_params`` - ShapeDtypeStructs for the multi-pod dry-run
+  * ``axes_tree``       - logical axes, mapped to mesh axes by sharding rules
+
+Logical axis vocabulary (mapped per-arch in repro/dist/sharding.py):
+    batch seq embed mlp heads kv_heads head_dim vocab experts layers
+    conv_in conv_out state
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ParamSpec", "init_params", "abstract_params", "axes_tree",
+           "is_spec", "param_count", "param_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis per dim (None = replicated dim)
+    dtype: jnp.dtype = jnp.bfloat16
+    init: str = "normal"                     # normal | zeros | ones | embed
+    scale: float = 1.0                       # stddev multiplier for normal
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_one(spec: ParamSpec, key: jax.Array) -> jax.Array:
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, spec.dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, spec.dtype)
+    if spec.init in ("normal", "embed"):
+        # fan-in scaled normal: last axis is the output dim by convention of
+        # this codebase (x @ w with w (in, out)); embed scales by 1.0.
+        if spec.init == "embed" or len(spec.shape) < 2:
+            std = spec.scale
+        else:
+            fan_in = 1
+            for d in spec.shape[:-1]:
+                fan_in *= d
+            std = spec.scale / max(fan_in, 1) ** 0.5
+        return (jax.random.normal(key, spec.shape, jnp.float32) * std).astype(spec.dtype)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def init_params(specs, key: jax.Array):
+    """Materialize a spec pytree into arrays, splitting the key per leaf."""
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    arrays = [_init_one(s, k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrays)
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct pytree - used by .lower() without allocating."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), specs, is_leaf=is_spec)
+
+
+def axes_tree(specs):
+    """Logical-axes pytree, same structure as the params."""
+    return jax.tree.map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def param_count(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    total = 0
+    for s in leaves:
+        n = 1
+        for d in s.shape:
+            n *= d
+        total += n
+    return total
+
+
+def param_bytes(specs) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    total = 0
+    for s in leaves:
+        n = jnp.dtype(s.dtype).itemsize
+        for d in s.shape:
+            n *= d
+        total += n
+    return total

@@ -1,0 +1,441 @@
+"""Decoder LM with composable block patterns.
+
+One model class covers the whole assigned-architecture pool:
+  dense GQA        pattern ("attn",)                 minicpm/phi3/starcoder2/danube
+  MoE              pattern ("attn",) + moe config    mixtral/kimi-k2
+  Griffin hybrid   pattern ("rec", "rec", "attn")    recurrentgemma
+  xLSTM            pattern ("mlstm", "slstm")        xlstm
+  VLM backbone     dense + prefix embeddings          internvl2
+
+Layers are grouped by pattern cycle and scanned (lax.scan over stacked
+group params) so the compiled HLO is O(pattern) not O(n_layers) - essential
+for dry-run compile times at 40-61 layers. A remainder of n_layers %
+len(pattern) is applied unscanned as a tail.
+
+Three execution modes share the same block code: "train" (no cache),
+"prefill" (returns cache), "decode" (single token, consumes cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import recurrent as R
+from .spec import ParamSpec
+
+_F32 = jnp.float32
+
+__all__ = ["LMConfig", "LM"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0                      # 0 -> d_model // n_heads
+    pattern: Tuple[str, ...] = ("attn",)
+    rope_theta: float = 10000.0
+    window: int = 0                        # sliding-window size; 0 = full attn
+    n_experts: int = 0                     # >0 -> MoE MLP in attn blocks
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    moe_groups: int = 1                    # shard-local dispatch groups (perf)
+    moe_shard: Optional[Tuple[Optional[str], Optional[str]]] = None
+    # ^ (group_axis, expert_axis) explicit constraints for the dispatch path
+    tp_bf16_boundary: bool = False
+    # ^ pin block outputs to bf16 via an optimization barrier so TP
+    #   partial-sum all-reduces run in bf16, not the fused-f32 XLA picks
+    gated_mlp: bool = True
+    tied_embeddings: bool = True
+    vlm_prefix: int = 0                    # vision stub: prepended patch embeds
+    kv_chunk: int = 0                      # blockwise attention chunk (0 = off)
+    remat: bool = True
+    norm_eps: float = 1e-6
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        """Vocab rounded up to a multiple of 256 so the vocab dim shards
+        cleanly over a 16-way model axis with 128-lane tiles. Logits in the
+        pad region are masked to -1e30 (never sampled, never targeted)."""
+        return -(-self.vocab // 256) * 256
+
+    @property
+    def attn_cfg(self) -> L.AttnConfig:
+        return L.AttnConfig(self.d_model, self.n_heads, self.n_kv, self.hd,
+                            self.rope_theta, self.window, self.kv_chunk)
+
+    @property
+    def moe_cfg(self) -> Optional[L.MoEConfig]:
+        if self.n_experts == 0:
+            return None
+        return L.MoEConfig(self.d_model, self.d_ff, self.n_experts,
+                           self.top_k, self.capacity_factor)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True when context memory is bounded (SWA or recurrent blocks)."""
+        recurrent = any(k != "attn" for k in self.pattern)
+        return recurrent or self.window > 0
+
+    def cache_len(self, context: int) -> int:
+        """KV entries needed per attention block for a given context."""
+        return min(context, self.window) if self.window > 0 else context
+
+
+# ---------------------------------------------------------------------------
+# Per-block specs / apply / cache
+# ---------------------------------------------------------------------------
+
+def _block_specs(kind: str, cfg: LMConfig) -> dict:
+    d = cfg.d_model
+    if kind == "attn":
+        s = {"ln1": L.rms_norm_spec(d), "attn": L.attention_specs(cfg.attn_cfg),
+             "ln2": L.rms_norm_spec(d)}
+        if cfg.moe_cfg is not None:
+            s["moe"] = L.moe_specs(cfg.moe_cfg)
+        else:
+            s["mlp"] = L.mlp_specs(d, cfg.d_ff, cfg.gated_mlp)
+        return s
+    if kind == "rec":
+        s = {"ln1": L.rms_norm_spec(d),
+             "in_main": ParamSpec((d, d), ("embed", "state")),
+             "in_gate": ParamSpec((d, d), ("embed", "state")),
+             "conv": R.conv1d_specs(d),
+             "rglru": R.rglru_specs(d),
+             "out": ParamSpec((d, d), ("state", "embed")),
+             "ln2": L.rms_norm_spec(d)}
+        if cfg.d_ff > 0:
+            s["mlp"] = L.mlp_specs(d, cfg.d_ff, cfg.gated_mlp)
+        return s
+    if kind == "mlstm":
+        return {"ln1": L.rms_norm_spec(d), "cell": R.mlstm_specs(d, cfg.n_heads)}
+    if kind == "slstm":
+        return {"ln1": L.rms_norm_spec(d), "cell": R.slstm_specs(d, cfg.n_heads)}
+    raise ValueError(f"unknown block kind {kind!r}")
+
+
+def _block_cache(kind: str, cfg: LMConfig, b: int, context: int):
+    d, hd, kv = cfg.d_model, cfg.hd, cfg.n_kv
+    if kind == "attn":
+        c = cfg.cache_len(context)
+        return L.KVCache(jnp.zeros((b, c, kv, hd), jnp.bfloat16),
+                         jnp.zeros((b, c, kv, hd), jnp.bfloat16))
+    if kind == "rec":
+        return {"h": jnp.zeros((b, d), _F32),
+                "conv": jnp.zeros((b, 3, d), jnp.bfloat16)}
+    if kind == "mlstm":
+        return R.mlstm_init_state(b, cfg.n_heads, d // cfg.n_heads)
+    if kind == "slstm":
+        return R.slstm_init_state(b, d)
+    raise ValueError(kind)
+
+
+def _apply_mlp(params, cfg: LMConfig, x):
+    if cfg.moe_cfg is not None and "moe" in params:
+        groups = cfg.moe_groups
+        # decode steps carry few tokens; fall back to global dispatch
+        if x.shape[0] * x.shape[1] % max(groups, 1):
+            groups = 1
+        y, aux = L.moe(params["moe"], x, cfg.moe_cfg, groups=groups,
+                       shard=cfg.moe_shard)
+        return y, aux
+    return L.mlp(params["mlp"], x, cfg.gated_mlp), 0.0
+
+
+def _block_apply(kind: str, cfg: LMConfig, params, x, mode: str, cache, pos):
+    """x (B, S, D) [S=1 in decode]; returns (x, new_cache, aux_loss)."""
+    aux = 0.0
+    if kind == "attn":
+        h = L.rms_norm(x, params["ln1"], cfg.norm_eps)
+        if mode == "train":
+            a = L.attention(params["attn"], h, cfg.attn_cfg)
+            new_cache = cache
+        elif mode == "prefill":
+            a, new_cache = _attention_prefill(params["attn"], h, cfg, cache)
+        else:
+            a, new_cache = L.attention_decode(params["attn"], h, cfg.attn_cfg,
+                                              cache, pos)
+        if cfg.tp_bf16_boundary:
+            a = jax.lax.optimization_barrier(a.astype(jnp.bfloat16))
+        x = x + a
+        h = L.rms_norm(x, params["ln2"], cfg.norm_eps)
+        m, aux = _apply_mlp(params, cfg, h)
+        if cfg.tp_bf16_boundary:
+            m = jax.lax.optimization_barrier(m.astype(jnp.bfloat16))
+        return x + m, new_cache, aux
+
+    if kind == "rec":
+        h = L.rms_norm(x, params["ln1"], cfg.norm_eps)
+        main = jnp.einsum("bsd,de->bse", h, params["in_main"])
+        gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", h, params["in_gate"])
+                           .astype(_F32)).astype(x.dtype)
+        if mode == "decode":
+            c_out, conv_hist = R.causal_conv1d_step(
+                params["conv"], main[:, 0], cache["conv"])
+            r_out, rst = R.rglru_step(params["rglru"], c_out,
+                                      R.RGLRUState(cache["h"]))
+            y = r_out[:, None, :]
+            new_cache = {"h": rst.h, "conv": conv_hist}
+        else:
+            c_out = R.causal_conv1d(params["conv"], main)
+            y = R.rglru_scan(params["rglru"], c_out)
+            if mode == "prefill":
+                new_cache = {"h": y[:, -1].astype(_F32),
+                             "conv": main[:, -3:]}
+            else:
+                new_cache = cache
+        y = y * gate
+        x = x + jnp.einsum("bse,ed->bsd", y, params["out"])
+        if "mlp" in params:
+            h2 = L.rms_norm(x, params["ln2"], cfg.norm_eps)
+            m, aux = _apply_mlp(params, cfg, h2)
+            x = x + m
+        return x, new_cache, aux
+
+    if kind in ("mlstm", "slstm"):
+        h = L.rms_norm(x, params["ln1"], cfg.norm_eps)
+        cell = params["cell"]
+        if kind == "mlstm":
+            if mode == "decode":
+                y, st = R.mlstm_step(cell, h[:, 0], cache, cfg.n_heads)
+                y = y[:, None, :]
+                new_cache = st
+            else:
+                y = R.mlstm_scan(cell, h, cfg.n_heads)
+                new_cache = _mlstm_final_state(cell, h, cfg, cache) \
+                    if mode == "prefill" else cache
+        else:
+            if mode == "decode":
+                y, st = R.slstm_step(cell, h[:, 0], cache, cfg.n_heads)
+                y = y[:, None, :]
+                new_cache = st
+            else:
+                y = R.slstm_scan(cell, h, cfg.n_heads)
+                new_cache = _slstm_final_state(cell, h, cfg, cache) \
+                    if mode == "prefill" else cache
+        return x + y, new_cache, aux
+
+    raise ValueError(kind)
+
+
+def _attention_prefill(params, h, cfg: LMConfig, cache: L.KVCache):
+    """Full-sequence attention that also fills the (ring) KV cache."""
+    b, s, _ = h.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    q, k, v = L._qkv(params, h, cfg.attn_cfg, positions)
+    mask = L._mask(positions, positions, cfg.attn_cfg)
+    out = L._sdpa(q, k, v, mask, cfg.attn_cfg)
+    y = jnp.einsum("bsnh,nhd->bsd", out, params["wo"])
+    c = cache.k.shape[1]
+    keep = min(s, c)
+    p_keep = jnp.arange(s - keep, s)
+    slots = p_keep % c
+    nk = cache.k.at[:, slots].set(k[:, p_keep].astype(cache.k.dtype))
+    nv = cache.v.at[:, slots].set(v[:, p_keep].astype(cache.v.dtype))
+    return y, L.KVCache(nk, nv)
+
+
+def _mlstm_final_state(cell, h, cfg, cache):
+    b, s, d = h.shape
+    q, k, v, i_pre, f_pre = R._mlstm_qkv(cell, h)
+    hd = d // cfg.n_heads
+
+    def body(state, xs):
+        qt, kt, vt, it, ft = xs
+        _, state = R._mlstm_cell(state, qt.astype(_F32), kt.astype(_F32),
+                                 vt.astype(_F32), it, ft, hd)
+        return state, ()
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), i_pre.transpose(1, 0, 2),
+          f_pre.transpose(1, 0, 2))
+    st, _ = jax.lax.scan(body, R.mlstm_init_state(b, cfg.n_heads, hd), xs)
+    return st
+
+
+def _slstm_final_state(cell, h, cfg, cache):
+    b, s, d = h.shape
+
+    def body(state, xt):
+        _, state = R.slstm_cell(cell, xt, state, cfg.n_heads)
+        return state, ()
+
+    st, _ = jax.lax.scan(body, R.slstm_init_state(b, d), h.transpose(1, 0, 2))
+    return st
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+class LM:
+    """Functional decoder LM; all methods are jit/pjit-compatible."""
+
+    def __init__(self, cfg: LMConfig):
+        self.cfg = cfg
+        p = len(cfg.pattern)
+        self.n_groups = cfg.n_layers // p
+        self.tail = tuple(cfg.pattern[:cfg.n_layers % p])
+
+    # -- specs ---------------------------------------------------------
+    def specs(self) -> dict:
+        cfg = self.cfg
+        group = {f"b{i}_{k}": _block_specs(k, cfg)
+                 for i, k in enumerate(cfg.pattern)}
+        # stack group specs along a leading "layers" axis
+        def stack(s: ParamSpec) -> ParamSpec:
+            return ParamSpec((self.n_groups,) + s.shape, ("layers",) + s.axes,
+                             s.dtype, s.init, s.scale)
+        specs = {
+            "embed": ParamSpec((cfg.padded_vocab, cfg.d_model), ("vocab", "embed"),
+                               init="embed", scale=0.02),
+            "blocks": jax.tree.map(stack, group,
+                                   is_leaf=lambda x: isinstance(x, ParamSpec)),
+            "ln_f": L.rms_norm_spec(cfg.d_model),
+        }
+        if self.tail:
+            specs["tail"] = {f"t{i}_{k}": _block_specs(k, cfg)
+                             for i, k in enumerate(self.tail)}
+        if not cfg.tied_embeddings:
+            specs["unembed"] = ParamSpec((cfg.d_model, cfg.padded_vocab),
+                                         ("embed", "vocab"), scale=0.02)
+        if cfg.vlm_prefix:
+            # projection for stubbed vision patch embeddings
+            specs["vis_proj"] = ParamSpec((cfg.d_model, cfg.d_model),
+                                          ("embed", "state"))
+        return specs
+
+    # -- caches --------------------------------------------------------
+    def init_cache(self, b: int, context: int):
+        cfg = self.cfg
+        def per_group(kind):
+            one = _block_cache(kind, cfg, b, context)
+            return jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (self.n_groups,) + x.shape), one)
+        cache = {f"b{i}_{k}": per_group(k) for i, k in enumerate(cfg.pattern)}
+        if self.tail:
+            cache["tail"] = {f"t{i}_{k}": _block_cache(k, cfg, b, context)
+                             for i, k in enumerate(self.tail)}
+        return cache
+
+    # -- forward -------------------------------------------------------
+    def _embed(self, params, tokens, patch_embeds=None):
+        cfg = self.cfg
+        x = params["embed"][tokens].astype(jnp.bfloat16)
+        if cfg.vlm_prefix:
+            if patch_embeds is None:
+                raise ValueError("VLM arch needs patch_embeds")
+            pe = jnp.einsum("bpd,de->bpe", patch_embeds.astype(jnp.bfloat16),
+                            params["vis_proj"])
+            x = jnp.concatenate([pe, x], axis=1)
+        return x
+
+    def _blocks(self, params, x, mode, cache, pos):
+        cfg = self.cfg
+        names = [f"b{i}_{k}" for i, k in enumerate(cfg.pattern)]
+        kinds = list(cfg.pattern)
+        aux_total = 0.0
+
+        def group_body(carry, xs):
+            h, aux = carry
+            gp, gc = xs
+            new_gc = {}
+            for name, kind in zip(names, kinds):
+                h, nc, a = _block_apply(kind, cfg, gp[name], h, mode,
+                                        gc[name] if gc else None, pos)
+                new_gc[name] = nc
+                aux = aux + a
+            return (h, aux), new_gc
+
+        body = group_body
+        if cfg.remat and mode == "train":
+            body = jax.checkpoint(group_body, prevent_cse=False)
+
+        group_params = {n: params["blocks"][n] for n in names}
+        group_cache = None if mode == "train" else \
+            {n: cache[n] for n in names}
+        aux0 = jnp.zeros((), _F32)
+        if mode == "train":
+            (x, aux_total), _ = jax.lax.scan(
+                lambda c, gp: (body(c, (gp, None))[0], ()),
+                (x, aux0), group_params)
+            new_cache = cache
+        else:
+            (x, aux_total), new_group_cache = jax.lax.scan(
+                body, (x, aux0), (group_params, group_cache))
+            new_cache = dict(new_group_cache)
+
+        if self.tail:
+            tail_cache = {} if mode == "train" else dict(cache["tail"])
+            new_tail = {}
+            for i, kind in enumerate(self.tail):
+                name = f"t{i}_{kind}"
+                x, nc, a = _block_apply(kind, cfg, params["tail"][name], x,
+                                        mode, tail_cache.get(name), pos)
+                new_tail[name] = nc
+                aux_total = aux_total + a
+            if mode != "train":
+                new_cache["tail"] = new_tail
+        return x, new_cache, aux_total
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = L.rms_norm(x, params["ln_f"], cfg.norm_eps)
+        if cfg.tied_embeddings:
+            logits = jnp.einsum("bsd,vd->bsv", x, params["embed"],
+                                preferred_element_type=_F32)
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"],
+                                preferred_element_type=_F32)
+        if cfg.padded_vocab != cfg.vocab:
+            pad_mask = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+            logits = jnp.where(pad_mask, -1e30, logits)
+        return logits
+
+    def forward(self, params, tokens: jax.Array,
+                patch_embeds: Optional[jax.Array] = None) -> jax.Array:
+        """Train-mode forward: tokens (B, S) -> logits (B, S[, +prefix], V)."""
+        x = self._embed(params, tokens, patch_embeds)
+        x, _, aux = self._blocks(params, x, "train", None, None)
+        return self._logits(params, x), aux
+
+    def loss(self, params, tokens, targets, mask,
+             patch_embeds: Optional[jax.Array] = None):
+        """Mean masked cross-entropy (fp32), plus MoE aux loss."""
+        logits, aux = self.forward(params, tokens, patch_embeds)
+        if self.cfg.vlm_prefix:
+            logits = logits[:, self.cfg.vlm_prefix:]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mask
+        loss = jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+        return loss + 0.01 * aux
+
+    def prefill(self, params, tokens, context: int,
+                patch_embeds: Optional[jax.Array] = None):
+        """Run the prompt, return (last-position logits, cache)."""
+        b = tokens.shape[0]
+        cache = self.init_cache(b, context)
+        x = self._embed(params, tokens, patch_embeds)
+        x, cache, _ = self._blocks(params, x, "prefill", cache, None)
+        return self._logits(params, x[:, -1:])[:, 0], cache
+
+    def decode_step(self, params, token: jax.Array, cache, pos: jax.Array):
+        """token (B,), pos (B,) -> (logits (B, V), new cache)."""
+        x = params["embed"][token[:, None]].astype(jnp.bfloat16)
+        x, cache, _ = self._blocks(params, x, "decode", cache, pos)
+        return self._logits(params, x)[:, 0], cache

@@ -1,0 +1,13 @@
+"""NoC substrate: topology, cycle-level simulator, DNN traffic, power model."""
+from .topology import NocConfig, PAPER_NOCS, xy_route, neighbor_table
+from .sim import Traffic, SimResult, simulate, make_state
+from .traffic import (LayerTraffic, build_traffic, conv_layer_traffic,
+                      linear_layer_traffic)
+from . import power
+
+__all__ = [
+    "NocConfig", "PAPER_NOCS", "xy_route", "neighbor_table",
+    "Traffic", "SimResult", "simulate", "make_state",
+    "LayerTraffic", "build_traffic", "conv_layer_traffic",
+    "linear_layer_traffic", "power",
+]

@@ -1,0 +1,289 @@
+"""Cycle-level NoC simulator in pure JAX (lax.scan over cycles).
+
+Faithful to the paper's evaluation platform (NocDAS-like, Sec. V-B): a 2D
+mesh with X-Y dimension-ordered routing, 4 virtual channels per input port
+with 4-flit-deep FIFOs, credit-based flow control (conservative one-cycle
+credits), round-robin switch allocation per output port, one flit per link
+per cycle. Memory controllers inject packetized DNN traffic at their local
+ports; flits eject at the destination PE. Bit transitions are recorded on
+every link exactly as the paper's Fig. 8 recorder does: the previous word a
+link carried is XORed with the current one and the popcount accumulates.
+
+Simplifications (documented in DESIGN.md):
+  * static VC assignment - a packet keeps its VC index end-to-end
+    ("straight-through" mapping). Link-level interleaving between packets on
+    different VCs/ports - the phenomenon the paper stresses - is preserved;
+    only the VC-reallocation stage of an IQ router is elided.
+  * single-cycle routers (route + arbitrate + traverse in one cycle).
+  * result traffic (PE->MC) is not modeled; the paper's figures measure the
+    distribution traffic (inputs/weights), which dominates volume.
+
+Everything is fixed-shape and jitted; a Python driver loop runs jitted
+chunks of cycles until the network drains.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bits import popcount
+from .topology import (NocConfig, NUM_PORTS, OPPOSITE, PORT_LOCAL,
+                       neighbor_table, xy_route)
+
+__all__ = ["Traffic", "SimState", "SimResult", "simulate", "make_state"]
+
+# Flit meta bitfield
+META_PAYLOAD = 1
+META_TAIL = 2
+
+
+class Traffic(NamedTuple):
+    """Per-MC injection streams, padded to a common length T.
+
+    words:  (M, T, L) uint32 - flit payloads as they appear on the wire
+    dest:   (M, T) int32     - destination router id
+    meta:   (M, T) int32     - META_* bitfield
+    vc:     (M, T) int32     - static VC assignment (round-robin per packet)
+    pkt:    (M, T) int32     - packet id (for conservation checks)
+    length: (M,) int32       - real stream length per MC
+    """
+
+    words: jax.Array
+    dest: jax.Array
+    meta: jax.Array
+    vc: jax.Array
+    pkt: jax.Array
+    length: jax.Array
+
+
+class SimState(NamedTuple):
+    # FIFO contents; router axis padded by one phantom row absorbing
+    # masked-out scatters.
+    words: jax.Array   # (NR+1, P, V, D, L) uint32
+    dest: jax.Array    # (NR+1, P, V, D) int32
+    meta: jax.Array    # (NR+1, P, V, D) int32
+    pkt: jax.Array     # (NR+1, P, V, D) int32
+    head: jax.Array    # (NR+1, P, V) int32
+    count: jax.Array   # (NR+1, P, V) int32
+    rr: jax.Array      # (NR, P) int32 round-robin pointer per output port
+    link_last: jax.Array  # (NR, P, L) uint32 last word per output link
+    link_bt: jax.Array    # (NR, P) int32 accumulated transitions
+    link_flits: jax.Array # (NR, P) int32 flits traversed
+    inj_ptr: jax.Array    # (M,) int32
+    inj_last: jax.Array   # (M, L) uint32 NI link state
+    inj_bt: jax.Array     # (M,) int32
+    ejected: jax.Array    # () int32 flits delivered
+    cycle: jax.Array      # () int32
+
+
+@dataclasses.dataclass
+class SimResult:
+    cycles: int
+    ejected: int
+    injected: int
+    link_bt: np.ndarray      # (NR, P) per-output-link transitions
+    link_flits: np.ndarray
+    inj_bt: np.ndarray       # (M,) NI-link transitions
+    total_bt: int            # inter-router + ejection + NI links
+    inter_router_bt: int
+
+    @property
+    def bt_per_flit(self) -> float:
+        return self.total_bt / max(int(self.link_flits.sum()), 1)
+
+
+def make_state(cfg: NocConfig, num_mcs: int) -> SimState:
+    nr, p, v, d, l = cfg.num_routers, NUM_PORTS, cfg.num_vcs, cfg.vc_depth, cfg.lanes
+    return SimState(
+        words=jnp.zeros((nr + 1, p, v, d, l), jnp.uint32),
+        dest=jnp.zeros((nr + 1, p, v, d), jnp.int32),
+        meta=jnp.zeros((nr + 1, p, v, d), jnp.int32),
+        pkt=jnp.zeros((nr + 1, p, v, d), jnp.int32),
+        head=jnp.zeros((nr + 1, p, v), jnp.int32),
+        count=jnp.zeros((nr + 1, p, v), jnp.int32),
+        rr=jnp.zeros((nr, p), jnp.int32),
+        link_last=jnp.zeros((nr, p, l), jnp.uint32),
+        link_bt=jnp.zeros((nr, p), jnp.int32),
+        link_flits=jnp.zeros((nr, p), jnp.int32),
+        inj_ptr=jnp.zeros((num_mcs,), jnp.int32),
+        inj_last=jnp.zeros((num_mcs, l), jnp.uint32),
+        inj_bt=jnp.zeros((num_mcs,), jnp.int32),
+        ejected=jnp.zeros((), jnp.int32),
+        cycle=jnp.zeros((), jnp.int32),
+    )
+
+
+def _front(state: SimState, nr: int):
+    """Gather the front flit of every FIFO -> (NR, P, V, ...)."""
+    idx = state.head[:nr, :, :, None]
+    fw = jnp.take_along_axis(state.words[:nr], idx[..., None], axis=3)[:, :, :, 0]
+    fd = jnp.take_along_axis(state.dest[:nr], idx, axis=3)[:, :, :, 0]
+    fm = jnp.take_along_axis(state.meta[:nr], idx, axis=3)[:, :, :, 0]
+    fp = jnp.take_along_axis(state.pkt[:nr], idx, axis=3)[:, :, :, 0]
+    return fw, fd, fm, fp
+
+
+def _make_step(cfg: NocConfig, traffic: Traffic, count_headers: bool):
+    nr, p, v, d, l = cfg.num_routers, NUM_PORTS, cfg.num_vcs, cfg.vc_depth, cfg.lanes
+    m = traffic.length.shape[0]
+    nslots = p * v
+    route = xy_route(cfg)                      # (NR, NR)
+    nb = neighbor_table(cfg)                   # (NR, P)
+    opp = jnp.asarray(OPPOSITE)
+    mc_nodes = jnp.asarray(cfg.mc_nodes, jnp.int32)
+    t_cap = traffic.words.shape[1]
+
+    def step(state: SimState, _):
+        valid = state.count[:nr] > 0                       # (NR, P, V)
+        fw, fd, fm, fp = _front(state, nr)
+
+        # --- route computation (X-Y, deterministic) ---
+        rid = jnp.arange(nr)[:, None, None]
+        out_port = route[rid, fd]                          # (NR, P, V)
+
+        # --- credit check: downstream FIFO (same VC) has space ---
+        down = nb[rid, out_port]                            # (NR, P, V)
+        down_ip = opp[out_port]
+        vcs = jnp.arange(v)[None, None, :]
+        down_cnt = state.count[jnp.where(down < 0, nr, down), down_ip, vcs]
+        is_eject = out_port == PORT_LOCAL
+        space = jnp.where(is_eject, True, (down >= 0) & (down_cnt < d))
+        request = valid & space                             # (NR, P, V)
+
+        # --- switch allocation: round-robin per (router, out_port) ---
+        # req_po[r, o, slot]: slot = p*V + v requests output o
+        slot_req = request.reshape(nr, nslots)
+        slot_out = out_port.reshape(nr, nslots)
+        outs = jnp.arange(NUM_PORTS)[None, :, None]
+        req_po = slot_req[:, None, :] & (slot_out[:, None, :] == outs)
+        rot_idx = (jnp.arange(nslots)[None, None, :] + state.rr[:, :, None]) % nslots
+        rot = jnp.take_along_axis(req_po, rot_idx, axis=2)
+        has = jnp.any(rot, axis=2)                          # (NR, P_out)
+        first = jnp.argmax(rot, axis=2)
+        winner = (first + state.rr) % nslots                # (NR, P_out)
+        rr_new = jnp.where(has, (winner + 1) % nslots, state.rr)
+
+        # --- pops ---
+        onehot = (jnp.arange(nslots)[None, None, :] == winner[:, :, None]) & has[:, :, None]
+        pop = jnp.any(onehot, axis=1).reshape(nr, p, v)     # (NR, P, V)
+        head_new = jnp.where(pop, (state.head[:nr] + 1) % d, state.head[:nr])
+        count_new = state.count[:nr] - pop.astype(jnp.int32)
+        head2 = state.head.at[:nr].set(head_new)
+        count2 = state.count.at[:nr].set(count_new)
+
+        # --- gather moved flits per (router, out_port) ---
+        win_p = winner // v
+        win_v = winner % v
+        r2 = jnp.arange(nr)[:, None]
+        mv_word = fw[r2, win_p, win_v]                      # (NR, P_out, L)
+        mv_dest = fd[r2, win_p, win_v]
+        mv_meta = fm[r2, win_p, win_v]
+        mv_pkt = fp[r2, win_p, win_v]
+
+        # --- link BT recording (the Fig. 8 recorder) ---
+        tog = popcount(state.link_last ^ mv_word).sum(-1).astype(jnp.int32)
+        if count_headers:
+            counted = has
+        else:
+            counted = has & ((mv_meta & META_PAYLOAD) > 0)
+        link_bt = state.link_bt + jnp.where(counted, tog, 0)
+        link_flits = state.link_flits + has.astype(jnp.int32)
+        link_last = jnp.where(has[:, :, None], mv_word, state.link_last)
+
+        # --- pushes into downstream FIFOs ---
+        o_ids = jnp.arange(NUM_PORTS)[None, :]
+        push_ok = has & (o_ids != PORT_LOCAL)
+        down_r = nb[jnp.arange(nr)[:, None], o_ids]         # (NR, P_out)
+        tgt_r = jnp.where(push_ok & (down_r >= 0), down_r, nr)  # phantom row
+        tgt_p = opp[o_ids] * jnp.ones((nr, 1), jnp.int32)
+        tgt_v = win_v
+        slot = (head2[tgt_r, tgt_p, tgt_v] + count2[tgt_r, tgt_p, tgt_v]) % d
+
+        fr, fo = tgt_r.reshape(-1), tgt_p.reshape(-1)
+        fv, fs = tgt_v.reshape(-1), slot.reshape(-1)
+        words3 = state.words.at[fr, fo, fv, fs].set(mv_word.reshape(-1, l))
+        dest3 = state.dest.at[fr, fo, fv, fs].set(mv_dest.reshape(-1))
+        meta3 = state.meta.at[fr, fo, fv, fs].set(mv_meta.reshape(-1))
+        pkt3 = state.pkt.at[fr, fo, fv, fs].set(mv_pkt.reshape(-1))
+        count3 = count2.at[fr, fo, fv].add(push_ok.reshape(-1).astype(jnp.int32))
+
+        ejected = state.ejected + jnp.sum(has & (o_ids == PORT_LOCAL))
+
+        # --- injection: one flit per MC per cycle into the local in-port ---
+        ptr = state.inj_ptr
+        active = ptr < traffic.length
+        safe_ptr = jnp.minimum(ptr, t_cap - 1)
+        mrange = jnp.arange(m)
+        iw = traffic.words[mrange, safe_ptr]                # (M, L)
+        idst = traffic.dest[mrange, safe_ptr]
+        imeta = traffic.meta[mrange, safe_ptr]
+        ivc = traffic.vc[mrange, safe_ptr]
+        ipkt = traffic.pkt[mrange, safe_ptr]
+        mc_cnt = count3[mc_nodes, PORT_LOCAL, ivc]
+        can = active & (mc_cnt < d)
+        tgt_mr = jnp.where(can, mc_nodes, nr)
+        islot = (head2[tgt_mr, PORT_LOCAL, ivc] + count3[tgt_mr, PORT_LOCAL, ivc]) % d
+        words4 = words3.at[tgt_mr, PORT_LOCAL, ivc, islot].set(iw)
+        dest4 = dest3.at[tgt_mr, PORT_LOCAL, ivc, islot].set(idst)
+        meta4 = meta3.at[tgt_mr, PORT_LOCAL, ivc, islot].set(imeta)
+        pkt4 = pkt3.at[tgt_mr, PORT_LOCAL, ivc, islot].set(ipkt)
+        count4 = count3.at[tgt_mr, PORT_LOCAL, ivc].add(can.astype(jnp.int32))
+        ptr_new = ptr + can.astype(jnp.int32)
+
+        # NI-link BT (MC -> router); the ordering unit sits right before it.
+        itog = popcount(state.inj_last ^ iw).sum(-1).astype(jnp.int32)
+        if count_headers:
+            icounted = can
+        else:
+            icounted = can & ((imeta & META_PAYLOAD) > 0)
+        inj_bt = state.inj_bt + jnp.where(icounted, itog, 0)
+        inj_last = jnp.where(can[:, None], iw, state.inj_last)
+
+        new = SimState(words4, dest4, meta4, pkt4, head2, count4, rr_new,
+                       link_last, link_bt, link_flits, ptr_new, inj_last,
+                       inj_bt, ejected, state.cycle + 1)
+        return new, ()
+
+    return step
+
+
+def simulate(cfg: NocConfig, traffic: Traffic, *, count_headers: bool = True,
+             max_cycles: int = 2_000_000, chunk: int = 4096) -> SimResult:
+    """Run the NoC until all traffic drains; returns per-link BT counts."""
+    m = int(traffic.length.shape[0])
+    if m != cfg.num_mcs:
+        raise ValueError(f"traffic has {m} MC streams, config has {cfg.num_mcs}")
+    state = make_state(cfg, m)
+    step = _make_step(cfg, traffic, count_headers)
+
+    @jax.jit
+    def run_chunk(s):
+        s, _ = jax.lax.scan(step, s, None, length=chunk)
+        return s
+
+    nr = cfg.num_routers
+    total = int(np.sum(np.asarray(traffic.length)))
+    while True:
+        state = run_chunk(state)
+        drained = (int(state.ejected) == total)
+        if drained or int(state.cycle) >= max_cycles:
+            break
+    if int(state.ejected) != total:
+        raise RuntimeError(
+            f"NoC did not drain: {int(state.ejected)}/{total} flits ejected "
+            f"after {int(state.cycle)} cycles")
+
+    link_bt = np.asarray(state.link_bt)
+    link_flits = np.asarray(state.link_flits)
+    inj_bt = np.asarray(state.inj_bt)
+    inter = int(link_bt[:, :PORT_LOCAL].sum())
+    total_bt = int(link_bt.sum() + inj_bt.sum())
+    return SimResult(
+        cycles=int(state.cycle), ejected=int(state.ejected), injected=total,
+        link_bt=link_bt, link_flits=link_flits, inj_bt=inj_bt,
+        total_bt=total_bt, inter_router_bt=inter)

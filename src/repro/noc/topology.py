@@ -1,0 +1,129 @@
+"""2D-mesh NoC topology: coordinates, X-Y routing, MC placement.
+
+Matches the paper's evaluated configurations (Sec. V-B): a 4x4 mesh with
+2 memory controllers, and 8x8 meshes with 4 or 8 MCs. Routers use
+dimension-ordered X-Y routing (X first, then Y), which is deadlock-free on
+a mesh with credit-based flow control.
+
+Port numbering (inputs and outputs symmetric):
+    0=N  1=E  2=S  3=W  4=Local (input side: injection from the MC/PE NI;
+                                 output side: ejection to the PE)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["NocConfig", "PORT_N", "PORT_E", "PORT_S", "PORT_W", "PORT_LOCAL",
+           "NUM_PORTS", "OPPOSITE", "xy_route", "neighbor_table", "PAPER_NOCS"]
+
+PORT_N, PORT_E, PORT_S, PORT_W, PORT_LOCAL = 0, 1, 2, 3, 4
+NUM_PORTS = 5
+# The flit leaving out-port p of a router enters in-port OPPOSITE[p] of the
+# neighbor: N<->S, E<->W.
+OPPOSITE = np.array([PORT_S, PORT_W, PORT_N, PORT_E, PORT_LOCAL])
+
+
+@dataclasses.dataclass(frozen=True)
+class NocConfig:
+    """Static NoC parameters (paper defaults: 4 VCs x 4-flit buffers)."""
+
+    rows: int
+    cols: int
+    mc_nodes: Tuple[int, ...]      # router ids hosting memory controllers
+    num_vcs: int = 4
+    vc_depth: int = 4
+    lanes: int = 16                # values per flit (512b/f32, 128b/fx8)
+
+    @property
+    def num_routers(self) -> int:
+        return self.rows * self.cols
+
+    @property
+    def num_mcs(self) -> int:
+        return len(self.mc_nodes)
+
+    @property
+    def pe_nodes(self) -> Tuple[int, ...]:
+        return tuple(r for r in range(self.num_routers) if r not in self.mc_nodes)
+
+    @property
+    def num_inter_router_links(self) -> int:
+        """Bidirectional inter-router links: 2*R*C - R - C each direction pair.
+
+        The paper counts 112 for an 8x8 mesh: 2*8*7 = 112 bidirectional.
+        """
+        return self.rows * (self.cols - 1) + self.cols * (self.rows - 1)
+
+    def coords(self, node: int) -> Tuple[int, int]:
+        return divmod(node, self.cols)
+
+    def node(self, r: int, c: int) -> int:
+        return r * self.cols + c
+
+
+def xy_route(cfg: NocConfig):
+    """Precompute the X-Y routing table: out_port[router, dest] -> port id."""
+    nr = cfg.num_routers
+    table = np.zeros((nr, nr), dtype=np.int32)
+    for cur in range(nr):
+        r, c = divmod(cur, cfg.cols)
+        for dst in range(nr):
+            dr, dc = divmod(dst, cfg.cols)
+            if dc > c:
+                table[cur, dst] = PORT_E
+            elif dc < c:
+                table[cur, dst] = PORT_W
+            elif dr > r:
+                table[cur, dst] = PORT_S
+            elif dr < r:
+                table[cur, dst] = PORT_N
+            else:
+                table[cur, dst] = PORT_LOCAL
+    return jnp.asarray(table)
+
+
+def neighbor_table(cfg: NocConfig):
+    """neighbor[router, out_port] -> downstream router id, -1 at mesh edge."""
+    nr = cfg.num_routers
+    nb = -np.ones((nr, NUM_PORTS), dtype=np.int32)
+    for cur in range(nr):
+        r, c = divmod(cur, cfg.cols)
+        if r > 0:
+            nb[cur, PORT_N] = cfg.node(r - 1, c)
+        if c < cfg.cols - 1:
+            nb[cur, PORT_E] = cfg.node(r, c + 1)
+        if r < cfg.rows - 1:
+            nb[cur, PORT_S] = cfg.node(r + 1, c)
+        if c > 0:
+            nb[cur, PORT_W] = cfg.node(r, c - 1)
+    return jnp.asarray(nb)
+
+
+def _edge_spread(rows: int, cols: int, n: int) -> Tuple[int, ...]:
+    """Spread n MCs across the mesh boundary, evenly spaced.
+
+    The paper does not pin MC coordinates; edge placement next to the
+    off-chip interface is the standard choice (Fig. 6 places ordering units
+    between DRAM and the NoC boundary).
+    """
+    border = []
+    # top row L->R, right col T->B, bottom row R->L, left col B->T
+    border += [(0, c) for c in range(cols)]
+    border += [(r, cols - 1) for r in range(1, rows)]
+    border += [(rows - 1, c) for c in range(cols - 2, -1, -1)]
+    border += [(r, 0) for r in range(rows - 2, 0, -1)]
+    step = len(border) / n
+    picks = [border[int(i * step)] for i in range(n)]
+    return tuple(r * cols + c for r, c in picks)
+
+
+# The paper's three evaluated NoC configurations (Sec. V-B).
+PAPER_NOCS = {
+    "4x4_mc2": NocConfig(4, 4, _edge_spread(4, 4, 2)),
+    "8x8_mc4": NocConfig(8, 8, _edge_spread(8, 8, 4)),
+    "8x8_mc8": NocConfig(8, 8, _edge_spread(8, 8, 8)),
+}

@@ -1,0 +1,160 @@
+"""DNN layer traffic -> packetized flit streams for the NoC simulator.
+
+Models the paper's NOC-DNA dataflow (Fig. 7): memory controllers fetch
+(input, weight) operand streams from off-chip memory, run them through the
+ordering unit (a WireTransform), packetize into flits - inputs in the left
+half-flit, weights in the right (Fig. 2) - and inject toward the PE assigned
+to each neuron computation.
+
+A *packet* carries the operands for one neuron (one output position x output
+channel for conv; one output unit for linear): K (input, weight) pairs plus
+one header flit. The ordering window is the packet payload, matching the
+paper's ordering-unit-per-MC placement (it sees one packet at a time).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.wire import WireTransform
+from repro.core.flits import pack_paired
+from .topology import NocConfig
+from .sim import Traffic, META_PAYLOAD, META_TAIL
+
+__all__ = ["LayerTraffic", "build_traffic", "conv_layer_traffic",
+           "linear_layer_traffic"]
+
+
+@dataclasses.dataclass
+class LayerTraffic:
+    """(input, weight) operand pairs for every neuron of one layer.
+
+    inputs:  (num_neurons, k) - receptive-field values per neuron
+    weights: (num_neurons, k) - the matching kernel values
+    """
+
+    inputs: jax.Array
+    weights: jax.Array
+
+    def __post_init__(self):
+        if self.inputs.shape != self.weights.shape:
+            raise ValueError("inputs/weights must be (num_neurons, k) alike")
+
+
+def conv_layer_traffic(x: jax.Array, w: jax.Array) -> LayerTraffic:
+    """im2col a conv layer: x (H, W, Cin), w (kh, kw, Cin, Cout), VALID conv.
+
+    Neuron = (output position, output channel); k = kh*kw*Cin.
+    """
+    kh, kw, cin, cout = w.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x[None].astype(jnp.float32), (kh, kw), (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))[0]
+    oh, ow, k = patches.shape
+    patches = patches.reshape(oh * ow, k).astype(x.dtype)
+    wcol = w.reshape(k, cout).T                      # (Cout, k)
+    # neuron ordering: all positions of channel 0, then channel 1, ...
+    inputs = jnp.tile(patches, (cout, 1))
+    weights = jnp.repeat(wcol, oh * ow, axis=0)
+    return LayerTraffic(inputs, weights)
+
+
+def linear_layer_traffic(x: jax.Array, w: jax.Array) -> LayerTraffic:
+    """x (k,), w (out, k): one packet per output unit."""
+    out, k = w.shape
+    inputs = jnp.broadcast_to(x[None, :], (out, k))
+    return LayerTraffic(inputs, w)
+
+
+def _header_word(dest: int, pkt_id: int, n_payload: int, lanes: int) -> np.ndarray:
+    h = np.zeros((lanes,), np.uint32)
+    h[0], h[1], h[2] = dest, pkt_id & 0xFFFFFFFF, n_payload
+    return h
+
+
+def build_traffic(
+    layers: Sequence[LayerTraffic],
+    cfg: NocConfig,
+    transform: WireTransform,
+    *,
+    quantizer=None,
+    max_packets_per_layer: Optional[int] = None,
+) -> Traffic:
+    """Packetize layers under a WireTransform into per-MC injection streams.
+
+    quantizer: optional value -> wire-dtype map (e.g. fixed-8 quantization);
+        default transmits raw float32 words.
+    max_packets_per_layer: subsample neurons (deterministic stride) to bound
+        simulation time; BT rates are per-flit so subsampling is unbiased.
+    """
+    m = cfg.num_mcs
+    pes = np.asarray(cfg.pe_nodes, np.int32)
+    streams: List[List[np.ndarray]] = [[] for _ in range(m)]     # words
+    meta: List[List[np.ndarray]] = [[] for _ in range(m)]        # (dest, meta, vc, pkt)
+    vc_rr = [0] * m
+    pkt_id = 0
+    pe_rr = 0
+
+    for layer in layers:
+        inp, wgt = layer.inputs, layer.weights
+        n = int(inp.shape[0])
+        if max_packets_per_layer is not None and n > max_packets_per_layer:
+            stride = n // max_packets_per_layer
+            idx = jnp.arange(0, stride * max_packets_per_layer, stride)
+            inp, wgt = inp[idx], wgt[idx]
+            n = int(inp.shape[0])
+        if quantizer is not None:
+            inp, wgt = quantizer(inp), quantizer(wgt)
+        # Apply the ordering transform per packet, vectorized over neurons.
+        def one_packet(i, w):
+            stream = transform.apply(i, w, cfg.lanes)
+            return stream.words
+        words = jax.vmap(one_packet)(inp, wgt)      # (n, F, L)
+        words = np.asarray(words.astype(jnp.uint32))
+        n_flits = words.shape[1]
+        for j in range(n):
+            mc = (pkt_id % m)
+            dest = int(pes[pe_rr % len(pes)])
+            pe_rr += 1
+            header = _header_word(dest, pkt_id, n_flits, cfg.lanes)
+            pkt_words = np.concatenate([header[None], words[j]], axis=0)
+            f = pkt_words.shape[0]
+            md = np.full((f,), META_PAYLOAD, np.int32)
+            md[0] = 0
+            md[-1] |= META_TAIL
+            vc = vc_rr[mc] % cfg.num_vcs
+            vc_rr[mc] += 1
+            streams[mc].append(pkt_words)
+            meta[mc].append(np.stack([
+                np.full((f,), dest, np.int32),
+                md,
+                np.full((f,), vc, np.int32),
+                np.full((f,), pkt_id, np.int32)], axis=1))
+            pkt_id += 1
+
+    lengths = np.array([sum(len(x) for x in s) for s in streams], np.int32)
+    t = int(lengths.max()) if len(lengths) else 0
+    l = cfg.lanes
+    words_arr = np.zeros((m, t, l), np.uint32)
+    dest_arr = np.zeros((m, t), np.int32)
+    meta_arr = np.zeros((m, t), np.int32)
+    vc_arr = np.zeros((m, t), np.int32)
+    pkt_arr = np.zeros((m, t), np.int32)
+    for mc in range(m):
+        if not streams[mc]:
+            continue
+        w = np.concatenate(streams[mc], axis=0)
+        md = np.concatenate(meta[mc], axis=0)
+        words_arr[mc, :w.shape[0]] = w
+        dest_arr[mc, :w.shape[0]] = md[:, 0]
+        meta_arr[mc, :w.shape[0]] = md[:, 1]
+        vc_arr[mc, :w.shape[0]] = md[:, 2]
+        pkt_arr[mc, :w.shape[0]] = md[:, 3]
+    return Traffic(
+        words=jnp.asarray(words_arr), dest=jnp.asarray(dest_arr),
+        meta=jnp.asarray(meta_arr), vc=jnp.asarray(vc_arr),
+        pkt=jnp.asarray(pkt_arr), length=jnp.asarray(lengths))

@@ -1,0 +1,6 @@
+from .adamw import AdamW, AdamWState
+from .schedules import wsd, cosine, constant
+from .clip import clip_by_global_norm
+
+__all__ = ["AdamW", "AdamWState", "wsd", "cosine", "constant",
+           "clip_by_global_norm"]

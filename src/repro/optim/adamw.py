@@ -1,0 +1,153 @@
+"""Functional AdamW with optional block-wise int8 second/first moments.
+
+The int8 state path (``state_dtype='int8'``) is the distributed-optimization
+trick that lets kimi-k2 (1T params) fit v5e HBM: m and v are stored as int8
+with one fp32 scale per 256-element block (bnb-style), dequantized on the
+fly inside the update. States shard exactly like their parameters.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "AdamWState"]
+
+_BLOCK = 256
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: object     # pytree matching params (fp32 or Q8 pair)
+    v: object
+
+
+class Q8(NamedTuple):
+    """Block-quantized moment tensor.
+
+    Blocks run along the LAST axis of the parameter: q has shape
+    param.shape[:-1] + (ceil(last/256), 256) and scale drops the final 256.
+    This keeps every leading axis identical to the parameter's, so the
+    quantized state inherits the parameter's sharding verbatim - a flat
+    (-1, 256) layout forces GSPMD to reshard (all-gather) terabytes on the
+    1T-param config (EXPERIMENTS.md SSPerf, kimi iteration 2).
+    """
+
+    q: jax.Array        # uint8 codes
+    scale: jax.Array    # fp32 per-block absmax scales
+
+
+def _dynamic_table(signed: bool) -> jnp.ndarray:
+    """bnb-style dynamic 8-bit code: log-spaced magnitudes so that values
+    many orders below the block max still quantize to nonzero - linear
+    absmax codes zero them out, which blows up 1/sqrt(v) in Adam."""
+    if signed:
+        pos = jnp.logspace(-6.0, 0.0, 127)
+        return jnp.concatenate([-pos[::-1], jnp.zeros((1,)), pos]).astype(jnp.float32)
+    pos = jnp.logspace(-7.0, 0.0, 255)
+    return jnp.concatenate([jnp.zeros((1,)), pos]).astype(jnp.float32)
+
+
+_TABLE_SIGNED = _dynamic_table(True)       # 255 entries
+_TABLE_UNSIGNED = _dynamic_table(False)    # 256 entries
+
+
+def _q8_shape(shape):
+    last = shape[-1] if shape else 1
+    nb = -(-last // _BLOCK)
+    lead = tuple(shape[:-1]) if shape else ()
+    return lead + (nb, _BLOCK), lead + (nb,)
+
+
+def _q8_encode(x: jax.Array, signed: bool) -> Q8:
+    table = _TABLE_SIGNED if signed else _TABLE_UNSIGNED
+    qshape, sshape = _q8_shape(x.shape)
+    last = x.shape[-1] if x.ndim else 1
+    pad = qshape[-2] * _BLOCK - last
+    xb = x.reshape(x.shape or (1,))
+    if pad:
+        xb = jnp.pad(xb, [(0, 0)] * (xb.ndim - 1) + [(0, pad)])
+    blocks = xb.reshape(qshape)
+    scale = jnp.maximum(jnp.max(jnp.abs(blocks), axis=-1), 1e-12)
+    y = blocks / scale[..., None]
+    # nearest-entry code via midpoint boundaries
+    mids = (table[1:] + table[:-1]) * 0.5
+    q = jnp.searchsorted(mids, y).astype(jnp.uint8)
+    return Q8(q, scale.astype(jnp.float32))
+
+
+def _q8_decode(s: Q8, shape, signed: bool) -> jax.Array:
+    table = _TABLE_SIGNED if signed else _TABLE_UNSIGNED
+    vals = table[s.q.astype(jnp.int32)] * s.scale[..., None]
+    lead = shape[:-1] if shape else ()
+    last = shape[-1] if shape else 1
+    flat_last = vals.reshape(lead + (-1,))[..., :last]
+    return flat_last.reshape(shape)
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr_fn: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    state_dtype: str = "fp32"      # "fp32" | "int8"
+
+    def init(self, params) -> AdamWState:
+        if self.state_dtype == "int8":
+            def zero_m(p):
+                qs, ss = _q8_shape(p.shape)
+                # code 127 = 0.0 in the signed table
+                return Q8(jnp.full(qs, 127, jnp.uint8),
+                          jnp.full(ss, 1e-12, jnp.float32))
+            def zero_v(p):
+                qs, ss = _q8_shape(p.shape)
+                # code 0 = 0.0 in the unsigned table
+                return Q8(jnp.zeros(qs, jnp.uint8),
+                          jnp.full(ss, 1e-12, jnp.float32))
+            m = jax.tree.map(zero_m, params)
+            v = jax.tree.map(zero_v, params)
+        else:
+            zero = lambda p: jnp.zeros(p.shape, jnp.float32)
+            m = jax.tree.map(zero, params)
+            v = jax.tree.map(zero, params)
+        return AdamWState(jnp.zeros((), jnp.int32), m, v)
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        lr = self.lr_fn(step)
+        b1, b2 = self.b1, self.b2
+        c1 = 1 - b1 ** step.astype(jnp.float32)
+        c2 = 1 - b2 ** step.astype(jnp.float32)
+        q8 = self.state_dtype == "int8"
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            mf = _q8_decode(m, p.shape, signed=True) if q8 else m
+            vf = _q8_decode(v, p.shape, signed=False) if q8 else v
+            mf = b1 * mf + (1 - b1) * g
+            vf = b2 * vf + (1 - b2) * jnp.square(g)
+            mhat = mf / c1
+            vhat = vf / c2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decay matrices only, standard practice
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            if q8:
+                return new_p, _q8_encode(mf, signed=True), _q8_encode(vf, signed=False)
+            return new_p, mf, vf
+
+        leaves_p, tdef = jax.tree.flatten(params)
+        leaves_g = tdef.flatten_up_to(grads)
+        is_q8 = lambda x: isinstance(x, Q8)
+        leaves_m = jax.tree.flatten(state.m, is_leaf=is_q8)[0]
+        leaves_v = jax.tree.flatten(state.v, is_leaf=is_q8)[0]
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(leaves_p, leaves_g, leaves_m, leaves_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step, new_m, new_v)

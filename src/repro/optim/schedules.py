@@ -1,0 +1,39 @@
+"""LR schedules. WSD (warmup-stable-decay) is the MiniCPM schedule the
+assigned minicpm-2b config calls for; cosine is the default elsewhere."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["wsd", "cosine", "constant"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 100, min_ratio: float = 0.1):
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos).astype(jnp.float32)
+    return fn
+
+
+def wsd(lr: float, total_steps: int, warmup: int = 100,
+        decay_frac: float = 0.1, min_ratio: float = 0.01):
+    """Warmup-Stable-Decay (MiniCPM): linear warmup, long stable plateau,
+    sharp exponential-style decay over the final ``decay_frac`` of steps."""
+    decay_start = int(total_steps * (1 - decay_frac))
+
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / max(warmup, 1)
+        t = jnp.clip((step - decay_start) / max(total_steps - decay_start, 1), 0.0, 1.0)
+        decay = lr * (min_ratio ** t)
+        stable = jnp.asarray(lr, jnp.float32)
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < decay_start, stable, decay))
+        return out.astype(jnp.float32)
+    return fn

@@ -1,0 +1,3 @@
+from .fixed_point import quantize_fixed8, dequantize_fixed8, FixedPointParams
+
+__all__ = ["quantize_fixed8", "dequantize_fixed8", "FixedPointParams"]

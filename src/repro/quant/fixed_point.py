@@ -1,0 +1,40 @@
+"""Fixed-point-8 quantization (the paper's fixed-8 data format).
+
+The paper transmits 8-bit fixed-point weights/activations over 128-bit links
+(16 values per flit). We use symmetric per-tensor fixed-point: a power-of-two
+scale (true fixed point, not affine int8), which is both what "fixed-point"
+means in the NoC literature and what keeps dequantization a pure shift.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["FixedPointParams", "quantize_fixed8", "dequantize_fixed8"]
+
+
+class FixedPointParams(NamedTuple):
+    values: jax.Array    # int8 payload (two's complement on the wire)
+    frac_bits: jax.Array # scalar int32: number of fractional bits
+
+
+def quantize_fixed8(x: jax.Array) -> FixedPointParams:
+    """Quantize float data to Q(7-f).f fixed point, f chosen per tensor.
+
+    f = 7 - ceil(log2(max|x|)) clamped to [0, 7]: the largest power-of-two
+    scale under which the tensor does not overflow int8.
+    """
+    amax = jnp.max(jnp.abs(x))
+    amax = jnp.maximum(amax, jnp.float32(1e-12))
+    int_bits = jnp.ceil(jnp.log2(amax)).astype(jnp.int32)
+    frac_bits = jnp.clip(7 - int_bits, 0, 7)
+    scale = jnp.exp2(frac_bits.astype(jnp.float32))
+    q = jnp.clip(jnp.round(x * scale), -128, 127).astype(jnp.int8)
+    return FixedPointParams(q, frac_bits)
+
+
+def dequantize_fixed8(p: FixedPointParams) -> jax.Array:
+    scale = jnp.exp2(-p.frac_bits.astype(jnp.float32))
+    return p.values.astype(jnp.float32) * scale

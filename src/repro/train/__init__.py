@@ -1,0 +1,4 @@
+from .loop import TrainState, make_train_step, init_state
+from . import checkpoint, elastic
+
+__all__ = ["TrainState", "make_train_step", "init_state", "checkpoint", "elastic"]

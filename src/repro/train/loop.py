@@ -1,0 +1,74 @@
+"""Train-step factory: loss -> grads -> clip -> AdamW, with optional
+microbatch gradient accumulation and gradient-wire BT telemetry.
+
+``make_train_step`` returns a pure function suitable for jax.jit/pjit -
+the dry-run lowers exactly this function at full scale, so everything the
+production step does (optimizer included) is in the compiled HLO and hence
+in the roofline numbers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import AdamW, clip_by_global_norm
+from repro.dist.ordered_collectives import gradient_wire_report
+
+__all__ = ["TrainState", "make_train_step", "init_state"]
+
+
+class TrainState(NamedTuple):
+    params: object
+    opt: object
+
+
+def init_state(params, optimizer: AdamW) -> TrainState:
+    return TrainState(params, optimizer.init(params))
+
+
+def make_train_step(loss_fn: Callable, optimizer: AdamW, *,
+                    max_grad_norm: float = 1.0,
+                    microbatches: int = 1,
+                    wire_telemetry: bool = False):
+    """loss_fn(params, batch) -> scalar. Returns step(state, batch) ->
+    (state, metrics). ``microbatches`` > 1 splits the batch on axis 0 and
+    accumulates grads in fp32 (activation-memory lever for the hillclimb).
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def accumulate(params, batch):
+        def micro(i, carry):
+            acc, loss_acc = carry
+            mb = jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(
+                    x, i * (x.shape[0] // microbatches),
+                    x.shape[0] // microbatches, 0), batch)
+            loss, g = grads_of(params, mb)
+            acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+            return acc, loss_acc + loss
+        zero = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        acc, loss_sum = jax.lax.fori_loop(
+            0, microbatches, micro, (zero, jnp.zeros((), jnp.float32)))
+        g = jax.tree.map(lambda a: a / microbatches, acc)
+        return loss_sum / microbatches, g
+
+    def step(state: TrainState, batch):
+        if microbatches > 1:
+            loss, grads = accumulate(state.params, batch)
+        else:
+            loss, grads = grads_of(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        new_params, new_opt = optimizer.update(grads, state.opt, state.params)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": optimizer.lr_fn(state.opt.step + 1)}
+        if wire_telemetry:
+            metrics["wire"] = gradient_wire_report(grads, state.params)
+        return TrainState(new_params, new_opt), metrics
+
+    return step

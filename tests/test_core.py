@@ -1,0 +1,142 @@
+"""Unit tests: bit primitives, flit packing, BT metrics, orderings."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (bits, pack, pack_paired, unpack, bt_stream,
+                        bt_per_flit, bt_between, expected_bt_pair,
+                        pairing_objective, descending_order, affiliated_order,
+                        separated_order, descending_perm, inverse_permutation,
+                        index_overhead_bits)
+from repro.core.bits import popcount, transitions
+from repro.core.ordering import pad_to_window
+
+
+def test_popcount_known_values():
+    x = jnp.array([0, 1, 3, 255, 2**31], dtype=jnp.uint32)
+    assert popcount(x).tolist() == [0, 1, 2, 8, 1]
+
+
+def test_popcount_float_bitpattern():
+    # -0.0 is 0x80000000 -> one '1' bit; 1.0 is 0x3F800000 -> 7 ones
+    x = jnp.array([-0.0, 1.0, 0.0], dtype=jnp.float32)
+    assert popcount(x).tolist() == [1, 7, 0]
+
+
+def test_popcount_int8():
+    x = jnp.array([-1, 0, 1, -128], dtype=jnp.int8)  # 0xFF, 0, 1, 0x80
+    assert popcount(x).tolist() == [8, 0, 1, 1]
+
+
+def test_transitions_symmetric_zero_on_equal():
+    a = jnp.array([7, 9], dtype=jnp.uint32)
+    assert transitions(a, a).tolist() == [0, 0]
+    b = jnp.array([0, 0xFFFFFFFF], dtype=jnp.uint32)
+    assert transitions(b, jnp.zeros_like(b)).tolist() == [0, 32]
+
+
+def test_pack_pads_with_zeros_and_roundtrips():
+    v = jnp.arange(10, dtype=jnp.float32)
+    s = pack(v, lanes=8)
+    assert s.words.shape == (2, 8)
+    assert s.flit_bits == 256
+    back = unpack(s, 10, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(v))
+
+
+def test_pack_paired_layout():
+    i = jnp.arange(8, dtype=jnp.float32)
+    w = jnp.arange(8, 16, dtype=jnp.float32)
+    s = pack_paired(i, w, lanes=16)
+    assert s.words.shape == (1, 16)
+    left = unpack(type(s)(s.words[:, :8], 8, 32), 8, jnp.float32)
+    right = unpack(type(s)(s.words[:, 8:], 8, 32), 8, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(left), np.asarray(i))
+    np.testing.assert_array_equal(np.asarray(right), np.asarray(w))
+
+
+def test_bt_stream_matches_manual():
+    w = jnp.array([[0b1010, 0b1100], [0b0101, 0b1100], [0b0101, 0b0011]],
+                  dtype=jnp.uint32)
+    # boundary 0->1: 1010^0101=1111 (4) + 1100^1100=0 -> 4
+    # boundary 1->2: 0 + 1100^0011=1111 (4) -> 4
+    s = pack(jax.lax.bitcast_convert_type(w.reshape(-1), jnp.float32), 2)
+    assert int(bt_stream(s)) == 8
+    assert float(bt_per_flit(s)) == 4.0
+
+
+def test_expected_bt_pair_eq2():
+    # Eq. (2) at b=32: E = x + y - xy/16
+    assert float(expected_bt_pair(jnp.array(16), jnp.array(16), 32)) == 16.0
+    assert float(expected_bt_pair(jnp.array(32), jnp.array(32), 32)) == 0.0
+    assert float(expected_bt_pair(jnp.array(0), jnp.array(32), 32)) == 32.0
+
+
+def test_descending_order_sorts_by_popcount():
+    v = jnp.array([0x0F, 0x01, 0xFF, 0x00], dtype=jnp.uint32)
+    o = descending_order(v)
+    assert popcount(o.values).tolist() == [8, 4, 1, 0]
+    # multiset preserved
+    assert sorted(np.asarray(o.values).tolist()) == sorted(np.asarray(v).tolist())
+
+
+def test_windowed_ordering_stays_in_window():
+    v = jnp.arange(16, dtype=jnp.uint32)
+    o = descending_order(v, window=4)
+    p = np.asarray(o.perm)
+    for wstart in range(0, 16, 4):
+        assert set(p[wstart:wstart + 4]) == set(range(wstart, wstart + 4))
+
+
+def test_interleave_fill_realizes_paper_order():
+    # two flits of 4 lanes: sorted s1..s8 -> lane j of flit f = s[2j+f]
+    v = jnp.array([1, 3, 7, 15, 31, 63, 127, 255], dtype=jnp.uint32)
+    o = descending_order(v, fill="interleave", lanes=4)
+    c = popcount(o.values).reshape(2, 4)
+    # per-lane: flit0 >= flit1, and flit0 lanes descending
+    assert bool(jnp.all(c[0] >= c[1]))
+    assert bool(jnp.all(c[0][:-1] >= c[0][1:]))
+
+
+def test_affiliated_keeps_pairs():
+    k = jax.random.PRNGKey(0)
+    w = jax.random.normal(k, (64,), jnp.float32)
+    i = jax.random.normal(jax.random.fold_in(k, 1), (64,), jnp.float32)
+    po = affiliated_order(i, w, window=16)
+    # pairing intact: the same permutation applied to both
+    np.testing.assert_array_equal(np.asarray(po.input_perm),
+                                  np.asarray(po.weight_perm))
+    np.testing.assert_array_equal(np.asarray(po.inputs),
+                                  np.asarray(i)[np.asarray(po.input_perm)])
+
+
+def test_separated_orders_both_streams():
+    k = jax.random.PRNGKey(0)
+    w = jax.random.normal(k, (64,), jnp.float32)
+    i = jax.random.normal(jax.random.fold_in(k, 1), (64,), jnp.float32)
+    po = separated_order(i, w)
+    cw = popcount(po.weights)
+    ci = popcount(po.inputs)
+    assert bool(jnp.all(cw[:-1] >= cw[1:]))
+    assert bool(jnp.all(ci[:-1] >= ci[1:]))
+
+
+def test_inverse_permutation():
+    p = descending_perm(jnp.array([3, 1, 7, 0], dtype=jnp.uint32))
+    inv = inverse_permutation(p)
+    np.testing.assert_array_equal(np.asarray(p)[np.asarray(inv)],
+                                  np.arange(4))
+
+
+def test_index_overhead_bits():
+    assert index_overhead_bits(16) == 4
+    assert index_overhead_bits(17) == 5
+    assert index_overhead_bits(1) == 1
+
+
+def test_pad_to_window():
+    v = jnp.arange(10, dtype=jnp.uint32)
+    assert pad_to_window(v, 8).shape == (16,)
+    assert pad_to_window(v, None).shape == (10,)
+    assert int(pad_to_window(v, 8)[10:].sum()) == 0

@@ -1,0 +1,106 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps, exact equality
+(bit ops have no tolerance). Kernels run in interpret mode on CPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import popcount, bt_boundaries, sort_windows_desc
+from repro.kernels.ref import (popcount_ref, bt_boundaries_ref,
+                               sort_windows_desc_ref)
+
+
+@pytest.mark.parametrize("shape", [(7,), (128,), (1000,), (33, 9), (3, 4, 5)])
+@pytest.mark.parametrize("dtype", ["float32", "int8", "uint32", "bfloat16"])
+def test_popcount_matches_ref(shape, dtype):
+    key = jax.random.PRNGKey(hash((shape, dtype)) % (2**31))
+    if dtype == "float32":
+        x = jax.random.normal(key, shape, jnp.float32)
+    elif dtype == "bfloat16":
+        x = jax.random.normal(key, shape, jnp.float32).astype(jnp.bfloat16)
+    elif dtype == "int8":
+        x = jax.random.randint(key, shape, -128, 128, jnp.int32).astype(jnp.int8)
+    else:
+        x = jax.random.randint(key, shape, 0, 2**31 - 1, jnp.int32).astype(jnp.uint32)
+    a, b = popcount(x), popcount_ref(x)
+    assert a.shape == b.shape
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("nf,lanes", [(2, 4), (9, 16), (64, 16), (33, 7), (1, 8)])
+def test_bt_boundaries_matches_ref(nf, lanes):
+    key = jax.random.PRNGKey(nf * 131 + lanes)
+    w = jax.random.randint(key, (nf, lanes), 0, 2**31 - 1,
+                           jnp.int32).astype(jnp.uint32)
+    a, b = bt_boundaries(w), bt_boundaries_ref(w)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("rows,w", [(1, 128), (8, 128), (5, 256), (16, 512), (3, 1024)])
+def test_bitonic_sort_keys_match_ref(rows, w):
+    key = jax.random.PRNGKey(rows * 7 + w)
+    keys = jax.random.randint(key, (rows, w), 0, 33, jnp.int32)
+    vals = jax.random.randint(jax.random.fold_in(key, 1), (rows, w), 0,
+                              2**31 - 1, jnp.int32).astype(jnp.uint32)
+    sk, sv = sort_windows_desc(keys, vals)
+    rk, rv = sort_windows_desc_ref(keys, vals)
+    # keys must match exactly (same multiset sorted descending)
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(rk))
+    # bitonic is unstable: compare (key, value) pairs as multisets per row
+    for i in range(rows):
+        pa = sorted(zip(np.asarray(sk[i]).tolist(), np.asarray(sv[i]).tolist()))
+        pb = sorted(zip(np.asarray(keys[i]).tolist(), np.asarray(vals[i]).tolist()))
+        assert pa == pb
+
+
+@pytest.mark.parametrize("w", [128, 256])
+def test_bitonic_two_payloads(w):
+    """Affiliated ordering: weights and inputs ride the same swaps."""
+    key = jax.random.PRNGKey(w)
+    keys = jax.random.randint(key, (4, w), 0, 9, jnp.int32)
+    wgt = jax.random.normal(jax.random.fold_in(key, 1), (4, w), jnp.float32)
+    inp = jax.random.normal(jax.random.fold_in(key, 2), (4, w), jnp.float32)
+    sk, sw, si = sort_windows_desc(keys, wgt, inp)
+    # pairing invariant: the (weight, input) pairs survive as a multiset
+    for i in range(4):
+        pa = sorted(zip(np.asarray(sw[i]).tolist(), np.asarray(si[i]).tolist()))
+        pb = sorted(zip(np.asarray(wgt[i]).tolist(), np.asarray(inp[i]).tolist()))
+        assert pa == pb
+    assert bool(jnp.all(sk[:, :-1] >= sk[:, 1:]))
+
+
+def test_bitonic_rejects_bad_window():
+    with pytest.raises(ValueError):
+        sort_windows_desc(jnp.zeros((2, 100), jnp.int32))
+
+
+def test_popcount_kernel_float_padding_safe():
+    """Padding lanes must not pollute results at ragged sizes."""
+    x = jnp.full((129,), -1.0, jnp.float32)   # 0xBF800000: 8 ones
+    out = popcount(x)
+    assert out.shape == (129,)
+    assert bool(jnp.all(out == 8))
+
+
+@pytest.mark.parametrize("rows,w", [(2, 128), (8, 256), (3, 512)])
+def test_fused_order_unit_matches_ref(rows, w):
+    """The fused popcount+sort kernel vs the two-stage oracle: key sequences
+    must match exactly; (value -> position) pairs as multisets (bitonic is
+    unstable)."""
+    from repro.kernels import order_unit
+    from repro.kernels.ref import order_unit_ref
+    key = jax.random.PRNGKey(rows * w)
+    vals = jax.random.randint(key, (rows, w), 0, 2**31 - 1,
+                              jnp.int32).astype(jnp.uint32)
+    out, perm = order_unit(vals)
+    ref_out, ref_perm = order_unit_ref(vals)
+    from repro.core.bits import popcount as pc
+    np.testing.assert_array_equal(np.asarray(pc(out)), np.asarray(pc(ref_out)))
+    for i in range(rows):
+        assert sorted(np.asarray(out[i]).tolist()) == \
+            sorted(np.asarray(vals[i]).tolist())
+        # perm is a valid permutation reproducing the output
+        p = np.asarray(perm[i])
+        assert sorted(p.tolist()) == list(range(w))
+        np.testing.assert_array_equal(np.asarray(vals[i])[p],
+                                      np.asarray(out[i]))
