@@ -1,11 +1,14 @@
 """Beyond-paper: transmission ordering for gradient all-reduce payloads.
 
 Trains the reduced xlstm config briefly so the gradients are *real* (not
-synthetic noise), then measures bit transitions of each gradient bucket as
-it would stream over a 16-lane ICI phit: baseline vs weight-keyed
-affiliated ordering (O1 - zero communication overhead because weights are
-replicated across DP peers) vs self-keyed descending (O2-like bound, needs
-an index). bf16 wire format.
+synthetic noise), then measures bit transitions of the gradient wire as a
+16-lane bf16 phit of (gradient, weight) pairs - the training-time analogue
+of the paper's (input, weight) MAC stream, since the update consuming each
+pair is order-invariant. Baseline (O0) streams natural order; O1 orders
+pairs by the weight's popcount (zero communication overhead: weights are
+replicated across DP peers, so every peer derives the same permutation
+locally and no index travels); O2 sorts each half by its own popcount
+(upper bound, needs a per-window index to re-pair).
 """
 from __future__ import annotations
 
@@ -56,6 +59,9 @@ def main(print_csv=True):
               f"O1_weightkeyed={rep['reduction_o1']*100:.2f}%"
               f" O2_selfkeyed={rep['reduction_o2']*100:.2f}%"
               f" baseline_bt={rep['bt_baseline']:.3g}")
+    if rep["reduction_o1"] <= 0:
+        raise SystemExit(
+            f"O1 must reduce BT on real gradients, got {rep['reduction_o1']:.4f}")
     return rep
 
 

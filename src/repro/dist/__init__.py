@@ -1,0 +1,36 @@
+"""Distributed substrate: sharding rules, ordered collectives, static weight
+layouts, and comm/compute overlap helpers.
+
+This package extends the paper's transmission-ordering idea from NoC links
+to the wires of a distributed training job:
+
+* :mod:`repro.dist.sharding` - logical-axis -> mesh-axis rules with
+  divisibility fallback (the GSPMD layer every launch script shards with).
+* :mod:`repro.dist.ordered_collectives` - the paper's O1/O2 orderings
+  applied to gradient all-reduce payloads (bucket transform + BT report).
+* :mod:`repro.dist.static_reorder` - popcount-descending hidden-unit
+  layouts that leave model outputs bit-identical (Fig. 5 order invariance,
+  applied to stored weights instead of in-flight streams).
+* :mod:`repro.dist.overlap` - gradient bucketing for collective/compute
+  overlap plus the XLA flags that enable async collectives.
+"""
+from . import overlap, ordered_collectives, sharding, static_reorder
+from .ordered_collectives import (GradientBucket, gradient_wire_report,
+                                  order_gradient_bucket,
+                                  restore_gradient_bucket)
+from .overlap import bucketed, unbucket, xla_overlap_flags
+from .sharding import (DEFAULT_RULES, Rules, data_axis_size, logical_to_pspec,
+                       spec_shardings)
+from .static_reorder import (mlp_unit_permutation, reorder_lm_params,
+                             reorder_mlp, stream_bt_report)
+
+__all__ = [
+    "sharding", "ordered_collectives", "static_reorder", "overlap",
+    "Rules", "DEFAULT_RULES", "logical_to_pspec", "spec_shardings",
+    "data_axis_size",
+    "GradientBucket", "order_gradient_bucket", "restore_gradient_bucket",
+    "gradient_wire_report",
+    "mlp_unit_permutation", "reorder_mlp", "reorder_lm_params",
+    "stream_bt_report",
+    "bucketed", "unbucket", "xla_overlap_flags",
+]

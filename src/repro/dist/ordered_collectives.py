@@ -1,0 +1,118 @@
+"""Transmission ordering for gradient-collective payloads (beyond-paper).
+
+The paper orders (input, weight) pairs at a memory controller because the
+MAC consuming them is order-invariant (Fig. 5). Data-parallel training has
+the same structure on its gradient wires: the update consuming a
+(gradient, weight) pair is order-invariant, the reduction is elementwise,
+and the weights are **replicated** across DP peers - so every peer can
+compute the *same* weight-keyed permutation locally and no index ever
+travels. That is O1 on the gradient wire. O2 (each stream sorted by its own
+popcount) bounds the win at the cost of a per-window index
+(:func:`repro.core.ordering.index_overhead_bits`).
+
+Two layers live here:
+
+* :func:`order_gradient_bucket` / :func:`restore_gradient_bucket` - the
+  payload transform itself. Built on
+  :func:`repro.core.ordering.affiliated_order`; exact inverse (a
+  permutation of bit patterns, so restore is bit-identical).
+* :func:`gradient_wire_report` - BT telemetry over a 16-lane bf16 phit,
+  reusing :mod:`repro.core.bt` and the O0/O1/O2 transforms of
+  :mod:`repro.core.wire` on the paired (gradient, weight) stream. Jit-safe:
+  the train loop embeds it in the compiled step when --wire-telemetry is on.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bt as bt_mod
+from repro.core.ordering import (affiliated_order, index_overhead_bits,
+                                 inverse_permutation, pad_to_window)
+from repro.core.wire import (AffiliatedTransform, IdentityTransform,
+                             SeparatedTransform)
+
+__all__ = ["GradientBucket", "order_gradient_bucket",
+           "restore_gradient_bucket", "gradient_wire_report"]
+
+
+class GradientBucket(NamedTuple):
+    """One ordered all-reduce bucket.
+
+    values: the (zero-padded) gradient stream in wire order.
+    perm:   wire order as indices into the padded natural-order stream.
+            Derived from the replicated weights, so every DP peer holds the
+            same perm without communicating it.
+    """
+
+    values: jax.Array
+    perm: jax.Array
+
+
+def order_gradient_bucket(grads: jax.Array, weights: jax.Array,
+                          window: Optional[int] = 256,
+                          tiebreak: str = "stable") -> GradientBucket:
+    """O1-order one flat gradient bucket by its weights' '1'-bit counts.
+
+    Both streams are zero-padded to the next window (packet) boundary; the
+    returned values may therefore be longer than the input. The (grad,
+    weight) pairing survives the sort, which is what makes the elementwise
+    all-reduce and the weight update order-invariant.
+    """
+    po = affiliated_order(grads, weights, window=window, tiebreak=tiebreak)
+    return GradientBucket(po.inputs, po.input_perm)
+
+
+def restore_gradient_bucket(bucket: GradientBucket, length: int) -> jax.Array:
+    """Exact inverse of :func:`order_gradient_bucket`.
+
+    Returns the first ``length`` values in natural order, bit-identical to
+    the stream that was ordered (a permutation never touches bit patterns).
+    """
+    inv = inverse_permutation(bucket.perm)
+    return bucket.values[inv][:length]
+
+
+def _flat_stream(tree, dtype) -> jax.Array:
+    """Concatenate a pytree's leaves into one flat wire-format stream."""
+    leaves = jax.tree.leaves(tree)
+    if not leaves:
+        raise ValueError("empty gradient tree")
+    return jnp.concatenate([jnp.ravel(x).astype(dtype) for x in leaves])
+
+
+def gradient_wire_report(grads, params, window: Optional[int] = 256,
+                         lanes: int = 16,
+                         wire_dtype=jnp.bfloat16) -> dict:
+    """BT of the gradient wire under O0 / O1 / O2, on real gradient trees.
+
+    The phit carries (gradient, weight) pairs - ``lanes//2`` gradients and
+    their ``lanes//2`` weights per flit (paper Fig. 2 layout, bf16 wire
+    format). Baseline streams natural order; O1 orders pairs by the weight's
+    popcount (zero recovery cost: weights are replicated across DP peers and
+    the consumer is order-invariant); O2 orders each half by its own
+    popcount (needs ``o2_index_bits`` per value to re-pair).
+
+    All values are jnp scalars so the report can live inside a jitted train
+    step (``make_train_step(..., wire_telemetry=True)``).
+    """
+    g = pad_to_window(_flat_stream(grads, wire_dtype), window)
+    w = pad_to_window(_flat_stream(params, wire_dtype), window)
+    base = IdentityTransform().apply(g, w, lanes)
+    o1 = AffiliatedTransform(window=window).apply(g, w, lanes)
+    o2 = SeparatedTransform(window=window).apply(g, w, lanes)
+    bt0 = bt_mod.bt_stream(base)
+    bt1 = bt_mod.bt_stream(o1)
+    bt2 = bt_mod.bt_stream(o2)
+    eff_window = int(g.shape[0]) if window is None else window
+    return {
+        "bt_baseline": bt0,
+        "bt_o1": bt1,
+        "bt_o2": bt2,
+        "bt_per_flit_baseline": bt_mod.bt_per_flit(base),
+        "reduction_o1": bt_mod.reduction_rate(bt0, bt1),
+        "reduction_o2": bt_mod.reduction_rate(bt0, bt2),
+        "o2_index_bits": index_overhead_bits(eff_window),
+    }

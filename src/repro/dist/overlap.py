@@ -1,0 +1,71 @@
+"""Gradient bucketing for collective/compute overlap.
+
+At multi-pod scale the gradient all-reduce is the only cross-pod
+collective; hiding it behind the backward pass requires (a) payloads cut
+into buckets small enough that reducing bucket k overlaps computing bucket
+k+1, and (b) an XLA configuration that actually schedules collectives
+asynchronously. ``bucketed``/``unbucket`` do (a) as a pure pytree
+transform (leaf order preserved, exact reassembly); ``xla_overlap_flags``
+is (b), the flag set the launch scripts export.
+
+Buckets are also the unit the ordering unit sees: each bucket is one
+payload for :func:`repro.dist.ordered_collectives.order_gradient_bucket`.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["bucketed", "unbucket", "xla_overlap_flags"]
+
+
+def bucketed(tree, max_bytes: int) -> List[list]:
+    """Partition a gradient tree's leaves into size-capped buckets.
+
+    Greedy in leaf order (so ``unbucket`` is a plain concatenation): a leaf
+    that would push the current bucket past ``max_bytes`` starts a new one.
+    A single leaf larger than the cap gets a bucket of its own - it is
+    never split, so restore stays a pure permutation of whole leaves.
+    """
+    if max_bytes <= 0:
+        raise ValueError(f"max_bytes must be positive, got {max_bytes}")
+    buckets: List[list] = []
+    cur: list = []
+    cur_bytes = 0
+    for leaf in jax.tree.leaves(tree):
+        nbytes = leaf.size * jnp.dtype(leaf.dtype).itemsize
+        if cur and cur_bytes + nbytes > max_bytes:
+            buckets.append(cur)
+            cur, cur_bytes = [], 0
+        cur.append(leaf)
+        cur_bytes += nbytes
+    if cur:
+        buckets.append(cur)
+    return buckets
+
+
+def unbucket(buckets: List[list], tree):
+    """Reassemble ``bucketed`` output into the original tree structure."""
+    flat = [leaf for bucket in buckets for leaf in bucket]
+    treedef = jax.tree.structure(tree)
+    if len(flat) != treedef.num_leaves:
+        raise ValueError(
+            f"buckets hold {len(flat)} leaves, tree has {treedef.num_leaves}")
+    return jax.tree.unflatten(treedef, flat)
+
+
+def xla_overlap_flags() -> str:
+    """XLA_FLAGS value enabling async collectives + latency-hiding scheduling.
+
+    Exported by the launch scripts so the gradient all-reduce of bucket k
+    overlaps the backward compute of bucket k+1 on TPU (and the CPU
+    dry-run lowers with the same schedule).
+    """
+    return " ".join([
+        "--xla_tpu_enable_async_collective_fusion=true",
+        "--xla_tpu_enable_async_collective_fusion_fuse_all_gather=true",
+        "--xla_tpu_overlap_compute_collective_tc=true",
+        "--xla_latency_hiding_scheduler_rerun=1",
+    ])

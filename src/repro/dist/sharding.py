@@ -1,0 +1,116 @@
+"""Logical-axis sharding rules: ParamSpec axes -> mesh PartitionSpecs.
+
+Every tensor in this codebase names its dims with logical axes (see
+``repro.models.spec``); a per-arch *rules* dict maps each logical axis to a
+mesh axis (or None = replicate). ``logical_to_pspec`` applies the rules with
+two safety valves that make full-size AND reduced configs shard with the
+same rules:
+
+* **divisibility fallback** - a dim that does not divide the mesh-axis size
+  falls back to replication for that dim (14 heads on a 16-way model axis
+  -> replicated; 48 heads -> sharded). No config ever fails to lower just
+  because a reduced dim stopped dividing.
+* **duplicate-axis guard** - one mesh axis is consumed at most once per
+  tensor (left to right); a second logical axis mapped to the same mesh
+  axis replicates instead of producing an invalid spec.
+
+Multi-pod meshes add a leading ``pod`` axis over DCN. Rules keep saying
+``"data"``; any ``"data"`` assignment transparently expands to
+``("pod", "data")`` so the batch (and FSDP dims) span both axes and the
+only cross-pod collective is the gradient all-reduce.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple, Union
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.spec import is_spec
+
+__all__ = ["Rules", "DEFAULT_RULES", "logical_to_pspec", "spec_shardings",
+           "data_axis_size"]
+
+# A rule maps one logical axis name to a mesh axis, a tuple of mesh axes, or
+# None (replicate). Meshes only need .shape (name -> size) and .axis_names,
+# so rule-level tests can run against stand-ins for pod-scale meshes.
+Rules = Dict[str, Union[None, str, Tuple[str, ...]]]
+
+DEFAULT_RULES: Rules = {
+    # data-parallel dims
+    "batch": "data",
+    "seq": None,
+    # tensor-parallel dims: shard the "many units" axis over 'model'
+    "embed": None,
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "vocab": "model",
+    "experts": "model",
+    "state": "model",
+    # scan/stacking and small conv dims stay replicated
+    "layers": None,
+    "conv_in": None,
+    "conv_out": "model",
+}
+
+
+def _expand(rule, axis_names) -> Tuple[str, ...]:
+    """Normalize a rule value to a tuple of mesh axes, with pod expansion."""
+    if rule is None:
+        return ()
+    axes = (rule,) if isinstance(rule, str) else tuple(rule)
+    if "pod" in axis_names and "data" in axes and "pod" not in axes:
+        out = []
+        for a in axes:
+            out.extend(("pod", "data") if a == "data" else (a,))
+        axes = tuple(out)
+    return axes
+
+
+def logical_to_pspec(axes: Tuple[Optional[str], ...], shape: Tuple[int, ...],
+                     rules: Rules, mesh) -> P:
+    """PartitionSpec for one tensor, honoring fallback + duplicate guard.
+
+    ``mesh`` only needs ``.shape`` (mapping axis name -> size) and
+    ``.axis_names``; both jax.sharding.Mesh and test stand-ins qualify.
+    """
+    if len(axes) != len(shape):
+        raise ValueError(f"axes {axes} vs shape {shape} rank mismatch")
+    names = tuple(mesh.axis_names)
+    used: set = set()
+    entries = []
+    for logical, dim in zip(axes, shape):
+        cand = _expand(rules.get(logical) if logical else None, names)
+        ok = (cand
+              and all(a in names for a in cand)
+              and not (set(cand) & used))
+        if ok:
+            size = 1
+            for a in cand:
+                size *= int(mesh.shape[a])
+            ok = dim % size == 0
+        if ok:
+            used.update(cand)
+            entries.append(cand[0] if len(cand) == 1 else cand)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def spec_shardings(specs, rules: Rules, mesh):
+    """NamedSharding pytree for a ParamSpec pytree (same structure)."""
+    return jax.tree.map(
+        lambda s: NamedSharding(
+            mesh, logical_to_pspec(s.axes, s.shape, rules, mesh)),
+        specs, is_leaf=is_spec)
+
+
+def data_axis_size(mesh) -> int:
+    """Total data-parallel degree: the 'data' axis, times 'pod' if present."""
+    n = 1
+    for a in ("pod", "data"):
+        if a in mesh.axis_names:
+            n *= int(mesh.shape[a])
+    return n

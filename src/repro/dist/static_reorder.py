@@ -1,0 +1,140 @@
+"""Static popcount-ordered weight layouts (the paper's Fig. 5, stored).
+
+The paper reorders data in flight at a memory controller. Hidden units of
+an MLP admit the same trick *statically*: permuting the up/gate projection
+columns together with the down projection rows is a similarity transform of
+the block - the model's outputs are bit-identical (the contraction consumes
+(unit activation, unit row) pairs, which travel together, exactly the
+affiliated-ordering invariance). Stored popcount-descending, every weight
+stream leaving HBM is already in the paper's wire order, so the ordering
+unit's sort stage becomes a no-op for weight traffic.
+
+``reorder_lm_params`` rewrites every MLP (and MoE expert FFN) in an LM
+parameter tree this way; ``stream_bt_report`` measures what the layout is
+worth on the wire: BT per 16-lane phit of the unit-major weight stream,
+before vs after.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bt as bt_mod
+from repro.core.bits import popcount
+from repro.core.flits import pack
+
+__all__ = ["mlp_unit_permutation", "reorder_mlp", "reorder_lm_params",
+           "stream_bt_report"]
+
+
+def mlp_unit_permutation(w: jax.Array) -> jax.Array:
+    """Popcount-descending permutation of the unit (last) axis of ``w``.
+
+    ``w`` is ``(..., d, f)`` with hidden units as columns; the key for unit
+    j is the total '1'-bit count of column j. Leading axes (e.g. the scan's
+    stacked layers) get independent permutations. Stable among ties.
+    """
+    counts = jnp.sum(popcount(w), axis=-2)
+    return jnp.argsort(-counts, axis=-1)
+
+
+def _take_cols(w: jax.Array, perm: jax.Array) -> jax.Array:
+    """w (..., d, f)[..., :, perm] with batched perm (..., f)."""
+    return jnp.take_along_axis(w, jnp.expand_dims(perm, -2), axis=-1)
+
+
+def _take_rows(w: jax.Array, perm: jax.Array) -> jax.Array:
+    """w (..., f, d)[..., perm, :] with batched perm (..., f)."""
+    return jnp.take_along_axis(w, jnp.expand_dims(perm, -1), axis=-2)
+
+
+def reorder_mlp(p: dict):
+    """Reorder one MLP param dict {"wu", "wd"[, "wg", ...]} -> (new, perm).
+
+    The permutation key is the unit's total popcount across every matrix it
+    appears in (wu/wg columns + wd rows) - that is the unit's full wire
+    footprint. Keys other than wu/wg/wd (e.g. a MoE router) pass through
+    untouched. Works on 2D mats and on scan-stacked (layers, ...) mats,
+    where each layer (and each expert) gets its own permutation.
+    """
+    mats = [p["wu"]]
+    if "wg" in p:
+        mats.append(p["wg"])
+    mats.append(jnp.swapaxes(p["wd"], -1, -2))
+    perm = mlp_unit_permutation(jnp.concatenate(mats, axis=-2))
+    new = dict(p)
+    new["wu"] = _take_cols(p["wu"], perm)
+    if "wg" in p:
+        new["wg"] = _take_cols(p["wg"], perm)
+    new["wd"] = _take_rows(p["wd"], perm)
+    return new, perm
+
+
+def _is_mlp_dict(v) -> bool:
+    return isinstance(v, dict) and "wu" in v and "wd" in v
+
+
+def reorder_lm_params(params):
+    """Popcount-order every MLP / MoE-FFN in an LM parameter tree.
+
+    Outputs of the reordered model are bit-identical to the original
+    (tests/test_static_reorder.py pins this for gated and ungated MLPs).
+    """
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if _is_mlp_dict(v):
+                    out[k], _ = reorder_mlp(v)
+                else:
+                    out[k] = walk(v)
+            return out
+        return node
+    return walk(params)
+
+
+def _unit_major_stream(params, wire_dtype) -> jax.Array:
+    """Flat unit-major stream of every MLP matrix in the tree.
+
+    Each matrix is streamed one hidden unit at a time (wu/wg transposed to
+    (..., f, d); wd is already unit-major) - the order a weight-stationary
+    accelerator fetches an FFN, and the order the static layout optimizes.
+    """
+    chunks = []
+
+    def walk(node):
+        if isinstance(node, dict):
+            for k in sorted(node):
+                v = node[k]
+                if _is_mlp_dict(v):
+                    for name in ("wu", "wg", "wd"):
+                        if name in v:
+                            m = v[name] if name == "wd" else \
+                                jnp.swapaxes(v[name], -1, -2)
+                            chunks.append(jnp.ravel(m).astype(wire_dtype))
+                else:
+                    walk(v)
+
+    walk(params)
+    if not chunks:
+        raise ValueError("no MLP blocks found in the parameter tree")
+    return jnp.concatenate(chunks)
+
+
+def stream_bt_report(before, after, lanes: int = 16,
+                     wire_dtype=jnp.bfloat16) -> dict:
+    """BT per flit of the unit-major MLP weight stream, before vs after.
+
+    ``before``/``after`` are full LM parameter trees (e.g. ``params`` and
+    ``reorder_lm_params(params)``); only the MLP matrices - the tensors the
+    static layout touches - are streamed.
+    """
+    s0 = pack(_unit_major_stream(before, wire_dtype), lanes)
+    s1 = pack(_unit_major_stream(after, wire_dtype), lanes)
+    bt0 = bt_mod.bt_per_flit(s0)
+    bt1 = bt_mod.bt_per_flit(s1)
+    return {
+        "bt_per_flit_before": bt0,
+        "bt_per_flit_after": bt1,
+        "reduction": bt_mod.reduction_rate(bt0, bt1),
+    }

@@ -314,6 +314,8 @@ def run_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            if isinstance(cost, (list, tuple)):   # jax returns [dict] on CPU
+                cost = cost[0] if cost else None
             hlo = compiled.as_text()
         coll = collective_bytes(hlo)
         model = arch.build()

@@ -1,0 +1,11 @@
+"""Make ``python -m pytest`` work without the PYTHONPATH=src incantation.
+
+The tier-1 command (PYTHONPATH=src python -m pytest -x -q) keeps working:
+prepending an already-importable path is a no-op.
+"""
+import os
+import sys
+
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

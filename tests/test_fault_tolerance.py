@@ -82,6 +82,34 @@ def test_restore_skips_future_torn_step(tmp_path, setup):
     assert got is not None and got[0] == 10
 
 
+@pytest.mark.skipif(
+    len(jax.devices()) < 2 or 8 % len(jax.devices()) != 0,
+    reason="elastic re-mesh onto a real data-parallel mesh needs >= 2 "
+           "devices that divide the global batch of 8")
+def test_restore_then_continue_on_data_parallel_mesh(tmp_path, setup):
+    """The multi-device leg of the restart story: a checkpoint written by a
+    single-host job restores onto a (data, model) mesh and keeps training
+    with the batch sharded over the data axis."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    model, params, stream, loss_fn = setup
+    opt = AdamW(constant(1e-3))
+    checkpoint.save(str(tmp_path), 1, init_state(params, opt))
+    restored = checkpoint.restore(str(tmp_path), init_state(params, opt))
+    assert restored is not None
+    start, state = restored
+
+    n = len(jax.devices())
+    mesh = jax.make_mesh((n, 1), ("data", "model"))
+    step = jax.jit(make_train_step(loss_fn, opt))
+    with mesh:
+        batch = jax.tree.map(
+            lambda x: jax.device_put(x, NamedSharding(mesh, P("data"))),
+            stream.batch(start))
+        state, m = step(state, batch)
+    assert bool(jnp.isfinite(m["loss"]))
+
+
 def test_shard_regeneration_covers_full_batch(setup):
     """Straggler mitigation invariant: the union of shard batches equals the
     single-host batch, so any host can recompute any shard."""

@@ -1,0 +1,104 @@
+"""Kernel-vs-reference parity beyond the seed sweeps: every Pallas path
+(popcount, bt_count, bitonic_sort - interpret mode on CPU) against the
+repro.kernels.ref oracles across wire dtypes (fp32, bf16, int8) and odd,
+padding-exercising shapes. Pins the kernel semantics before later perf
+work swaps interpret mode for compiled Mosaic on TPU."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bits import popcount as popcount_bits, unsigned_view
+from repro.kernels import bt_boundaries, popcount, sort_windows_desc
+from repro.kernels.ref import (bt_boundaries_ref, popcount_ref,
+                               sort_windows_desc_ref)
+
+WIRE_DTYPES = ["float32", "bfloat16", "int8"]
+
+
+def _rand(key, shape, dtype):
+    if dtype == "float32":
+        return jax.random.normal(key, shape, jnp.float32)
+    if dtype == "bfloat16":
+        return jax.random.normal(key, shape, jnp.float32).astype(jnp.bfloat16)
+    if dtype == "int8":
+        return jax.random.randint(key, shape, -128, 128,
+                                  jnp.int32).astype(jnp.int8)
+    raise ValueError(dtype)
+
+
+@pytest.mark.parametrize("dtype", WIRE_DTYPES)
+@pytest.mark.parametrize("shape", [(1,), (127,), (129,), (8, 128 + 1),
+                                   (2, 3, 5, 7)])
+def test_popcount_parity_odd_shapes(shape, dtype):
+    """Sizes straddling the (8, 128) tile contract: padding must never leak
+    into results, for every wire dtype."""
+    x = _rand(jax.random.PRNGKey(sum(shape) * 31 + len(dtype)), shape, dtype)
+    np.testing.assert_array_equal(np.asarray(popcount(x)),
+                                  np.asarray(popcount_ref(x)))
+
+
+@pytest.mark.parametrize("dtype", WIRE_DTYPES)
+def test_popcount_parity_extremes(dtype):
+    """All-zeros and all-ones bit patterns, the popcount range endpoints."""
+    zeros = jnp.zeros((9,), jnp.int32).astype(jnp.dtype(dtype))
+    assert bool(jnp.all(popcount(zeros) == 0))
+    width = jnp.dtype(unsigned_view(zeros).dtype).itemsize * 8
+    all_ones = jnp.zeros((9,), unsigned_view(zeros).dtype) - 1
+    assert bool(jnp.all(popcount(all_ones) == width))
+
+
+@pytest.mark.parametrize("dtype", WIRE_DTYPES)
+@pytest.mark.parametrize("nf,lanes", [(2, 1), (3, 16), (17, 16), (9, 130)])
+def test_bt_boundaries_parity_wire_dtypes(nf, lanes, dtype):
+    """The BT recorder on flit streams of every wire dtype, including lane
+    counts off the 128 tile and single-lane links."""
+    w = _rand(jax.random.PRNGKey(nf * 1000 + lanes), (nf, lanes), dtype)
+    a, b = bt_boundaries(w), bt_boundaries_ref(unsigned_view(w))
+    assert a.shape == (nf - 1,)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_bt_boundaries_single_flit_stream():
+    """A one-flit stream has no boundaries - the empty-output path."""
+    w = jnp.ones((1, 16), jnp.uint32)
+    assert bt_boundaries(w).shape == (0,)
+
+
+@pytest.mark.parametrize("dtype", WIRE_DTYPES)
+@pytest.mark.parametrize("rows,w", [(1, 128), (3, 128), (7, 256), (9, 512)])
+def test_bitonic_sort_payload_dtypes(rows, w, dtype):
+    """Windowed descending sort with payloads in each wire dtype, at row
+    counts that force the ROW_TILE padding path. Keys are real popcounts
+    (heavy ties); bitonic nets are unstable, so parity is: exact key
+    sequences + per-row (key, payload-bits) multisets."""
+    key = jax.random.PRNGKey(rows * w + len(dtype))
+    payload = _rand(key, (rows, w), dtype)
+    keys = popcount_bits(payload)
+    sk, sp = sort_windows_desc(keys, payload)
+    rk, rp = sort_windows_desc_ref(keys, payload)
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(rk))
+    assert sp.dtype == payload.dtype
+    assert bool(jnp.all(sk[:, :-1] >= sk[:, 1:]))
+    sp_bits = np.asarray(unsigned_view(sp))
+    in_bits = np.asarray(unsigned_view(payload))
+    ks = np.asarray(keys)
+    for i in range(rows):
+        got = sorted(zip(np.asarray(sk[i]).tolist(), sp_bits[i].tolist()))
+        want = sorted(zip(ks[i].tolist(), in_bits[i].tolist()))
+        assert got == want
+
+
+@pytest.mark.parametrize("dtype", WIRE_DTYPES)
+def test_bitonic_sort_matches_descending_perm_semantics(dtype):
+    """The kernel's (key-sorted) output stream must produce the same BT as
+    the pure-jnp ordering path - the property later perf work relies on
+    when swapping one for the other."""
+    from repro.core.ordering import descending_order
+    vals = _rand(jax.random.PRNGKey(5), (4, 128), dtype)
+    keys = popcount_bits(vals)
+    sk, sv = sort_windows_desc(keys, vals)
+    ordered = descending_order(vals.reshape(-1), window=128)
+    np.testing.assert_array_equal(
+        np.asarray(popcount_bits(sv)).reshape(-1),
+        np.asarray(popcount_bits(ordered.values)))

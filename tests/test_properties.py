@@ -14,6 +14,10 @@ The paper's central claims, stated as properties:
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this container")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (pack, bt_stream, expected_bt_stream, pairing_objective,
