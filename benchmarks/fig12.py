@@ -1,9 +1,19 @@
 """Paper Fig. 12: BTs across NoC sizes (4x4/MC2, 8x8/MC4, 8x8/MC8) under
 O0/O1/O2 with full LeNet inference traffic, float-32 and fixed-8.
 
+Driven by the declarative sweep engine (``repro.noc.sweep``): one
+packetization and one vmapped, compile-cached simulation per mesh, instead
+of the seed's per-cell build+retrace loop. Reduction percentages charge the
+O2 recovery index via ``WireTransform.overhead_bits_per_value`` (paper
+Sec. IV-C1): ``reduction_pct`` is the raw link number, ``adjusted_*`` is the
+honest one.
+
 Traffic is deterministic-stride subsampled per layer to keep CPU simulation
 time bounded; BT *rates* are per-flit quantities, so subsampling is
 unbiased (the paper's absolute counts scale with traffic volume).
+
+``REPRO_BENCH_SMOKE=1`` shrinks the sweep to a 2x2/MC1 mesh with random-init
+weights - the CI regression gate for the sweep engine.
 """
 from __future__ import annotations
 
@@ -13,62 +23,147 @@ import time
 
 import jax
 
-from repro.core.wire import by_name
-from repro.noc import PAPER_NOCS, simulate, build_traffic
-from repro.quant import quantize_fixed8
+from repro.noc import PAPER_NOCS, SweepGrid, run_sweep
 from repro.data import glyph_batch
 
-from ._trained import get_trained
+from ._trained import get_trained, random_params
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "experiments")
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
 PAPER_BANDS = {
     # Sec. V-B1: reduction ranges across NoC sizes
     "float32": {"O1": (12.09, 18.58), "O2": (23.30, 32.01)},
     "fixed8": {"O1": (7.88, 17.75), "O2": (16.95, 35.93)},
 }
 
+# The pinned equivalence configuration: `reference_compare` must reproduce
+# the seed driver's BT totals bit-for-bit on exactly this setup - the full
+# O0/O1/O2 x mesh-size sweep (both tiebreaks, both precisions) at a bounded
+# packet budget, with the chunk sized to the measured drain cycles.
+PINNED = {
+    "meshes": tuple(PAPER_NOCS), "max_packets": 8,
+    "tiebreaks": ("stable", "pattern"), "chunk": 128,
+    "glyph_seed": 7, "param_seed": 1,
+}
 
-def run(max_packets=40, tiebreak="pattern", count_headers=True):
-    model, params, _ = get_trained("lenet")
-    x, _ = glyph_batch(jax.random.PRNGKey(7), 1)
-    layers = model.layer_traffic(params, x[0])
+
+def lenet_layers(glyph_seed: int = 7, trained: bool = True):
+    """One LeNet inference's operand traffic (the Fig. 12 workload)."""
+    if trained:
+        model, params, _ = get_trained("lenet")
+    else:
+        model, params = random_params("lenet")
+    x, _ = glyph_batch(jax.random.PRNGKey(glyph_seed), 1)
+    return model.layer_traffic(params, x[0])
+
+
+def run(max_packets=40, tiebreak="pattern", count_headers=True, meshes=None):
+    if meshes is None:
+        meshes = ("2x2_mc1",) if SMOKE else tuple(PAPER_NOCS)
+    if SMOKE:
+        max_packets = min(max_packets, 4)
+    grid = SweepGrid(
+        meshes=meshes, transforms=("O0", "O1", "O2"), tiebreaks=(tiebreak,),
+        precisions=("float32", "fixed8"), models=("lenet",),
+        max_packets_per_layer=max_packets, count_headers=count_headers,
+        chunk=2048)
+    report = run_sweep(grid, lambda _name: lenet_layers(trained=not SMOKE))
     results = {}
-    for noc_name, cfg in PAPER_NOCS.items():
-        for fmt in ("float32", "fixed8"):
-            q = None if fmt == "float32" else (lambda t: quantize_fixed8(t).values)
-            base_bt = None
-            for o in ("O0", "O1", "O2"):
-                tr = build_traffic(layers, cfg, by_name(o, tiebreak=tiebreak),
-                                   quantizer=q, max_packets_per_layer=max_packets)
-                t0 = time.perf_counter()
-                res = simulate(cfg, tr, chunk=2048, count_headers=count_headers)
-                dt = time.perf_counter() - t0
-                key = f"{noc_name}/{fmt}/{o}"
-                red = None
-                if o == "O0":
-                    base_bt = res.total_bt
-                else:
-                    red = (1 - res.total_bt / base_bt) * 100
-                results[key] = {
-                    "total_bt": res.total_bt, "cycles": res.cycles,
-                    "flits": res.injected, "reduction_pct": red,
-                    "sim_s": round(dt, 2),
-                }
-    return results
+    for r in report.rows:
+        key = f"{r['mesh']}/{r['precision']}/{r['transform']}"
+        is_base = r["transform"] == grid.baseline
+        results[key] = {
+            "total_bt": r["total_bt"], "cycles": r["cycles"],
+            "flits": r["flits"],
+            "reduction_pct": None if is_base else r["reduction_pct"],
+            "adjusted_reduction_pct":
+                None if is_base else r["adjusted_reduction_pct"],
+            "overhead_bits": r["overhead_bits"],
+        }
+    return results, report.stats
+
+
+def reference_compare():
+    """Pinned speedup + equivalence record for BENCH_noc.json.
+
+    Runs the pre-refactor driver (``repro.noc._reference``: per-neuron
+    packetization, one trace+compile per traffic tensor) and the sweep
+    engine on the pinned configuration, asserts bit-identical BT totals,
+    and reports the wall-clock ratio.
+    """
+    from repro.core.wire import by_name
+    from repro.noc import mesh_by_name
+    from repro.noc._reference import build_traffic_reference, simulate_reference
+    from repro.quant import quantize_fixed8
+
+    model, params = random_params("lenet", seed=PINNED["param_seed"])
+    x, _ = glyph_batch(jax.random.PRNGKey(PINNED["glyph_seed"]), 1)
+    layers = model.layer_traffic(params, x[0])
+    meshes = ("2x2_mc1", "4x4_mc2") if SMOKE else PINNED["meshes"]
+    precisions = ("fixed8",) if SMOKE else ("float32", "fixed8")
+    tiebreaks = ("pattern",) if SMOKE else PINNED["tiebreaks"]
+    orderings = ("O0", "O1", "O2")
+    max_packets = 4 if SMOKE else PINNED["max_packets"]
+
+    quant = {"float32": None, "fixed8": lambda t: quantize_fixed8(t).values}
+    t0 = time.perf_counter()
+    legacy_bt = {}
+    for mesh in meshes:
+        cfg = mesh_by_name(mesh)
+        for fmt in precisions:
+            for tb in tiebreaks:
+                for o in orderings:
+                    tr = build_traffic_reference(
+                        layers, cfg, by_name(o, tiebreak=tb),
+                        quantizer=quant[fmt],
+                        max_packets_per_layer=max_packets)
+                    res = simulate_reference(cfg, tr, chunk=PINNED["chunk"])
+                    legacy_bt[f"{mesh}/{fmt}/{tb}/{o}"] = res.total_bt
+    legacy_s = time.perf_counter() - t0
+
+    grid = SweepGrid(
+        meshes=meshes, transforms=orderings, tiebreaks=tiebreaks,
+        precisions=precisions, models=("lenet",),
+        max_packets_per_layer=max_packets, chunk=PINNED["chunk"])
+    t0 = time.perf_counter()
+    report = run_sweep(grid, lambda _name: layers)
+    sweep_s = time.perf_counter() - t0
+
+    sweep_bt = {f"{r['mesh']}/{r['precision']}/{r['tiebreak']}"
+                f"/{r['transform']}": r["total_bt"]
+                for r in report.rows}
+    if sweep_bt != legacy_bt:
+        raise RuntimeError(
+            f"sweep engine diverged from the pre-refactor path on the pinned "
+            f"config: {sweep_bt} != {legacy_bt}")
+    return {
+        "pinned": {**PINNED, "meshes": list(meshes),
+                   "max_packets": max_packets,
+                   "tiebreaks": list(tiebreaks),
+                   "precisions": list(precisions)},
+        "variants": len(legacy_bt),
+        "legacy_s": round(legacy_s, 3),
+        "sweep_s": round(sweep_s, 3),
+        "speedup": round(legacy_s / sweep_s, 2),
+        "bt_identical": True,
+        "total_bt": sweep_bt,
+    }
 
 
 def main(print_csv=True):
-    results = run()
+    results, stats = run()
     os.makedirs(OUT, exist_ok=True)
     with open(os.path.join(OUT, "fig12.json"), "w") as f:
         json.dump(results, f, indent=1)
     if print_csv:
+        per_cell_us = stats["wall_s"] / max(stats["cells"], 1) * 1e6
         for key, r in results.items():
             red = "" if r["reduction_pct"] is None else \
-                f" reduction={r['reduction_pct']:.2f}%"
-            print(f"fig12/{key},{r['sim_s'] * 1e6:.0f},"
+                f" reduction={r['reduction_pct']:.2f}%" \
+                f" adj={r['adjusted_reduction_pct']:.2f}%"
+            print(f"fig12/{key},{per_cell_us:.0f},"
                   f"bt={r['total_bt']}{red} cycles={r['cycles']}")
-    return results
+    return {"results": results, "bench": stats}
 
 
 if __name__ == "__main__":

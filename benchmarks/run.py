@@ -3,10 +3,18 @@ framework-level analyses. Prints ``name,us_per_call,derived`` CSV lines.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run table1 fig12
+
+After each invocation the NoC-relevant trajectory numbers (per-suite
+wall-clock, sweep-engine cycles/sec and packetizer time, and the pinned
+speedup-vs-seed-driver comparison) are written to ``BENCH_noc.json`` at the
+repo root so future PRs can track sweep-engine performance.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
+import time
 import traceback
 
 from . import (table1, fig1_expectation, fig10_11, fig12, fig13,
@@ -25,17 +33,53 @@ SUITES = {
     "roofline": roofline.main,                # from dry-run artifacts
 }
 
+BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_noc.json")
+
 
 def main() -> None:
     picks = sys.argv[1:] or list(SUITES)
     failed = []
+    bench = {"suites": {}}
+    # The pinned speedup comparison runs first, while the process is cold:
+    # both the seed driver and the sweep engine pay their own compiles.
+    if "fig12" in picks:
+        try:
+            bench["reference_compare"] = fig12.reference_compare()
+            rc = bench["reference_compare"]
+            print(f"fig12/reference_compare,{rc['sweep_s'] * 1e6:.0f},"
+                  f"speedup={rc['speedup']}x bt_identical={rc['bt_identical']}")
+        except Exception as e:  # noqa: BLE001
+            failed.append("fig12:reference_compare")
+            print(f"fig12:reference_compare,0,FAILED:{type(e).__name__}:{e}")
+            traceback.print_exc()
     for name in picks:
         try:
-            SUITES[name]()
+            t0 = time.perf_counter()
+            out = SUITES[name]()
+            entry = {"wall_s": round(time.perf_counter() - t0, 3)}
+            # Sweep-driven suites return {"results", "bench"}; record the
+            # engine stats (cycles/sec simulated, packetizer wall-clock, ...)
+            if isinstance(out, dict) and "bench" in out:
+                entry.update(out["bench"])
+            bench["suites"][name] = entry
         except Exception as e:  # noqa: BLE001
             failed.append(name)
             print(f"{name},0,FAILED:{type(e).__name__}:{e}")
             traceback.print_exc()
+    # Merge into the existing trajectory file: a selective run (e.g.
+    # `benchmarks.run table1`) must not wipe recorded sweep stats.
+    merged = {"suites": {}}
+    if os.path.exists(BENCH_PATH):
+        try:
+            with open(BENCH_PATH) as f:
+                merged = json.load(f)
+        except (OSError, ValueError):
+            pass
+    merged.setdefault("suites", {}).update(bench["suites"])
+    if "reference_compare" in bench:
+        merged["reference_compare"] = bench["reference_compare"]
+    with open(BENCH_PATH, "w") as f:
+        json.dump(merged, f, indent=1)
     if failed:
         raise SystemExit(f"failed suites: {failed}")
 

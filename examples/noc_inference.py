@@ -1,6 +1,8 @@
 """Run a LeNet inference's operand traffic through the cycle-level NoC
 under O0/O1/O2 and report per-configuration link BT - the paper's Fig. 12
-pipeline end to end (train -> quantize -> packetize -> order -> simulate).
+pipeline end to end (train -> quantize -> packetize -> order -> simulate),
+driven by the declarative sweep engine: all three orderings are packetized
+once and drained in a single batched, compile-cached simulation.
 
     PYTHONPATH=src python examples/noc_inference.py [--noc 8x8_mc4] [--f32]
 """
@@ -8,17 +10,16 @@ import argparse
 
 import jax
 
-from repro.core.wire import by_name
 from repro.data import glyph_batch
 from repro.models import LeNet, init_params
-from repro.noc import PAPER_NOCS, build_traffic, simulate
+from repro.noc import PAPER_NOCS, SweepGrid, mesh_by_name, run_sweep
 from repro.noc.power import link_power_mw, ordering_overhead_mw
 from repro.optim import AdamW, cosine
-from repro.quant import quantize_fixed8
 from repro.train import make_train_step, init_state
 
 ap = argparse.ArgumentParser()
-ap.add_argument("--noc", default="4x4_mc2", choices=sorted(PAPER_NOCS))
+ap.add_argument("--noc", default="4x4_mc2",
+                help=f"one of {sorted(PAPER_NOCS)} or any RxC_mcN spec")
 ap.add_argument("--f32", action="store_true", help="float-32 (default fixed-8)")
 ap.add_argument("--train-steps", type=int, default=60)
 ap.add_argument("--max-packets", type=int, default=30)
@@ -36,22 +37,24 @@ print(f"final loss {float(m['loss']):.3f}")
 
 x, _ = glyph_batch(jax.random.PRNGKey(99), 1)
 layers = model.layer_traffic(state.params, x[0])
-cfg = PAPER_NOCS[args.noc]
-quant = None if args.f32 else (lambda t: quantize_fixed8(t).values)
+cfg = mesh_by_name(args.noc)
 
 print(f"\nNoC {args.noc}: {cfg.rows}x{cfg.cols}, {cfg.num_mcs} MCs, "
       f"{cfg.num_inter_router_links} inter-router links")
-base_bt = None
-for name in ("O0", "O1", "O2"):
-    tr = build_traffic(layers, cfg, by_name(name, tiebreak="pattern"),
-                       quantizer=quant, max_packets_per_layer=args.max_packets)
-    res = simulate(cfg, tr, chunk=2048)
-    red = "" if base_bt is None else \
-        f"  ({(1 - res.total_bt / base_bt) * 100:+.1f}% vs O0)"
-    base_bt = base_bt or res.total_bt
-    tpc = res.total_bt / res.cycles
+grid = SweepGrid(
+    meshes=(args.noc,), transforms=("O0", "O1", "O2"),
+    tiebreaks=("pattern",), precisions=("float32" if args.f32 else "fixed8",),
+    models=("lenet",), max_packets_per_layer=args.max_packets, chunk=2048)
+report = run_sweep(grid, lambda _name: layers)
+for row in report.rows:
+    red = "" if row["transform"] == grid.baseline else \
+        f"  ({row['reduction_pct']:+.1f}% vs O0," \
+        f" {row['adjusted_reduction_pct']:+.1f}% after recovery index)"
+    tpc = row["total_bt"] / row["cycles"]
     pw = link_power_mw(tpc)
-    print(f"{name}: {res.total_bt:10d} BT over {res.cycles} cycles "
-          f"-> link power {pw:7.2f} mW{red}")
+    print(f"{row['transform']}: {row['total_bt']:10d} BT over "
+          f"{row['cycles']} cycles -> link power {pw:7.2f} mW{red}")
+print(f"sweep engine: {report.stats['cycles_per_sec']:.0f} simulated "
+      f"cycles/s across {report.stats['cells']} cells")
 print(f"ordering-unit overhead: O1 {ordering_overhead_mw(cfg.num_mcs):.2f} mW, "
       f"O2 {ordering_overhead_mw(cfg.num_mcs, separated=True):.2f} mW")

@@ -1,0 +1,274 @@
+"""Seed (pre-vectorization) packetizer and retracing simulator — the oracle.
+
+This module preserves, verbatim, the original per-neuron packetization loop
+and the closure-captured simulator driver that ``repro.noc.traffic`` /
+``repro.noc.sim`` shipped with. It exists for two reasons:
+
+* the equivalence regression test pins the vectorized packetizer and the
+  retrace-free simulator to be bit-identical to this implementation on a
+  fixed LeNet configuration (``tests/test_noc_sweep.py``);
+* ``benchmarks.run`` measures the sweep-engine speedup against this driver
+  and records it in ``BENCH_noc.json``.
+
+Do not "improve" this file: its value is that it does not change. The
+production implementations live in ``traffic.py`` / ``sim.py``.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.wire import WireTransform
+from .topology import NocConfig, NUM_PORTS, OPPOSITE, PORT_LOCAL, \
+    neighbor_table, xy_route
+from .sim import (Traffic, SimResult, META_PAYLOAD, META_TAIL, make_state,
+                  SimState, _front)
+from .traffic import LayerTraffic
+
+__all__ = ["build_traffic_reference", "simulate_reference"]
+
+
+def _header_word(dest: int, pkt_id: int, n_payload: int, lanes: int) -> np.ndarray:
+    h = np.zeros((lanes,), np.uint32)
+    h[0], h[1], h[2] = dest, pkt_id & 0xFFFFFFFF, n_payload
+    return h
+
+
+def build_traffic_reference(
+    layers: Sequence[LayerTraffic],
+    cfg: NocConfig,
+    transform: WireTransform,
+    *,
+    quantizer=None,
+    max_packets_per_layer: Optional[int] = None,
+) -> Traffic:
+    """The seed's per-neuron packetization loop (numpy appends, per-packet
+    ``vc_rr``/``pe_rr`` bookkeeping). Semantics frozen; see module docstring."""
+    m = cfg.num_mcs
+    pes = np.asarray(cfg.pe_nodes, np.int32)
+    streams: List[List[np.ndarray]] = [[] for _ in range(m)]     # words
+    meta: List[List[np.ndarray]] = [[] for _ in range(m)]        # (dest, meta, vc, pkt)
+    vc_rr = [0] * m
+    pkt_id = 0
+    pe_rr = 0
+
+    for layer in layers:
+        inp, wgt = layer.inputs, layer.weights
+        n = int(inp.shape[0])
+        if max_packets_per_layer is not None and n > max_packets_per_layer:
+            stride = n // max_packets_per_layer
+            idx = jnp.arange(0, stride * max_packets_per_layer, stride)
+            inp, wgt = inp[idx], wgt[idx]
+            n = int(inp.shape[0])
+        if quantizer is not None:
+            inp, wgt = quantizer(inp), quantizer(wgt)
+        # Apply the ordering transform per packet, vectorized over neurons.
+        def one_packet(i, w):
+            stream = transform.apply(i, w, cfg.lanes)
+            return stream.words
+        words = jax.vmap(one_packet)(inp, wgt)      # (n, F, L)
+        words = np.asarray(words.astype(jnp.uint32))
+        n_flits = words.shape[1]
+        for j in range(n):
+            mc = (pkt_id % m)
+            dest = int(pes[pe_rr % len(pes)])
+            pe_rr += 1
+            header = _header_word(dest, pkt_id, n_flits, cfg.lanes)
+            pkt_words = np.concatenate([header[None], words[j]], axis=0)
+            f = pkt_words.shape[0]
+            md = np.full((f,), META_PAYLOAD, np.int32)
+            md[0] = 0
+            md[-1] |= META_TAIL
+            vc = vc_rr[mc] % cfg.num_vcs
+            vc_rr[mc] += 1
+            streams[mc].append(pkt_words)
+            meta[mc].append(np.stack([
+                np.full((f,), dest, np.int32),
+                md,
+                np.full((f,), vc, np.int32),
+                np.full((f,), pkt_id, np.int32)], axis=1))
+            pkt_id += 1
+
+    lengths = np.array([sum(len(x) for x in s) for s in streams], np.int32)
+    t = int(lengths.max()) if len(lengths) else 0
+    l = cfg.lanes
+    words_arr = np.zeros((m, t, l), np.uint32)
+    dest_arr = np.zeros((m, t), np.int32)
+    meta_arr = np.zeros((m, t), np.int32)
+    vc_arr = np.zeros((m, t), np.int32)
+    pkt_arr = np.zeros((m, t), np.int32)
+    for mc in range(m):
+        if not streams[mc]:
+            continue
+        w = np.concatenate(streams[mc], axis=0)
+        md = np.concatenate(meta[mc], axis=0)
+        words_arr[mc, :w.shape[0]] = w
+        dest_arr[mc, :w.shape[0]] = md[:, 0]
+        meta_arr[mc, :w.shape[0]] = md[:, 1]
+        vc_arr[mc, :w.shape[0]] = md[:, 2]
+        pkt_arr[mc, :w.shape[0]] = md[:, 3]
+    return Traffic(
+        words=jnp.asarray(words_arr), dest=jnp.asarray(dest_arr),
+        meta=jnp.asarray(meta_arr), vc=jnp.asarray(vc_arr),
+        pkt=jnp.asarray(pkt_arr), length=jnp.asarray(lengths))
+
+
+def _make_step_reference(cfg: NocConfig, traffic: Traffic, count_headers: bool):
+    """The seed's step factory: closes over ``traffic``, so every Traffic
+    value retraces and recompiles the whole cycle scan."""
+    from repro.core.bits import popcount
+
+    nr, p, v, d, l = cfg.num_routers, NUM_PORTS, cfg.num_vcs, cfg.vc_depth, cfg.lanes
+    m = traffic.length.shape[0]
+    nslots = p * v
+    route = xy_route(cfg)                      # (NR, NR)
+    nb = neighbor_table(cfg)                   # (NR, P)
+    opp = jnp.asarray(OPPOSITE)
+    mc_nodes = jnp.asarray(cfg.mc_nodes, jnp.int32)
+    t_cap = traffic.words.shape[1]
+
+    def step(state: SimState, _):
+        valid = state.count[:nr] > 0                       # (NR, P, V)
+        fw, fd, fm, fp = _front(state, nr)
+
+        rid = jnp.arange(nr)[:, None, None]
+        out_port = route[rid, fd]                          # (NR, P, V)
+
+        down = nb[rid, out_port]                            # (NR, P, V)
+        down_ip = opp[out_port]
+        vcs = jnp.arange(v)[None, None, :]
+        down_cnt = state.count[jnp.where(down < 0, nr, down), down_ip, vcs]
+        is_eject = out_port == PORT_LOCAL
+        space = jnp.where(is_eject, True, (down >= 0) & (down_cnt < d))
+        request = valid & space                             # (NR, P, V)
+
+        slot_req = request.reshape(nr, nslots)
+        slot_out = out_port.reshape(nr, nslots)
+        outs = jnp.arange(NUM_PORTS)[None, :, None]
+        req_po = slot_req[:, None, :] & (slot_out[:, None, :] == outs)
+        rot_idx = (jnp.arange(nslots)[None, None, :] + state.rr[:, :, None]) % nslots
+        rot = jnp.take_along_axis(req_po, rot_idx, axis=2)
+        has = jnp.any(rot, axis=2)                          # (NR, P_out)
+        first = jnp.argmax(rot, axis=2)
+        winner = (first + state.rr) % nslots                # (NR, P_out)
+        rr_new = jnp.where(has, (winner + 1) % nslots, state.rr)
+
+        onehot = (jnp.arange(nslots)[None, None, :] == winner[:, :, None]) & has[:, :, None]
+        pop = jnp.any(onehot, axis=1).reshape(nr, p, v)     # (NR, P, V)
+        head_new = jnp.where(pop, (state.head[:nr] + 1) % d, state.head[:nr])
+        count_new = state.count[:nr] - pop.astype(jnp.int32)
+        head2 = state.head.at[:nr].set(head_new)
+        count2 = state.count.at[:nr].set(count_new)
+
+        win_p = winner // v
+        win_v = winner % v
+        r2 = jnp.arange(nr)[:, None]
+        mv_word = fw[r2, win_p, win_v]                      # (NR, P_out, L)
+        mv_dest = fd[r2, win_p, win_v]
+        mv_meta = fm[r2, win_p, win_v]
+        mv_pkt = fp[r2, win_p, win_v]
+
+        tog = popcount(state.link_last ^ mv_word).sum(-1).astype(jnp.int32)
+        if count_headers:
+            counted = has
+        else:
+            counted = has & ((mv_meta & META_PAYLOAD) > 0)
+        link_bt = state.link_bt + jnp.where(counted, tog, 0)
+        link_flits = state.link_flits + has.astype(jnp.int32)
+        link_last = jnp.where(has[:, :, None], mv_word, state.link_last)
+
+        o_ids = jnp.arange(NUM_PORTS)[None, :]
+        push_ok = has & (o_ids != PORT_LOCAL)
+        down_r = nb[jnp.arange(nr)[:, None], o_ids]         # (NR, P_out)
+        tgt_r = jnp.where(push_ok & (down_r >= 0), down_r, nr)  # phantom row
+        tgt_p = opp[o_ids] * jnp.ones((nr, 1), jnp.int32)
+        tgt_v = win_v
+        slot = (head2[tgt_r, tgt_p, tgt_v] + count2[tgt_r, tgt_p, tgt_v]) % d
+
+        fr, fo = tgt_r.reshape(-1), tgt_p.reshape(-1)
+        fv, fs = tgt_v.reshape(-1), slot.reshape(-1)
+        words3 = state.words.at[fr, fo, fv, fs].set(mv_word.reshape(-1, l))
+        dest3 = state.dest.at[fr, fo, fv, fs].set(mv_dest.reshape(-1))
+        meta3 = state.meta.at[fr, fo, fv, fs].set(mv_meta.reshape(-1))
+        pkt3 = state.pkt.at[fr, fo, fv, fs].set(mv_pkt.reshape(-1))
+        count3 = count2.at[fr, fo, fv].add(push_ok.reshape(-1).astype(jnp.int32))
+
+        ejected = state.ejected + jnp.sum(has & (o_ids == PORT_LOCAL))
+
+        ptr = state.inj_ptr
+        active = ptr < traffic.length
+        safe_ptr = jnp.minimum(ptr, t_cap - 1)
+        mrange = jnp.arange(m)
+        iw = traffic.words[mrange, safe_ptr]                # (M, L)
+        idst = traffic.dest[mrange, safe_ptr]
+        imeta = traffic.meta[mrange, safe_ptr]
+        ivc = traffic.vc[mrange, safe_ptr]
+        ipkt = traffic.pkt[mrange, safe_ptr]
+        mc_cnt = count3[mc_nodes, PORT_LOCAL, ivc]
+        can = active & (mc_cnt < d)
+        tgt_mr = jnp.where(can, mc_nodes, nr)
+        islot = (head2[tgt_mr, PORT_LOCAL, ivc] + count3[tgt_mr, PORT_LOCAL, ivc]) % d
+        words4 = words3.at[tgt_mr, PORT_LOCAL, ivc, islot].set(iw)
+        dest4 = dest3.at[tgt_mr, PORT_LOCAL, ivc, islot].set(idst)
+        meta4 = meta3.at[tgt_mr, PORT_LOCAL, ivc, islot].set(imeta)
+        pkt4 = pkt3.at[tgt_mr, PORT_LOCAL, ivc, islot].set(ipkt)
+        count4 = count3.at[tgt_mr, PORT_LOCAL, ivc].add(can.astype(jnp.int32))
+        ptr_new = ptr + can.astype(jnp.int32)
+
+        itog = popcount(state.inj_last ^ iw).sum(-1).astype(jnp.int32)
+        if count_headers:
+            icounted = can
+        else:
+            icounted = can & ((imeta & META_PAYLOAD) > 0)
+        inj_bt = state.inj_bt + jnp.where(icounted, itog, 0)
+        inj_last = jnp.where(can[:, None], iw, state.inj_last)
+
+        new = state._replace(
+            words=words4, dest=dest4, meta=meta4, pkt=pkt4, head=head2,
+            count=count4, rr=rr_new, link_last=link_last, link_bt=link_bt,
+            link_flits=link_flits, inj_ptr=ptr_new, inj_last=inj_last,
+            inj_bt=inj_bt, ejected=ejected, cycle=state.cycle + 1)
+        return new, ()
+
+    return step
+
+
+def simulate_reference(cfg: NocConfig, traffic: Traffic, *,
+                       count_headers: bool = True, max_cycles: int = 2_000_000,
+                       chunk: int = 4096) -> SimResult:
+    """The seed driver: a fresh jit (and therefore a fresh trace + compile)
+    for every traffic tensor, because ``traffic`` is closed over."""
+    m = int(traffic.length.shape[0])
+    if m != cfg.num_mcs:
+        raise ValueError(f"traffic has {m} MC streams, config has {cfg.num_mcs}")
+    state = make_state(cfg, m)
+    step = _make_step_reference(cfg, traffic, count_headers)
+
+    @jax.jit
+    def run_chunk(s):
+        s, _ = jax.lax.scan(step, s, None, length=chunk)
+        return s
+
+    total = int(np.sum(np.asarray(traffic.length)))
+    while True:
+        state = run_chunk(state)
+        drained = (int(state.ejected) == total)
+        if drained or int(state.cycle) >= max_cycles:
+            break
+    if int(state.ejected) != total:
+        raise RuntimeError(
+            f"NoC did not drain: {int(state.ejected)}/{total} flits ejected "
+            f"after {int(state.cycle)} cycles")
+
+    link_bt = np.asarray(state.link_bt)
+    link_flits = np.asarray(state.link_flits)
+    inj_bt = np.asarray(state.inj_bt)
+    inter = int(link_bt[:, :PORT_LOCAL].sum())
+    total_bt = int(link_bt.sum() + inj_bt.sum())
+    return SimResult(
+        cycles=int(state.cycle), ejected=int(state.ejected), injected=total,
+        link_bt=link_bt, link_flits=link_flits, inj_bt=inj_bt,
+        total_bt=total_bt, inter_router_bt=inter)

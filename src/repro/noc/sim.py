@@ -18,14 +18,19 @@ Simplifications (documented in DESIGN.md):
   * result traffic (PE->MC) is not modeled; the paper's figures measure the
     distribution traffic (inputs/weights), which dominates volume.
 
-Everything is fixed-shape and jitted; a Python driver loop runs jitted
-chunks of cycles until the network drains.
+Everything is fixed-shape and jitted. ``Traffic`` is a *traced argument* of
+the compiled cycle chunk (not closed over), so every ordering/precision
+variant of the same traffic shape reuses one compiled executable; the
+carried ``SimState`` is donated between chunks. :func:`simulate_batch` vmaps
+the drain loop over a leading variants axis, which is how the sweep engine
+(``repro.noc.sweep``) runs O0/O1/O2 x precision cells of one shape class in
+a single compiled program.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import NamedTuple
+from typing import List, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +40,8 @@ from repro.core.bits import popcount
 from .topology import (NocConfig, NUM_PORTS, OPPOSITE, PORT_LOCAL,
                        neighbor_table, xy_route)
 
-__all__ = ["Traffic", "SimState", "SimResult", "simulate", "make_state"]
+__all__ = ["Traffic", "SimState", "SimResult", "simulate", "simulate_batch",
+           "make_state"]
 
 # Flit meta bitfield
 META_PAYLOAD = 1
@@ -49,8 +55,12 @@ class Traffic(NamedTuple):
     dest:   (M, T) int32     - destination router id
     meta:   (M, T) int32     - META_* bitfield
     vc:     (M, T) int32     - static VC assignment (round-robin per packet)
-    pkt:    (M, T) int32     - packet id (for conservation checks)
+    pkt:    (M, T) int32     - packet id (checked by ``check_conservation``)
     length: (M,) int32       - real stream length per MC
+
+    A *batched* Traffic (as built by ``build_traffic_batch`` and consumed by
+    :func:`simulate_batch`) carries one extra leading variants axis B on
+    every field.
     """
 
     words: jax.Array
@@ -79,6 +89,11 @@ class SimState(NamedTuple):
     inj_bt: jax.Array     # (M,) int32
     ejected: jax.Array    # () int32 flits delivered
     cycle: jax.Array      # () int32
+    eject_pkt: jax.Array  # (NP+1,) int32 tail ejections per pkt id (last row
+                          # is a dump slot; NP=0 when conservation tracking
+                          # is off)
+    drained_at: jax.Array # () int32 first cycle with everything ejected, -1
+                          # while the network still holds flits
 
 
 @dataclasses.dataclass
@@ -91,13 +106,19 @@ class SimResult:
     inj_bt: np.ndarray       # (M,) NI-link transitions
     total_bt: int            # inter-router + ejection + NI links
     inter_router_bt: int
+    # Exact cycle the last flit ejected. ``cycles`` is the chunk-quantized
+    # driver-loop count (kept for seed compatibility); throughput metrics
+    # should use ``drain_cycle``.
+    drain_cycle: Optional[int] = None
 
     @property
     def bt_per_flit(self) -> float:
         return self.total_bt / max(int(self.link_flits.sum()), 1)
 
 
-def make_state(cfg: NocConfig, num_mcs: int) -> SimState:
+def make_state(cfg: NocConfig, num_mcs: int, npkt: int = 0) -> SimState:
+    """Zeroed simulator state. ``npkt``: number of packet ids to track for
+    the conservation check (0 disables tracking at ~no cost)."""
     nr, p, v, d, l = cfg.num_routers, NUM_PORTS, cfg.num_vcs, cfg.vc_depth, cfg.lanes
     return SimState(
         words=jnp.zeros((nr + 1, p, v, d, l), jnp.uint32),
@@ -115,6 +136,8 @@ def make_state(cfg: NocConfig, num_mcs: int) -> SimState:
         inj_bt=jnp.zeros((num_mcs,), jnp.int32),
         ejected=jnp.zeros((), jnp.int32),
         cycle=jnp.zeros((), jnp.int32),
+        eject_pkt=jnp.zeros((npkt + 1,), jnp.int32),
+        drained_at=jnp.full((), -1, jnp.int32),
     )
 
 
@@ -128,17 +151,37 @@ def _front(state: SimState, nr: int):
     return fw, fd, fm, fp
 
 
-def _make_step(cfg: NocConfig, traffic: Traffic, count_headers: bool):
+def _mesh_key(cfg: NocConfig):
+    """The static parameters the compiled step actually depends on.
+
+    MC placement is deliberately excluded: ``mc_nodes`` enters the step as
+    a traced argument, so NoC configs differing only in MC count/placement
+    (e.g. 8x8/MC4 vs 8x8/MC8, with MC streams padded to a common count)
+    share one executable.
+    """
+    return (cfg.rows, cfg.cols, cfg.num_vcs, cfg.vc_depth, cfg.lanes)
+
+
+def _make_step(mesh_key, count_headers: bool):
+    """One router cycle as a pure function of (state, traffic, mc_nodes).
+
+    Unlike the seed implementation this does NOT close over the traffic
+    tensors: they are traced arguments, so one compiled step serves every
+    traffic value of the same shape (all orderings/precisions of a sweep
+    shape class, and every MC placement of a mesh size).
+    """
+    rows, cols, num_vcs, vc_depth, lanes = mesh_key
+    cfg = NocConfig(rows, cols, (), num_vcs=num_vcs, vc_depth=vc_depth,
+                    lanes=lanes)    # mc-free view: routing/geometry only
     nr, p, v, d, l = cfg.num_routers, NUM_PORTS, cfg.num_vcs, cfg.vc_depth, cfg.lanes
-    m = traffic.length.shape[0]
     nslots = p * v
     route = xy_route(cfg)                      # (NR, NR)
     nb = neighbor_table(cfg)                   # (NR, P)
     opp = jnp.asarray(OPPOSITE)
-    mc_nodes = jnp.asarray(cfg.mc_nodes, jnp.int32)
-    t_cap = traffic.words.shape[1]
 
-    def step(state: SimState, _):
+    def step(state: SimState, traffic: Traffic, mc_nodes: jax.Array):
+        m = traffic.length.shape[0]
+        t_cap = traffic.words.shape[1]
         valid = state.count[:nr] > 0                       # (NR, P, V)
         fw, fd, fm, fp = _front(state, nr)
 
@@ -214,6 +257,13 @@ def _make_step(cfg: NocConfig, traffic: Traffic, count_headers: bool):
 
         ejected = state.ejected + jnp.sum(has & (o_ids == PORT_LOCAL))
 
+        # --- conservation ledger: tail flits ejecting at their PE ---
+        npcap = state.eject_pkt.shape[0] - 1
+        ej_tail = has & (o_ids == PORT_LOCAL) & ((mv_meta & META_TAIL) > 0)
+        ledger_idx = jnp.where(ej_tail, jnp.minimum(mv_pkt, npcap), npcap)
+        eject_pkt = state.eject_pkt.at[ledger_idx.reshape(-1)].add(
+            ej_tail.reshape(-1).astype(jnp.int32))
+
         # --- injection: one flit per MC per cycle into the local in-port ---
         ptr = state.inj_ptr
         active = ptr < traffic.length
@@ -244,32 +294,125 @@ def _make_step(cfg: NocConfig, traffic: Traffic, count_headers: bool):
         inj_bt = state.inj_bt + jnp.where(icounted, itog, 0)
         inj_last = jnp.where(can[:, None], iw, state.inj_last)
 
-        new = SimState(words4, dest4, meta4, pkt4, head2, count4, rr_new,
-                       link_last, link_bt, link_flits, ptr_new, inj_last,
-                       inj_bt, ejected, state.cycle + 1)
-        return new, ()
+        total = jnp.sum(traffic.length)
+        drained_at = jnp.where((state.drained_at < 0) & (ejected >= total),
+                               state.cycle + 1, state.drained_at)
+
+        return SimState(words4, dest4, meta4, pkt4, head2, count4, rr_new,
+                        link_last, link_bt, link_flits, ptr_new, inj_last,
+                        inj_bt, ejected, state.cycle + 1, eject_pkt,
+                        drained_at)
 
     return step
 
 
+@functools.lru_cache(maxsize=None)
+def _chunk_runner(mesh_key, count_headers: bool, chunk: int, batched: bool):
+    """Compiled ``chunk``-cycle driver for one (mesh size, recorder) pair.
+
+    Returned once per static key and cached; jax.jit then caches one
+    executable per (state, traffic, mc_nodes) shape signature, so
+    re-simulating a new traffic value of a known shape costs zero retraces
+    (the seed driver re-traced on every Traffic). The carried state is
+    donated chunk-to-chunk.
+    """
+    step = _make_step(mesh_key, count_headers)
+
+    def run(state: SimState, traffic: Traffic,
+            mc_nodes: jax.Array) -> SimState:
+        def body(s, _):
+            return step(s, traffic, mc_nodes), ()
+        out, _ = jax.lax.scan(body, state, None, length=chunk)
+        return out
+
+    if batched:
+        run = jax.vmap(run, in_axes=(0, 0, None))
+    return jax.jit(run, donate_argnums=0)
+
+
+def _conservation_error(traffic_row, eject_pkt: np.ndarray,
+                        npkt: int) -> Optional[str]:
+    """Check every injected pkt id ejected exactly once; None when clean."""
+    length = np.asarray(traffic_row.length)
+    meta = np.asarray(traffic_row.meta)
+    pkt = np.asarray(traffic_row.pkt)
+    valid = np.arange(meta.shape[1])[None, :] < length[:, None]
+    tails = valid & ((meta & META_TAIL) > 0)
+    injected = np.bincount(pkt[tails].reshape(-1), minlength=npkt)[:npkt]
+    ejected = eject_pkt[:npkt]
+    bad_inj = np.flatnonzero(injected > 1)
+    if bad_inj.size:
+        return (f"packet ids injected more than once: {bad_inj[:8].tolist()}"
+                f" (counts {injected[bad_inj[:8]].tolist()})")
+    present = injected > 0
+    bad = np.flatnonzero(ejected[present] != 1)
+    if bad.size:
+        ids = np.flatnonzero(present)[bad]
+        return (f"packet ids not ejected exactly once: {ids[:8].tolist()}"
+                f" (eject counts {ejected[ids[:8]].tolist()})")
+    stray = np.flatnonzero(~present & (ejected != 0))
+    if stray.size:
+        return f"ejections for never-injected packet ids: {stray[:8].tolist()}"
+    return None
+
+
+def _npkt(traffic: Traffic) -> int:
+    pkt = np.asarray(traffic.pkt)
+    return int(pkt.max()) + 1 if pkt.size else 0
+
+
+def _mc_array(cfg: NocConfig, traffic: Traffic, m: int,
+              batched: bool) -> jax.Array:
+    """Validate the traffic's MC-stream count against ``cfg`` and return the
+    per-stream injection node ids, padded to ``m``.
+
+    Traffic may carry more streams than the config has MCs (the sweep
+    engine pads MC counts within a mesh-size group so every placement
+    shares one executable); padding streams must be empty, and their node
+    ids are irrelevant because an empty stream never injects.
+    """
+    if m < cfg.num_mcs:
+        raise ValueError(
+            f"traffic has {m} MC streams, config has {cfg.num_mcs}")
+    length = np.asarray(traffic.length)
+    pad = length[..., cfg.num_mcs:] if batched else length[cfg.num_mcs:]
+    if m > cfg.num_mcs and np.any(pad != 0):
+        raise ValueError(
+            f"traffic has {m} MC streams for a {cfg.num_mcs}-MC config and "
+            "the extra streams are not empty padding")
+    nodes = tuple(cfg.mc_nodes) + (0,) * (m - cfg.num_mcs)
+    return jnp.asarray(nodes, jnp.int32)
+
+
+def _result(cfg: NocConfig, state_leaves, total: int) -> SimResult:
+    (link_bt, link_flits, inj_bt, ejected, cycle, drained_at) = state_leaves
+    inter = int(link_bt[:, :PORT_LOCAL].sum())
+    total_bt = int(link_bt.sum() + inj_bt.sum())
+    drain = int(drained_at)
+    return SimResult(
+        cycles=int(cycle), ejected=int(ejected), injected=total,
+        link_bt=link_bt, link_flits=link_flits, inj_bt=inj_bt,
+        total_bt=total_bt, inter_router_bt=inter,
+        drain_cycle=drain if drain >= 0 else int(cycle))
+
+
 def simulate(cfg: NocConfig, traffic: Traffic, *, count_headers: bool = True,
-             max_cycles: int = 2_000_000, chunk: int = 4096) -> SimResult:
-    """Run the NoC until all traffic drains; returns per-link BT counts."""
+             max_cycles: int = 2_000_000, chunk: int = 4096,
+             check_conservation: bool = False) -> SimResult:
+    """Run the NoC until all traffic drains; returns per-link BT counts.
+
+    check_conservation: debug path - track tail ejections per packet id and
+        raise if any injected packet id does not eject exactly once.
+    """
     m = int(traffic.length.shape[0])
-    if m != cfg.num_mcs:
-        raise ValueError(f"traffic has {m} MC streams, config has {cfg.num_mcs}")
-    state = make_state(cfg, m)
-    step = _make_step(cfg, traffic, count_headers)
+    mc_nodes = _mc_array(cfg, traffic, m, batched=False)
+    npkt = _npkt(traffic) if check_conservation else 0
+    state = make_state(cfg, m, npkt=npkt)
+    run_chunk = _chunk_runner(_mesh_key(cfg), count_headers, chunk, False)
 
-    @jax.jit
-    def run_chunk(s):
-        s, _ = jax.lax.scan(step, s, None, length=chunk)
-        return s
-
-    nr = cfg.num_routers
     total = int(np.sum(np.asarray(traffic.length)))
-    while True:
-        state = run_chunk(state)
+    while total:    # empty traffic: nothing to drain (and T may be 0)
+        state = run_chunk(state, traffic, mc_nodes)
         drained = (int(state.ejected) == total)
         if drained or int(state.cycle) >= max_cycles:
             break
@@ -277,13 +420,69 @@ def simulate(cfg: NocConfig, traffic: Traffic, *, count_headers: bool = True,
         raise RuntimeError(
             f"NoC did not drain: {int(state.ejected)}/{total} flits ejected "
             f"after {int(state.cycle)} cycles")
+    if check_conservation:
+        err = _conservation_error(traffic, np.asarray(state.eject_pkt), npkt)
+        if err:
+            raise RuntimeError(f"packet conservation violated: {err}")
+    return _result(cfg, (np.asarray(state.link_bt), np.asarray(state.link_flits),
+                         np.asarray(state.inj_bt), state.ejected, state.cycle,
+                         state.drained_at), total)
+
+
+def simulate_batch(cfg: NocConfig, traffic: Traffic, *,
+                   count_headers: bool = True, max_cycles: int = 2_000_000,
+                   chunk: int = 4096,
+                   check_conservation: bool = False) -> List[SimResult]:
+    """Drain B traffic variants (leading axis) in one vmapped program.
+
+    All variants must share shapes - which O0/O1/O2 x precision variants of
+    one sweep shape class do by construction (ordering permutes words within
+    packets and never changes the flit geometry). The drain loop steps every
+    variant until the slowest one empties; already-drained variants idle at
+    zero cost to correctness (no flits move, BT accumulators freeze) and
+    their exact drain time is read from ``drain_cycle``.
+    """
+    if traffic.length.ndim != 2:
+        raise ValueError("simulate_batch wants a leading variants axis; "
+                         "use simulate() for a single Traffic")
+    b, m = traffic.length.shape
+    mc_nodes = _mc_array(cfg, traffic, m, batched=True)
+    npkt = _npkt(traffic) if check_conservation else 0
+    base = make_state(cfg, m, npkt=npkt)
+    state = jax.tree.map(lambda x: jnp.stack([x] * b), base)
+    run_chunk = _chunk_runner(_mesh_key(cfg), count_headers, chunk, True)
+
+    totals = np.asarray(traffic.length).sum(axis=1)
+    ejected = np.asarray(state.ejected)
+    while totals.sum():   # empty traffic: nothing to drain (and T may be 0)
+        state = run_chunk(state, traffic, mc_nodes)
+        ejected = np.asarray(state.ejected)
+        if np.all(ejected == totals) or int(np.asarray(state.cycle).max()) >= max_cycles:
+            break
+    if not np.all(ejected == totals):
+        lag = np.flatnonzero(ejected != totals)
+        raise RuntimeError(
+            f"NoC did not drain for variants {lag.tolist()}: "
+            f"{ejected[lag].tolist()}/{totals[lag].tolist()} flits ejected "
+            f"after {int(np.asarray(state.cycle).max())} cycles")
 
     link_bt = np.asarray(state.link_bt)
     link_flits = np.asarray(state.link_flits)
     inj_bt = np.asarray(state.inj_bt)
-    inter = int(link_bt[:, :PORT_LOCAL].sum())
-    total_bt = int(link_bt.sum() + inj_bt.sum())
-    return SimResult(
-        cycles=int(state.cycle), ejected=int(state.ejected), injected=total,
-        link_bt=link_bt, link_flits=link_flits, inj_bt=inj_bt,
-        total_bt=total_bt, inter_router_bt=inter)
+    cycles = np.asarray(state.cycle)
+    drained_at = np.asarray(state.drained_at)
+    eject_pkt = np.asarray(state.eject_pkt)
+    host_traffic = ([np.asarray(x) for x in traffic]
+                    if check_conservation else None)
+    out = []
+    for i in range(b):
+        if check_conservation:
+            row = Traffic(*(x[i] for x in host_traffic))
+            err = _conservation_error(row, eject_pkt[i], npkt)
+            if err:
+                raise RuntimeError(
+                    f"packet conservation violated (variant {i}): {err}")
+        out.append(_result(cfg, (link_bt[i], link_flits[i], inj_bt[i],
+                                 ejected[i], cycles[i], drained_at[i]),
+                           int(totals[i])))
+    return out

@@ -1,0 +1,242 @@
+"""Declarative NoC sweep engine: the paper's Figs. 12-13 axis, batched.
+
+The paper's headline results come from sweeping full DNNs across NoC sizes,
+MC counts, orderings, and precisions. A :class:`SweepGrid` declares that
+cross product once; :func:`run_sweep` then exploits two structural facts to
+make the sweep cheap:
+
+* all ordering/precision/tiebreak variants of one (mesh, model) pair share
+  identical traffic *shapes* (ordering permutes words within packets,
+  quantization narrows them; neither changes flit geometry), so the
+  packetization skeleton is built once per shape class
+  (``build_traffic_batch``) and every variant drains in a single vmapped,
+  compile-cached simulation (``simulate_batch``);
+* meshes of equal size share the simulator executable across models, since
+  the compiled step is keyed only on (config, traffic shape).
+
+Each grid cell yields one row: raw BT totals, exact drain cycles, the
+reduction against the cell's O0 baseline, and an *honest* reduction that
+charges the O2 recovery index (``WireTransform.overhead_bits_per_value``,
+paper Sec. IV-C1) against the win. ``out_path`` writes the rows plus grid
+metadata as a JSON artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Union
+
+from repro.core.wire import WireTransform, by_name
+from repro.quant import quantize_fixed8
+from .topology import NocConfig, mesh_by_name
+from .traffic import (LayerTraffic, assemble_traffic, ordered_payloads,
+                      pad_traffic_length, stream_lengths)
+from .sim import SimResult, simulate_batch
+
+__all__ = ["SweepGrid", "SweepReport", "run_sweep", "recovery_overhead_bits"]
+
+Mesh = Union[str, NocConfig]
+LayersFn = Callable[[str], Sequence[LayerTraffic]]
+
+_QUANTIZERS = {
+    "float32": None,
+    "fixed8": lambda t: quantize_fixed8(t).values,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepGrid:
+    """One declarative sweep: mesh sizes x MC counts x transforms x
+    tiebreaks x precisions x models.
+
+    meshes: PAPER_NOCS names, ``RxC_mcN`` specs, or NocConfig instances.
+    transforms: WireTransform names (``repro.core.wire.by_name``); the
+        ``baseline`` transform anchors the per-cell reduction percentages.
+    """
+
+    meshes: Sequence[Mesh] = ("4x4_mc2",)
+    transforms: Sequence[str] = ("O0", "O1", "O2")
+    tiebreaks: Sequence[str] = ("pattern",)
+    precisions: Sequence[str] = ("float32", "fixed8")
+    models: Sequence[str] = ("lenet",)
+    max_packets_per_layer: Optional[int] = 40
+    count_headers: bool = True
+    chunk: int = 2048
+    max_cycles: int = 2_000_000
+    baseline: str = "O0"
+
+    def __post_init__(self):
+        unknown = set(self.precisions) - set(_QUANTIZERS)
+        if unknown:
+            raise ValueError(f"unknown precisions {sorted(unknown)}; "
+                             f"supported: {sorted(_QUANTIZERS)}")
+        if self.baseline not in self.transforms:
+            raise ValueError(
+                f"baseline {self.baseline!r} not in transforms {self.transforms}")
+
+    def variant_axes(self):
+        """The per-shape-class variant list, in batch order."""
+        return [(prec, tb, tr) for prec in self.precisions
+                for tb in self.tiebreaks for tr in self.transforms]
+
+
+@dataclasses.dataclass
+class SweepReport:
+    rows: List[dict]
+    stats: dict
+
+    def row(self, **match) -> dict:
+        hits = [r for r in self.rows
+                if all(r[k] == v for k, v in match.items())]
+        if len(hits) != 1:
+            raise KeyError(f"{len(hits)} rows match {match}")
+        return hits[0]
+
+
+def recovery_overhead_bits(layers: Sequence[LayerTraffic],
+                           transform: WireTransform,
+                           max_packets_per_layer: Optional[int] = None) -> int:
+    """Total recovery-index bits a transform must transmit for ``layers``.
+
+    Separated ordering (O2) needs a minimal-bit-width index per (input,
+    weight) pair to re-affiliate the streams (paper Sec. IV-C1); the
+    ordering window is the packet payload, so the index addresses one of
+    ``k`` in-packet positions. O0/O1 report zero.
+    """
+    total = 0
+    for layer in layers:
+        n, k = int(layer.inputs.shape[0]), int(layer.inputs.shape[1])
+        if max_packets_per_layer is not None and n > max_packets_per_layer:
+            n = max_packets_per_layer
+        window = transform.window if transform.window is not None else k
+        total += n * k * transform.overhead_bits_per_value(min(window, k))
+    return total
+
+
+def _resolve_mesh(mesh: Mesh) -> tuple:
+    if isinstance(mesh, NocConfig):
+        return (f"{mesh.rows}x{mesh.cols}_mc{mesh.num_mcs}", mesh)
+    return (mesh, mesh_by_name(mesh))
+
+
+def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
+              out_path: Optional[str] = None,
+              check_conservation: bool = False) -> SweepReport:
+    """Execute every cell of ``grid``; one packetization + one batched
+    simulation per (mesh, model) shape class.
+
+    layers_for_model: model name -> LayerTraffic sequence (the sweep engine
+        stays decoupled from how weights are trained or loaded).
+    """
+    axes = grid.variant_axes()
+    variants = [(by_name(tr, tiebreak=tb), _QUANTIZERS[prec])
+                for prec, tb, tr in axes]
+    rows: List[dict] = []
+    classes = []
+    pack_s = sim_s = 0.0
+    stepped_cycles = 0          # cycle-steps executed across all variants
+    layer_cache: Dict[str, Sequence[LayerTraffic]] = {}
+    # Ordered payload words are mesh-independent (the transform sees only
+    # packet payloads and the flit width), so every mesh/MC-count cell of a
+    # model reuses one ordering pass; only the per-MC assembly is per-mesh.
+    payload_cache: Dict[tuple, list] = {}
+    # MC placements of one mesh size share a compiled simulator when their
+    # traffic shapes match; pad every member of a size group to the group's
+    # max MC-stream count and max stream length.
+    resolved = [_resolve_mesh(m) for m in grid.meshes]
+    size_groups: Dict[tuple, List[NocConfig]] = {}
+    for _, cfg in resolved:
+        key = (cfg.rows, cfg.cols, cfg.num_vcs, cfg.vc_depth, cfg.lanes)
+        size_groups.setdefault(key, []).append(cfg)
+
+    for mesh_name, cfg in resolved:
+        for model in grid.models:
+            if model not in layer_cache:
+                layer_cache[model] = layers_for_model(model)
+            layers = layer_cache[model]
+
+            t0 = time.perf_counter()
+            pkey = (model, cfg.lanes)
+            if pkey not in payload_cache:
+                payload_cache[pkey] = ordered_payloads(
+                    layers, cfg.lanes, variants,
+                    max_packets_per_layer=grid.max_packets_per_layer)
+            group = size_groups[(cfg.rows, cfg.cols, cfg.num_vcs,
+                                 cfg.vc_depth, cfg.lanes)]
+            shapes = [(w.shape[1], w.shape[2]) for w in payload_cache[pkey]]
+            mc_pad = max(c.num_mcs for c in group)
+            t_pad = max(int(stream_lengths(shapes, c.num_mcs).max())
+                        for c in group)
+            traffic = pad_traffic_length(
+                assemble_traffic(payload_cache[pkey], cfg,
+                                 num_streams=mc_pad,
+                                 num_variants=len(variants)), t_pad)
+            t1 = time.perf_counter()
+            results: List[SimResult] = simulate_batch(
+                cfg, traffic, count_headers=grid.count_headers,
+                chunk=grid.chunk, max_cycles=grid.max_cycles,
+                check_conservation=check_conservation)
+            t2 = time.perf_counter()
+            pack_s += t1 - t0
+            sim_s += t2 - t1
+            stepped_cycles += sum(r.cycles for r in results)
+            classes.append({
+                "mesh": mesh_name, "model": model, "variants": len(axes),
+                "packetize_s": round(t1 - t0, 4), "simulate_s": round(t2 - t1, 4),
+            })
+
+            base_bt = {}
+            for (prec, tb, tr), res in zip(axes, results):
+                if tr == grid.baseline:
+                    base_bt[(prec, tb)] = res.total_bt
+            for (prec, tb, tr), (transform, _), res in zip(axes, variants,
+                                                           results):
+                overhead = recovery_overhead_bits(
+                    layers, transform,
+                    max_packets_per_layer=grid.max_packets_per_layer)
+                # Charge each recovery-index bit half a transition (the
+                # toggle expectation of an uninformative bit stream): the
+                # index rides the same links as the payload, so an honest
+                # reduction figure must pay for it (paper Sec. IV-C1).
+                adjusted_bt = res.total_bt + overhead // 2
+                base = base_bt[(prec, tb)]
+                rows.append({
+                    "mesh": mesh_name, "model": model, "precision": prec,
+                    "transform": tr, "tiebreak": tb,
+                    "total_bt": res.total_bt,
+                    "adjusted_bt": adjusted_bt,
+                    "overhead_bits": overhead,
+                    "cycles": res.drain_cycle,
+                    "flits": res.injected,
+                    "bt_per_flit": res.bt_per_flit,
+                    "reduction_pct": (1 - res.total_bt / base) * 100,
+                    "adjusted_reduction_pct": (1 - adjusted_bt / base) * 100,
+                })
+
+    wall = pack_s + sim_s
+    stats = {
+        "cells": len(rows),
+        "shape_classes": classes,
+        "packetize_s": round(pack_s, 4),
+        "simulate_s": round(sim_s, 4),
+        "wall_s": round(wall, 4),
+        "stepped_cycles": stepped_cycles,
+        "cycles_per_sec": round(stepped_cycles / sim_s, 1) if sim_s else None,
+    }
+    report = SweepReport(rows=rows, stats=stats)
+    if out_path:
+        os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump({"grid": _grid_json(grid), "rows": rows,
+                       "stats": stats}, f, indent=1)
+    return report
+
+
+def _grid_json(grid: SweepGrid) -> dict:
+    out = dataclasses.asdict(grid)
+    out["meshes"] = [_resolve_mesh(m)[0] for m in grid.meshes]
+    for key in ("transforms", "tiebreaks", "precisions", "models"):
+        out[key] = list(out[key])
+    return out

@@ -12,13 +12,15 @@ Port numbering (inputs and outputs symmetric):
 from __future__ import annotations
 
 import dataclasses
+import re
 from typing import Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["NocConfig", "PORT_N", "PORT_E", "PORT_S", "PORT_W", "PORT_LOCAL",
-           "NUM_PORTS", "OPPOSITE", "xy_route", "neighbor_table", "PAPER_NOCS"]
+           "NUM_PORTS", "OPPOSITE", "xy_route", "neighbor_table", "PAPER_NOCS",
+           "make_noc", "mesh_by_name"]
 
 PORT_N, PORT_E, PORT_S, PORT_W, PORT_LOCAL = 0, 1, 2, 3, 4
 NUM_PORTS = 5
@@ -116,6 +118,8 @@ def _edge_spread(rows: int, cols: int, n: int) -> Tuple[int, ...]:
     border += [(r, cols - 1) for r in range(1, rows)]
     border += [(rows - 1, c) for c in range(cols - 2, -1, -1)]
     border += [(r, 0) for r in range(rows - 2, 0, -1)]
+    # single-row/column meshes revisit the same coordinates going back
+    border = list(dict.fromkeys(border))
     step = len(border) / n
     picks = [border[int(i * step)] for i in range(n)]
     return tuple(r * cols + c for r, c in picks)
@@ -127,3 +131,36 @@ PAPER_NOCS = {
     "8x8_mc4": NocConfig(8, 8, _edge_spread(8, 8, 4)),
     "8x8_mc8": NocConfig(8, 8, _edge_spread(8, 8, 8)),
 }
+
+
+def make_noc(rows: int, cols: int, num_mcs: int, **kw) -> NocConfig:
+    """Any mesh size with evenly edge-spread MCs.
+
+    The sweep engine uses this to go beyond the paper's three PAPER_NOCS
+    (e.g. the 2x2/MC1 CI smoke mesh or 16x16 scaling studies); MC placement
+    follows the same boundary spread as the paper configurations.
+    """
+    boundary = rows * cols - max(rows - 2, 0) * max(cols - 2, 0)
+    if num_mcs < 1 or num_mcs > boundary:
+        raise ValueError(f"cannot place {num_mcs} MCs on a "
+                         f"{rows}x{cols} mesh boundary ({boundary} routers)")
+    if num_mcs >= rows * cols:
+        raise ValueError(f"{num_mcs} MCs on a {rows}x{cols} mesh leave no "
+                         "PE routers to receive traffic")
+    return NocConfig(rows, cols, _edge_spread(rows, cols, num_mcs), **kw)
+
+
+_MESH_NAME = re.compile(r"^(\d+)x(\d+)_mc(\d+)$")
+
+
+def mesh_by_name(name: str) -> NocConfig:
+    """Resolve a ``RxC_mcN`` mesh name; PAPER_NOCS names resolve exactly."""
+    if name in PAPER_NOCS:
+        return PAPER_NOCS[name]
+    m = _MESH_NAME.match(name)
+    if not m:
+        raise KeyError(
+            f"unknown mesh {name!r}: expected one of {sorted(PAPER_NOCS)} "
+            "or a 'RxC_mcN' spec")
+    rows, cols, mcs = map(int, m.groups())
+    return make_noc(rows, cols, mcs)

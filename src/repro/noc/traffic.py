@@ -10,23 +10,38 @@ A *packet* carries the operands for one neuron (one output position x output
 channel for conv; one output unit for linear): K (input, weight) pairs plus
 one header flit. The ordering window is the packet payload, matching the
 paper's ordering-unit-per-MC placement (it sees one packet at a time).
+
+Packetization is fully vectorized (the seed's per-neuron Python loop lives
+on only as the equivalence oracle in ``repro.noc._reference``): the MC/PE/VC
+round-robin assignments are closed-form functions of the global packet id,
+header words and META bitfields are synthesized as arrays, the ordering
+transform is applied via one ``vmap`` per layer, and per-MC streams are
+written with one scatter per layer. ``build_traffic_batch`` additionally
+shares all of that skeleton work across ordering/precision variants, which
+only differ in payload words.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable, List, Optional, Sequence
+import functools
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.wire import WireTransform
-from repro.core.flits import pack_paired
 from .topology import NocConfig
 from .sim import Traffic, META_PAYLOAD, META_TAIL
 
-__all__ = ["LayerTraffic", "build_traffic", "conv_layer_traffic",
+__all__ = ["LayerTraffic", "build_traffic", "build_traffic_batch",
+           "ordered_payloads", "assemble_traffic", "stream_lengths",
+           "pad_traffic_length", "conv_layer_traffic",
            "linear_layer_traffic"]
+
+# One sweep variant: an ordering transform plus an optional value->wire-dtype
+# quantizer (None transmits raw float32 words).
+Variant = Tuple[WireTransform, Optional[Callable[[jax.Array], jax.Array]]]
 
 
 @dataclasses.dataclass
@@ -70,10 +85,246 @@ def linear_layer_traffic(x: jax.Array, w: jax.Array) -> LayerTraffic:
     return LayerTraffic(inputs, w)
 
 
-def _header_word(dest: int, pkt_id: int, n_payload: int, lanes: int) -> np.ndarray:
-    h = np.zeros((lanes,), np.uint32)
-    h[0], h[1], h[2] = dest, pkt_id & 0xFFFFFFFF, n_payload
-    return h
+def _subsample(layer: LayerTraffic,
+               max_packets: Optional[int]) -> Tuple[jax.Array, jax.Array]:
+    """Deterministic-stride neuron subsampling (BT rates are per-flit, so
+    subsampling is unbiased); identical to the seed packetizer's."""
+    inp, wgt = layer.inputs, layer.weights
+    n = int(inp.shape[0])
+    if max_packets is not None and n > max_packets:
+        stride = n // max_packets
+        idx = jnp.arange(0, stride * max_packets, stride)
+        inp, wgt = inp[idx], wgt[idx]
+    return inp, wgt
+
+
+@functools.lru_cache(maxsize=None)
+def _packet_fn(transform: WireTransform, lanes: int):
+    """Vmapped packet transform, memoized per (transform, lanes).
+
+    WireTransforms are frozen dataclasses, so they key the cache. The vmap
+    is deliberately left un-jitted: its primitives (argsort, gathers,
+    bitcasts) hit JAX's per-primitive executable cache, which the rest of
+    the stack shares, whereas a whole-program jit would recompile per
+    (transform, layer shape) combination - measurably slower for the one
+    pass per model a sweep performs."""
+
+    def one_packet(i, w):
+        return transform.apply(i, w, lanes).words
+
+    return jax.vmap(one_packet)
+
+
+def _payload_words(inp: jax.Array, wgt: jax.Array, transform: WireTransform,
+                   quantizer, lanes: int) -> np.ndarray:
+    """Ordered payload flits for every neuron of one layer: (n, F, L) u32.
+
+    One vmap over neurons applies the WireTransform packet-by-packet (the
+    ordering window is the packet payload)."""
+    if quantizer is not None:
+        inp, wgt = quantizer(inp), quantizer(wgt)
+    words = _packet_fn(transform, lanes)(inp, wgt)
+    return np.asarray(words.astype(jnp.uint32))
+
+
+def ordered_payloads(
+    layers: Sequence[LayerTraffic],
+    lanes: int,
+    variants: Sequence[Variant],
+    *,
+    max_packets_per_layer: Optional[int] = None,
+) -> List[np.ndarray]:
+    """Ordered payload words per layer, stacked over variants: (B, n, F, L).
+
+    This is the mesh-independent half of packetization (the transform sees
+    only packet payloads and the flit width); the sweep engine computes it
+    once per model and re-assembles it for every mesh / MC-count cell via
+    :func:`assemble_traffic`.
+    """
+    if not variants:
+        raise ValueError("need at least one (transform, quantizer) variant")
+    out: List[np.ndarray] = []
+    for layer in layers:
+        inp, wgt = _subsample(layer, max_packets_per_layer)
+        per_variant = [_payload_words(inp, wgt, tr, q, lanes)
+                       for tr, q in variants]
+        shapes = {w.shape for w in per_variant}
+        if len(shapes) != 1:
+            raise ValueError(
+                f"variants disagree on flit geometry: {sorted(shapes)}")
+        out.append(np.stack(per_variant))
+    return out
+
+
+def stream_lengths(layer_shapes: Sequence[Tuple[int, int]],
+                   m: int) -> np.ndarray:
+    """Per-MC flit counts for layers of ``(n_packets, payload_flits)``.
+
+    Closed-form: packets round-robin over the ``m`` MCs, each contributing
+    its payload plus one header flit. Lets the sweep engine size stream
+    padding without materializing any traffic.
+    """
+    lengths = np.zeros(m, np.int64)
+    g0 = 0
+    for n, fpay in layer_shapes:
+        gids = g0 + np.arange(n, dtype=np.int64)
+        lengths += np.bincount(gids % m, minlength=m) * (fpay + 1)
+        g0 += n
+    return lengths
+
+
+def pad_traffic_length(traffic: Traffic, t: int) -> Traffic:
+    """Pad the per-MC stream axis T with empty flits.
+
+    Padding beyond ``length`` is never injected, so this only changes array
+    shapes - the sweep engine uses it (with MC-stream padding) to give every
+    MC placement of one mesh size identical traffic shapes, and therefore
+    one shared compiled simulator.
+    """
+    cur = int(traffic.words.shape[-2])
+    if t <= cur:
+        return traffic
+    extra = t - cur
+
+    def pad_last(a):
+        widths = [(0, 0)] * (a.ndim - 1) + [(0, extra)]
+        return jnp.asarray(np.pad(np.asarray(a), widths))
+
+    words = np.pad(np.asarray(traffic.words),
+                   [(0, 0)] * (traffic.words.ndim - 2) + [(0, extra), (0, 0)])
+    return Traffic(words=jnp.asarray(words), dest=pad_last(traffic.dest),
+                   meta=pad_last(traffic.meta), vc=pad_last(traffic.vc),
+                   pkt=pad_last(traffic.pkt), length=traffic.length)
+
+
+def assemble_traffic(layer_words: Sequence[np.ndarray],
+                     cfg: NocConfig,
+                     num_streams: Optional[int] = None,
+                     num_variants: Optional[int] = None) -> Traffic:
+    """Scatter per-layer (B, n, F, L) payloads into batched per-MC streams.
+
+    All variants share the packetization skeleton (headers, META bitfields,
+    MC/PE/VC round-robin, per-MC scatter layout): an ordering transform only
+    permutes values within a packet and a quantizer only narrows them, so
+    the flit geometry - and therefore dest/meta/vc/pkt/length - is variant-
+    independent. Only the payload words differ per variant. The result
+    feeds :func:`repro.noc.sim.simulate_batch` directly.
+
+    num_streams: pad the MC-stream axis to this count with empty streams
+        (packets still round-robin over the config's real MCs). The sweep
+        engine pads every placement of one mesh size to a common count so
+        they share a single compiled simulator.
+    num_variants: the variants-axis size when ``layer_words`` is empty (it
+        is otherwise read off the payload arrays).
+    """
+    m, lanes = cfg.num_mcs, cfg.lanes
+    if num_streams is not None and num_streams < m:
+        raise ValueError(f"cannot pad {m} MC streams down to {num_streams}")
+    nv = layer_words[0].shape[0] if layer_words else (num_variants or 1)
+    pes = np.asarray(cfg.pe_nodes, np.int64)
+    for words_v in layer_words:
+        if words_v.shape[3] != lanes:
+            raise ValueError(f"payloads built for {words_v.shape[3]} lanes, "
+                             f"config has {lanes}")
+
+    # Closed-form round-robin skeleton. With global packet id g
+    # (consecutive across layers), the seed loop's bookkeeping collapses to
+    #   mc(g)   = g % M                 (packet round-robin over MCs)
+    #   dest(g) = pes[g % num_pes]      (pe_rr increments once per packet)
+    #   vc(g)   = (g // M) % V          (vc_rr[mc] counts packets at mc, and
+    #                                    the mc assignment is a perfect RR)
+    # and a packet's flit offset inside its MC stream is the running flit
+    # count of earlier packets at that MC.
+    per_layer = []
+    lengths = np.zeros(m, np.int64)
+    g0 = 0
+    for words_v in layer_words:
+        n, fpay = words_v.shape[1], words_v.shape[2]
+        f = fpay + 1                                    # + header flit
+        gids = g0 + np.arange(n, dtype=np.int64)
+        mcs = gids % m
+        per_layer.append((gids, mcs, f))
+        lengths += np.bincount(mcs, minlength=m) * f
+        g0 += n
+
+    t = int(lengths.max()) if len(lengths) else 0
+    words_arr = np.zeros((nv, m, t, lanes), np.uint32)
+    dest_arr = np.zeros((m, t), np.int32)
+    meta_arr = np.zeros((m, t), np.int32)
+    vc_arr = np.zeros((m, t), np.int32)
+    pkt_arr = np.zeros((m, t), np.int32)
+
+    mc_base = np.zeros(m, np.int64)                     # flits written per MC
+    for (gids, mcs, f), words_v in zip(per_layer, layer_words):
+        n, fpay = words_v.shape[1], words_v.shape[2]
+        if n == 0:
+            continue
+        start = gids[0]
+        dest = pes[gids % len(pes)].astype(np.int32)
+        vc = ((gids // m) % cfg.num_vcs).astype(np.int32)
+        # Rank of each packet among this layer's packets at its MC: packets
+        # at one MC are g0+j0, g0+j0+M, ... so rank = (j - j0) // M.
+        j = gids - start
+        j0 = (mcs - start) % m
+        rank = (j - j0) // m
+        flit0 = mc_base[mcs] + rank * f                 # (n,) stream offset
+        cols = (flit0[:, None] + np.arange(f)[None, :]).reshape(-1)
+        rows = np.repeat(mcs, f)
+
+        # Header synthesis: word 0 = dest, 1 = packet id, 2 = payload flits.
+        hdr = np.zeros((n, lanes), np.uint32)
+        hdr[:, 0] = dest.astype(np.uint32)
+        hdr[:, 1] = (gids & 0xFFFFFFFF).astype(np.uint32)
+        hdr[:, 2] = fpay
+        full = np.empty((nv, n, f, lanes), np.uint32)
+        full[:, :, 0, :] = hdr[None]
+        full[:, :, 1:, :] = words_v
+
+        # META bitfield: header 0, payload flits PAYLOAD, last flit |= TAIL.
+        md = np.full((f,), META_PAYLOAD, np.int32)
+        md[0] = 0
+        md[-1] |= META_TAIL
+
+        words_arr[:, rows, cols] = full.reshape(nv, n * f, lanes)
+        dest_arr[rows, cols] = np.repeat(dest, f)
+        meta_arr[rows, cols] = np.broadcast_to(md, (n, f)).reshape(-1)
+        vc_arr[rows, cols] = np.repeat(vc, f)
+        pkt_arr[rows, cols] = np.repeat(gids.astype(np.int32), f)
+        mc_base += np.bincount(mcs, minlength=m) * f
+
+    if num_streams is not None and num_streams > m:
+        extra = num_streams - m
+        words_arr = np.concatenate(
+            [words_arr, np.zeros((nv, extra, t, lanes), np.uint32)], axis=1)
+        pad2 = ((0, extra), (0, 0))
+        dest_arr = np.pad(dest_arr, pad2)
+        meta_arr = np.pad(meta_arr, pad2)
+        vc_arr = np.pad(vc_arr, pad2)
+        pkt_arr = np.pad(pkt_arr, pad2)
+        lengths = np.pad(lengths, (0, extra))
+
+    def tile(a):
+        return jnp.asarray(np.broadcast_to(a, (nv,) + a.shape))
+
+    return Traffic(
+        words=jnp.asarray(words_arr), dest=tile(dest_arr), meta=tile(meta_arr),
+        vc=tile(vc_arr), pkt=tile(pkt_arr),
+        length=tile(lengths.astype(np.int32)))
+
+
+def build_traffic_batch(
+    layers: Sequence[LayerTraffic],
+    cfg: NocConfig,
+    variants: Sequence[Variant],
+    *,
+    max_packets_per_layer: Optional[int] = None,
+) -> Traffic:
+    """Packetize ``layers`` once per (transform, quantizer) variant into a
+    batched Traffic with a leading variants axis (see
+    :func:`ordered_payloads` / :func:`assemble_traffic`)."""
+    payloads = ordered_payloads(layers, cfg.lanes, variants,
+                                max_packets_per_layer=max_packets_per_layer)
+    return assemble_traffic(payloads, cfg, num_variants=len(variants))
 
 
 def build_traffic(
@@ -90,71 +341,10 @@ def build_traffic(
         default transmits raw float32 words.
     max_packets_per_layer: subsample neurons (deterministic stride) to bound
         simulation time; BT rates are per-flit so subsampling is unbiased.
+
+    Bit-identical to the seed loop implementation (pinned by the equivalence
+    regression test against ``repro.noc._reference``).
     """
-    m = cfg.num_mcs
-    pes = np.asarray(cfg.pe_nodes, np.int32)
-    streams: List[List[np.ndarray]] = [[] for _ in range(m)]     # words
-    meta: List[List[np.ndarray]] = [[] for _ in range(m)]        # (dest, meta, vc, pkt)
-    vc_rr = [0] * m
-    pkt_id = 0
-    pe_rr = 0
-
-    for layer in layers:
-        inp, wgt = layer.inputs, layer.weights
-        n = int(inp.shape[0])
-        if max_packets_per_layer is not None and n > max_packets_per_layer:
-            stride = n // max_packets_per_layer
-            idx = jnp.arange(0, stride * max_packets_per_layer, stride)
-            inp, wgt = inp[idx], wgt[idx]
-            n = int(inp.shape[0])
-        if quantizer is not None:
-            inp, wgt = quantizer(inp), quantizer(wgt)
-        # Apply the ordering transform per packet, vectorized over neurons.
-        def one_packet(i, w):
-            stream = transform.apply(i, w, cfg.lanes)
-            return stream.words
-        words = jax.vmap(one_packet)(inp, wgt)      # (n, F, L)
-        words = np.asarray(words.astype(jnp.uint32))
-        n_flits = words.shape[1]
-        for j in range(n):
-            mc = (pkt_id % m)
-            dest = int(pes[pe_rr % len(pes)])
-            pe_rr += 1
-            header = _header_word(dest, pkt_id, n_flits, cfg.lanes)
-            pkt_words = np.concatenate([header[None], words[j]], axis=0)
-            f = pkt_words.shape[0]
-            md = np.full((f,), META_PAYLOAD, np.int32)
-            md[0] = 0
-            md[-1] |= META_TAIL
-            vc = vc_rr[mc] % cfg.num_vcs
-            vc_rr[mc] += 1
-            streams[mc].append(pkt_words)
-            meta[mc].append(np.stack([
-                np.full((f,), dest, np.int32),
-                md,
-                np.full((f,), vc, np.int32),
-                np.full((f,), pkt_id, np.int32)], axis=1))
-            pkt_id += 1
-
-    lengths = np.array([sum(len(x) for x in s) for s in streams], np.int32)
-    t = int(lengths.max()) if len(lengths) else 0
-    l = cfg.lanes
-    words_arr = np.zeros((m, t, l), np.uint32)
-    dest_arr = np.zeros((m, t), np.int32)
-    meta_arr = np.zeros((m, t), np.int32)
-    vc_arr = np.zeros((m, t), np.int32)
-    pkt_arr = np.zeros((m, t), np.int32)
-    for mc in range(m):
-        if not streams[mc]:
-            continue
-        w = np.concatenate(streams[mc], axis=0)
-        md = np.concatenate(meta[mc], axis=0)
-        words_arr[mc, :w.shape[0]] = w
-        dest_arr[mc, :w.shape[0]] = md[:, 0]
-        meta_arr[mc, :w.shape[0]] = md[:, 1]
-        vc_arr[mc, :w.shape[0]] = md[:, 2]
-        pkt_arr[mc, :w.shape[0]] = md[:, 3]
-    return Traffic(
-        words=jnp.asarray(words_arr), dest=jnp.asarray(dest_arr),
-        meta=jnp.asarray(meta_arr), vc=jnp.asarray(vc_arr),
-        pkt=jnp.asarray(pkt_arr), length=jnp.asarray(lengths))
+    batch = build_traffic_batch(layers, cfg, [(transform, quantizer)],
+                                max_packets_per_layer=max_packets_per_layer)
+    return Traffic(*(field[0] for field in batch))

@@ -1,0 +1,181 @@
+"""Sweep-engine regression suite: the vectorized packetizer and the
+retrace-free simulator are pinned bit-for-bit to the seed implementation
+(``repro.noc._reference``), packet conservation is enforced, and the
+declarative SweepGrid engine is exercised end to end."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.wire import by_name
+from repro.data import glyph_batch
+from repro.models import LeNet, init_params
+from repro.noc import (NocConfig, LayerTraffic, SweepGrid, Traffic,
+                       build_traffic, build_traffic_batch, make_noc,
+                       mesh_by_name, recovery_overhead_bits, run_sweep,
+                       simulate, simulate_batch)
+from repro.noc._reference import build_traffic_reference, simulate_reference
+from repro.quant import quantize_fixed8
+
+CHUNK = 256
+
+
+@pytest.fixture(scope="module")
+def lenet_layers():
+    """The pinned equivalence workload: two LeNet layers (conv + linear)
+    of one deterministic random-init inference."""
+    model = LeNet()
+    params = init_params(model.specs(), jax.random.PRNGKey(0))
+    x, _ = glyph_batch(jax.random.PRNGKey(7), 1)
+    layers = model.layer_traffic(params, x[0])
+    return [layers[0], layers[-1]]
+
+
+@pytest.fixture(scope="module")
+def pinned_cfg():
+    return NocConfig(rows=4, cols=4, mc_nodes=(0, 15), num_vcs=3, lanes=8)
+
+
+def _assert_traffic_equal(a, b):
+    for name in a._fields:
+        xa, xb = np.asarray(getattr(a, name)), np.asarray(getattr(b, name))
+        assert xa.dtype == xb.dtype, name
+        assert xa.shape == xb.shape, name
+        assert np.array_equal(xa, xb), f"Traffic.{name} diverged"
+
+
+@pytest.mark.parametrize("ordering", ["O0", "O1", "O2"])
+def test_packetizer_bit_identical_to_seed_loop(lenet_layers, pinned_cfg,
+                                               ordering):
+    """The vectorized packetizer reproduces the seed's per-neuron loop
+    exactly: words/dest/meta/vc/pkt/length all bit-identical."""
+    for quantizer in (None, lambda t: quantize_fixed8(t).values):
+        tr = by_name(ordering, tiebreak="pattern")
+        new = build_traffic(lenet_layers, pinned_cfg, tr, quantizer=quantizer,
+                            max_packets_per_layer=6)
+        ref = build_traffic_reference(lenet_layers, pinned_cfg, tr,
+                                      quantizer=quantizer,
+                                      max_packets_per_layer=6)
+        _assert_traffic_equal(new, ref)
+
+
+def test_simulate_identical_to_seed_driver(lenet_layers, pinned_cfg):
+    """Same traffic, same chunking: total_bt, cycles, and the per-link BT
+    maps must match the pre-refactor (closure-captured) simulator."""
+    traffic = build_traffic(lenet_layers, pinned_cfg, by_name("O1"),
+                            max_packets_per_layer=6)
+    ref = simulate_reference(pinned_cfg, traffic, chunk=CHUNK)
+    new = simulate(pinned_cfg, traffic, chunk=CHUNK, check_conservation=True)
+    assert new.total_bt == ref.total_bt
+    assert new.cycles == ref.cycles
+    assert new.ejected == ref.ejected == new.injected
+    assert np.array_equal(new.link_bt, ref.link_bt)
+    assert np.array_equal(new.inj_bt, ref.inj_bt)
+    assert 0 < new.drain_cycle <= new.cycles
+
+
+def test_simulate_batch_matches_single_runs(lenet_layers, pinned_cfg):
+    """A batched O0/O1/O2 drain returns exactly what three single simulate
+    calls return (shared-shape variants, one compiled program)."""
+    variants = [(by_name(o), None) for o in ("O0", "O1", "O2")]
+    batch = build_traffic_batch(lenet_layers, pinned_cfg, variants,
+                                max_packets_per_layer=6)
+    batch_res = simulate_batch(pinned_cfg, batch, chunk=CHUNK,
+                               check_conservation=True)
+    for (transform, _), got in zip(variants, batch_res):
+        single = simulate(
+            pinned_cfg,
+            build_traffic(lenet_layers, pinned_cfg, transform,
+                          max_packets_per_layer=6),
+            chunk=CHUNK)
+        assert got.total_bt == single.total_bt
+        assert got.drain_cycle == single.drain_cycle
+        assert got.ejected == single.ejected
+        assert np.array_equal(got.link_bt, single.link_bt)
+
+
+def test_conservation_detects_duplicate_packet_ids(lenet_layers, pinned_cfg):
+    """The pkt field is now actually checked: collapsing all packet ids to
+    zero means id 0 is 'injected' many times - the debug path must raise."""
+    traffic = build_traffic(lenet_layers, pinned_cfg, by_name("O0"),
+                            max_packets_per_layer=6)
+    bad = traffic._replace(pkt=jnp.zeros_like(traffic.pkt))
+    with pytest.raises(RuntimeError, match="conservation"):
+        simulate(pinned_cfg, bad, chunk=CHUNK, check_conservation=True)
+
+
+def test_padded_streams_leave_results_untouched(lenet_layers, pinned_cfg):
+    """MC-stream / stream-length padding (how the sweep engine lets every
+    MC placement of one mesh size share an executable) must not perturb the
+    flit timeline: empty streams never inject."""
+    from repro.noc.traffic import (assemble_traffic, ordered_payloads,
+                                   pad_traffic_length)
+    payloads = ordered_payloads(lenet_layers, pinned_cfg.lanes,
+                                [(by_name("O1"), None)],
+                                max_packets_per_layer=6)
+    plain = assemble_traffic(payloads, pinned_cfg)
+    padded = pad_traffic_length(
+        assemble_traffic(payloads, pinned_cfg, num_streams=4),
+        int(plain.words.shape[-2]) + 7)
+    assert padded.length.shape == (1, 4)
+    a = simulate(pinned_cfg, Traffic(*(x[0] for x in plain)), chunk=CHUNK)
+    b = simulate(pinned_cfg, Traffic(*(x[0] for x in padded)), chunk=CHUNK)
+    assert a.total_bt == b.total_bt
+    assert a.drain_cycle == b.drain_cycle
+    assert np.array_equal(a.link_bt, b.link_bt)
+
+
+def test_mesh_by_name_and_make_noc():
+    cfg = mesh_by_name("2x2_mc1")
+    assert (cfg.rows, cfg.cols, cfg.num_mcs) == (2, 2, 1)
+    assert mesh_by_name("8x8_mc4").num_inter_router_links == 112
+    with pytest.raises(KeyError):
+        mesh_by_name("not-a-mesh")
+    with pytest.raises(ValueError):
+        make_noc(2, 2, 9)   # more MCs than boundary routers
+
+
+def test_recovery_overhead_bits():
+    layers = [LayerTraffic(jnp.zeros((10, 16)), jnp.zeros((10, 16)))]
+    assert recovery_overhead_bits(layers, by_name("O0")) == 0
+    assert recovery_overhead_bits(layers, by_name("O1")) == 0
+    # O2: 4 index bits per value for a 16-value window, 10 packets x 16
+    assert recovery_overhead_bits(layers, by_name("O2")) == 10 * 16 * 4
+    assert recovery_overhead_bits(layers, by_name("O2"),
+                                  max_packets_per_layer=5) == 5 * 16 * 4
+
+
+def test_sweep_grid_end_to_end(tmp_path):
+    """Declarative grid -> rows + JSON artifact; baseline anchoring and the
+    honest O2 recovery-index charge."""
+    key = jax.random.PRNGKey(3)
+    layers = [LayerTraffic(
+        jax.random.normal(key, (12, 16)),
+        jax.random.normal(jax.random.fold_in(key, 1), (12, 16)) * 0.3)]
+    grid = SweepGrid(meshes=("2x2_mc1",), transforms=("O0", "O2"),
+                     tiebreaks=("pattern",), precisions=("fixed8",),
+                     models=("toy",), max_packets_per_layer=None, chunk=CHUNK)
+    out = tmp_path / "sweep.json"
+    report = run_sweep(grid, lambda name: layers, out_path=str(out),
+                       check_conservation=True)
+    assert len(report.rows) == 2
+    base = report.row(transform="O0")
+    o2 = report.row(transform="O2")
+    assert base["reduction_pct"] == 0.0 and base["overhead_bits"] == 0
+    assert o2["overhead_bits"] == 12 * 16 * 4
+    # honest reduction is strictly worse than the raw link number for O2
+    assert o2["adjusted_reduction_pct"] < o2["reduction_pct"]
+    assert o2["adjusted_bt"] == o2["total_bt"] + o2["overhead_bits"] // 2
+    assert report.stats["cells"] == 2
+    assert report.stats["cycles_per_sec"] is not None
+    import json
+    blob = json.loads(out.read_text())
+    assert set(blob) == {"grid", "rows", "stats"}
+    assert blob["grid"]["meshes"] == ["2x2_mc1"]
+
+
+def test_sweep_grid_validation():
+    with pytest.raises(ValueError, match="baseline"):
+        SweepGrid(transforms=("O1",), baseline="O0")
+    with pytest.raises(ValueError, match="precisions"):
+        SweepGrid(precisions=("int4",))
