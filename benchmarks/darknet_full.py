@@ -1,0 +1,136 @@
+"""Beyond the paper's scale axis: the *full*, unsubsampled DarkNet traffic
+on a 16x16 mesh (the paper tops out at 8x8) with the MC-placement axis, via
+streamed packetization and the (optionally device-sharded) batched drain.
+
+This is the sweep the engine existed to reach: every neuron of every
+DarkNetLike layer (~100k packets, ~1.3M flits) is packetized in bounded
+chunks (`build_traffic_streamed`), placements share one compiled simulator,
+and - on multi-device hosts - the variants axis shards across devices.
+The suite records wall-clock, simulated cycles/sec, and the
+sharded-vs-unsharded speedup into BENCH_noc.json.
+
+Continuing the paper's doubling pattern (4x4/MC2 -> 8x8/MC4 -> 8x8/MC8),
+the 16x16 mesh carries 16 MCs so injection bandwidth scales with the mesh.
+
+``REPRO_BENCH_SMOKE=1`` shrinks to full (still unsubsampled) LeNet traffic
+on a 4x4/MC2 mesh with random-init weights - the CI gate for the streamed
+full-traffic path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from repro.data import glyph_batch
+from repro.noc import SweepGrid, run_sweep
+
+from ._trained import get_trained, random_params
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments")
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+def _layers(name: str):
+    if SMOKE:
+        model, params = random_params(name)
+    else:
+        model, params, _ = get_trained(name)
+    hw, ch = model.input_shape[0], model.input_shape[-1]
+    x, _ = glyph_batch(jax.random.PRNGKey(11), 1, hw=hw, channels=ch)
+    return model.layer_traffic(params, x[0])
+
+
+def _grid() -> SweepGrid:
+    return SweepGrid(
+        meshes=("4x4_mc2",) if SMOKE else ("16x16_mc16",),
+        placements=("edge", "interleaved"),
+        transforms=("O0", "O1") if SMOKE else ("O0", "O1", "O2"),
+        tiebreaks=("pattern",),
+        precisions=("fixed8",),
+        models=("lenet",) if SMOKE else ("darknet",),
+        max_packets_per_layer=None,          # full traffic -> streamed path
+        chunk=4096)
+
+
+def run() -> dict:
+    grid = _grid()
+    model = grid.models[0]
+    ndev = jax.local_device_count()
+    layers = _layers(model)
+    layers_fn = lambda _name: layers         # noqa: E731 - one shared load
+
+    t0 = time.perf_counter()
+    report = run_sweep(grid, layers_fn)      # devices="auto": sharded if >1
+    wall = time.perf_counter() - t0
+
+    results = {}
+    for r in report.rows:
+        key = f"{r['mesh']}/{r['placement']}/{r['precision']}/{r['transform']}"
+        results[key] = {
+            "total_bt": r["total_bt"], "cycles": r["cycles"],
+            "flits": r["flits"],
+            "reduction_pct":
+                None if r["transform"] == grid.baseline
+                else r["reduction_pct"],
+            "adjusted_reduction_pct":
+                None if r["transform"] == grid.baseline
+                else r["adjusted_reduction_pct"],
+        }
+
+    bench = {
+        "model": model, "mesh": grid.meshes[0],
+        "placements": list(grid.placements),
+        "packets_full": int(sum(int(l.inputs.shape[0]) for l in layers)),
+        "wall_s": round(wall, 3),
+        "devices": ndev,
+        **{k: report.stats[k] for k in
+           ("cells", "packetize_s", "simulate_s", "stepped_cycles",
+            "cycles_per_sec", "streamed")},
+    }
+
+    # Sharded-vs-unsharded speedup: re-drain one placement's shape class
+    # unsharded and compare the simulate wall. Only meaningful with >1
+    # device; a 1-device host records the fallback.
+    if ndev > 1:
+        import dataclasses
+        probe = dataclasses.replace(grid, placements=(grid.placements[0],))
+        sharded = run_sweep(probe, layers_fn)
+        unsharded = run_sweep(probe, layers_fn, devices=None)
+        assert [r["total_bt"] for r in sharded.rows] == \
+            [r["total_bt"] for r in unsharded.rows], \
+            "sharded drain diverged from unsharded"
+        bench["sharded_simulate_s"] = sharded.stats["simulate_s"]
+        bench["unsharded_simulate_s"] = unsharded.stats["simulate_s"]
+        bench["shard_speedup"] = round(
+            unsharded.stats["simulate_s"] / sharded.stats["simulate_s"], 2)
+        bench["shard_bt_identical"] = True
+    else:
+        bench["shard_speedup"] = None
+
+    return {"results": results, "bench": bench}
+
+
+def main(print_csv=True):
+    out = run()
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "darknet_full.json"), "w") as f:
+        json.dump(out["results"], f, indent=1)
+    if print_csv:
+        b = out["bench"]
+        for key, r in out["results"].items():
+            red = "" if r["reduction_pct"] is None else \
+                f" reduction={r['reduction_pct']:.2f}%" \
+                f" adj={r['adjusted_reduction_pct']:.2f}%"
+            print(f"darknet_full/{key},0,bt={r['total_bt']}"
+                  f" cycles={r['cycles']} flits={r['flits']}{red}")
+        print(f"darknet_full/engine,{b['wall_s'] * 1e6:.0f},"
+              f"cycles_per_sec={b['cycles_per_sec']}"
+              f" devices={b['devices']} shard_speedup={b['shard_speedup']}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

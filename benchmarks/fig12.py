@@ -57,20 +57,23 @@ def lenet_layers(glyph_seed: int = 7, trained: bool = True):
     return model.layer_traffic(params, x[0])
 
 
-def run(max_packets=40, tiebreak="pattern", count_headers=True, meshes=None):
+def run(max_packets=40, tiebreak="pattern", count_headers=True, meshes=None,
+        placements=("edge",)):
     if meshes is None:
         meshes = ("2x2_mc1",) if SMOKE else tuple(PAPER_NOCS)
     if SMOKE:
         max_packets = min(max_packets, 4)
     grid = SweepGrid(
-        meshes=meshes, transforms=("O0", "O1", "O2"), tiebreaks=(tiebreak,),
-        precisions=("float32", "fixed8"), models=("lenet",),
-        max_packets_per_layer=max_packets, count_headers=count_headers,
-        chunk=2048)
+        meshes=meshes, placements=placements, transforms=("O0", "O1", "O2"),
+        tiebreaks=(tiebreak,), precisions=("float32", "fixed8"),
+        models=("lenet",), max_packets_per_layer=max_packets,
+        count_headers=count_headers, chunk=2048)
     report = run_sweep(grid, lambda _name: lenet_layers(trained=not SMOKE))
     results = {}
     for r in report.rows:
         key = f"{r['mesh']}/{r['precision']}/{r['transform']}"
+        if len(placements) > 1:     # single-placement keys stay seed-stable
+            key = f"{r['mesh']}/{r['placement']}/{r['precision']}/{r['transform']}"
         is_base = r["transform"] == grid.baseline
         results[key] = {
             "total_bt": r["total_bt"], "cycles": r["cycles"],
@@ -148,6 +151,31 @@ def reference_compare():
         "bt_identical": True,
         "total_bt": sweep_bt,
     }
+
+
+def placement_smoke():
+    """CI gate for the MC-placement axis: a 4x4 fig12 sweep across all
+    three placements. Pins the structural symmetry (edge and corner resolve
+    to the same opposite-corner MC set on 4x4/MC2, so every cell matches
+    exactly) and that interleaved placement changes link totals without
+    changing flit volume."""
+    results, stats = run(max_packets=4, meshes=("4x4_mc2",),
+                         placements=("edge", "corner", "interleaved"))
+    assert stats["cells"] == 18, stats
+    for prec in ("float32", "fixed8"):
+        for tr in ("O0", "O1", "O2"):
+            edge = results[f"4x4_mc2/edge/{prec}/{tr}"]
+            corner = results[f"4x4_mc2/corner/{prec}/{tr}"]
+            inter = results[f"4x4_mc2/interleaved/{prec}/{tr}"]
+            assert edge["total_bt"] == corner["total_bt"], (prec, tr)
+            assert edge["cycles"] == corner["cycles"], (prec, tr)
+            assert inter["flits"] == edge["flits"], (prec, tr)
+    assert any(
+        results[f"4x4_mc2/interleaved/{p}/{t}"]["total_bt"]
+        != results[f"4x4_mc2/edge/{p}/{t}"]["total_bt"]
+        for p in ("float32", "fixed8") for t in ("O0", "O1", "O2"))
+    print(f"placement smoke ok: {stats['cells']} cells, "
+          f"edge==corner pinned, interleaved diverges")
 
 
 def main(print_csv=True):

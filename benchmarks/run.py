@@ -18,8 +18,8 @@ import time
 import traceback
 
 from . import (table1, fig1_expectation, fig10_11, fig12, fig13,
-               table2_power, ordered_collectives, ordering_throughput,
-               roofline)
+               table2_power, darknet_full, ordered_collectives,
+               ordering_throughput, roofline, static_layout)
 
 SUITES = {
     "table1": table1.main,                    # Tab. I: BT reduction w/o NoC
@@ -28,9 +28,12 @@ SUITES = {
     "fig12": fig12.main,                      # Fig. 12: NoC sizes x O0/O1/O2
     "fig13": fig13.main,                      # Fig. 13: LeNet vs DarkNet
     "table2": table2_power.main,              # Tab. II + link power model
+    "darknet_full": darknet_full.main,        # beyond-paper: full traffic,
+                                              # 16x16, placements, sharding
     "ordered_collectives": ordered_collectives.main,  # beyond-paper: ICI
     "ordering_throughput": ordering_throughput.main,
     "roofline": roofline.main,                # from dry-run artifacts
+    "static_layout": static_layout.main,      # trained-vs-random layouts
 }
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_noc.json")
@@ -78,8 +81,12 @@ def main() -> None:
     merged.setdefault("suites", {}).update(bench["suites"])
     if "reference_compare" in bench:
         merged["reference_compare"] = bench["reference_compare"]
-    with open(BENCH_PATH, "w") as f:
+    # Atomic write: a crash mid-dump must not truncate the trajectory file
+    # (the merge above would then silently drop every prior suite's stats).
+    tmp = BENCH_PATH + ".tmp"
+    with open(tmp, "w") as f:
         json.dump(merged, f, indent=1)
+    os.replace(tmp, BENCH_PATH)
     if failed:
         raise SystemExit(f"failed suites: {failed}")
 

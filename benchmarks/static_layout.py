@@ -1,0 +1,74 @@
+"""Static popcount layout (`dist.static_reorder`) on *converged* weights.
+
+The ROADMAP open item this closes: `stream_bt_report` shows ~0 reduction on
+random-init weights, and the open question was whether the popcount
+structure of *trained* nets changes that. This suite measures the layout on
+the converged LeNet checkpoint (`experiments/weights/lenet/step_000000400`,
+restored - never random init) against the random-init baseline and records
+the trained-vs-random delta in BENCH_noc.json.
+
+Measured answer (recorded, not assumed): ~0 for the trained checkpoint
+too. Unit-order permutation only changes which unit *boundaries* abut on
+the wire; the BT of a unit-major stream is dominated by within-unit
+word-to-word toggles, which no unit reorder can touch. The structure
+trained weights do have is harvested by the in-flight per-packet orderings
+(the NoC sweeps and the ordered-collectives path), not by this static
+whole-unit layout - BENCH_noc.json keeps both numbers side by side.
+
+The measured block is LeNet's fc1 hidden-unit block: permuting f1w columns
+together with f2w rows is the similarity transform of
+`dist.static_reorder.reorder_mlp` (a deployment also permutes the f1 bias,
+which does not travel on the weight stream being measured).
+"""
+from __future__ import annotations
+
+from repro.dist.static_reorder import reorder_lm_params, stream_bt_report
+
+from ._trained import get_trained, random_params
+
+
+def _fc_blocks(params) -> dict:
+    """LeNet's fc1 unit block in reorder_mlp's {"wu", "wd"} layout:
+    f1w (400, 120) columns and f2w (120, 84) rows are the 120 hidden
+    units' wire footprint."""
+    return {"fc1": {"wu": params["f1w"], "wd": params["f2w"]}}
+
+
+def _measure(params) -> dict:
+    blocks = _fc_blocks(params)
+    rep = stream_bt_report(blocks, reorder_lm_params(blocks))
+    return {k: float(v) for k, v in rep.items()}   # jax scalars -> JSON
+
+
+def run() -> dict:
+    _, trained_params, acc = get_trained("lenet")
+    _, random_init = random_params("lenet")
+    trained = _measure(trained_params)
+    random_rep = _measure(random_init)
+    return {
+        "checkpoint": "experiments/weights/lenet/step_000000400",
+        "checkpoint_acc": acc,
+        "trained": trained,
+        "random_init": random_rep,
+        "trained_minus_random_reduction": (
+            trained["reduction"] - random_rep["reduction"]),
+    }
+
+
+def main(print_csv=True):
+    r = run()
+    if print_csv:
+        t, rnd = r["trained"], r["random_init"]
+        print(f"static_layout/trained,0,"
+              f"bt_per_flit {t['bt_per_flit_before']:.2f}->"
+              f"{t['bt_per_flit_after']:.2f} "
+              f"reduction={t['reduction'] * 100:.2f}%")
+        print(f"static_layout/random_init,0,"
+              f"reduction={rnd['reduction'] * 100:.2f}%")
+        print(f"static_layout/delta,0,trained-random="
+              f"{r['trained_minus_random_reduction'] * 100:.2f}pp")
+    return {"results": r, "bench": r}
+
+
+if __name__ == "__main__":
+    main()

@@ -12,7 +12,8 @@ import jax
 
 from repro.data import glyph_batch
 from repro.models import LeNet, init_params
-from repro.noc import PAPER_NOCS, SweepGrid, mesh_by_name, run_sweep
+from repro.noc import (PAPER_NOCS, PLACEMENTS, SweepGrid, mc_placement,
+                       mesh_by_name, run_sweep)
 from repro.noc.power import link_power_mw, ordering_overhead_mw
 from repro.optim import AdamW, cosine
 from repro.train import make_train_step, init_state
@@ -21,6 +22,11 @@ ap = argparse.ArgumentParser()
 ap.add_argument("--noc", default="4x4_mc2",
                 help=f"one of {sorted(PAPER_NOCS)} or any RxC_mcN spec")
 ap.add_argument("--f32", action="store_true", help="float-32 (default fixed-8)")
+ap.add_argument("--placement", default="edge", choices=sorted(PLACEMENTS),
+                help="MC placement strategy (default: the paper's edge spread)")
+ap.add_argument("--full", action="store_true",
+                help="packetize the full inference (streamed chunked path) "
+                     "instead of subsampling to --max-packets")
 ap.add_argument("--train-steps", type=int, default=60)
 ap.add_argument("--max-packets", type=int, default=30)
 args = ap.parse_args()
@@ -38,13 +44,17 @@ print(f"final loss {float(m['loss']):.3f}")
 x, _ = glyph_batch(jax.random.PRNGKey(99), 1)
 layers = model.layer_traffic(state.params, x[0])
 cfg = mesh_by_name(args.noc)
+mc_nodes = mc_placement(cfg.rows, cfg.cols, cfg.num_mcs, args.placement)
 
-print(f"\nNoC {args.noc}: {cfg.rows}x{cfg.cols}, {cfg.num_mcs} MCs, "
+print(f"\nNoC {args.noc}: {cfg.rows}x{cfg.cols}, {cfg.num_mcs} MCs "
+      f"({args.placement} placement at routers {list(mc_nodes)}), "
       f"{cfg.num_inter_router_links} inter-router links")
 grid = SweepGrid(
-    meshes=(args.noc,), transforms=("O0", "O1", "O2"),
-    tiebreaks=("pattern",), precisions=("float32" if args.f32 else "fixed8",),
-    models=("lenet",), max_packets_per_layer=args.max_packets, chunk=2048)
+    meshes=(args.noc,), placements=(args.placement,),
+    transforms=("O0", "O1", "O2"), tiebreaks=("pattern",),
+    precisions=("float32" if args.f32 else "fixed8",), models=("lenet",),
+    max_packets_per_layer=None if args.full else args.max_packets,
+    chunk=2048)
 report = run_sweep(grid, lambda _name: layers)
 for row in report.rows:
     red = "" if row["transform"] == grid.baseline else \

@@ -19,15 +19,15 @@ from .ordered_collectives import (GradientBucket, gradient_wire_report,
                                   order_gradient_bucket,
                                   restore_gradient_bucket)
 from .overlap import bucketed, unbucket, xla_overlap_flags
-from .sharding import (DEFAULT_RULES, Rules, data_axis_size, logical_to_pspec,
-                       spec_shardings)
+from .sharding import (DEFAULT_RULES, Rules, batch_shardings, data_axis_size,
+                       logical_to_pspec, spec_shardings)
 from .static_reorder import (mlp_unit_permutation, reorder_lm_params,
                              reorder_mlp, stream_bt_report)
 
 __all__ = [
     "sharding", "ordered_collectives", "static_reorder", "overlap",
     "Rules", "DEFAULT_RULES", "logical_to_pspec", "spec_shardings",
-    "data_axis_size",
+    "batch_shardings", "data_axis_size",
     "GradientBucket", "order_gradient_bucket", "restore_gradient_bucket",
     "gradient_wire_report",
     "mlp_unit_permutation", "reorder_mlp", "reorder_lm_params",

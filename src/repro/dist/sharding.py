@@ -29,7 +29,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.models.spec import is_spec
 
 __all__ = ["Rules", "DEFAULT_RULES", "logical_to_pspec", "spec_shardings",
-           "data_axis_size"]
+           "batch_shardings", "data_axis_size"]
 
 # A rule maps one logical axis name to a mesh axis, a tuple of mesh axes, or
 # None (replicate). Meshes only need .shape (name -> size) and .axis_names,
@@ -105,6 +105,26 @@ def spec_shardings(specs, rules: Rules, mesh):
         lambda s: NamedSharding(
             mesh, logical_to_pspec(s.axes, s.shape, rules, mesh)),
         specs, is_leaf=is_spec)
+
+
+def batch_shardings(mesh, tree, axis: str = "data"):
+    """NamedSharding pytree splitting every leaf's *leading* dim over
+    ``axis`` - the array-tree sibling of :func:`spec_shardings` for batched
+    data that has no ParamSpec (e.g. the NoC sweep engine's variant-stacked
+    ``Traffic``/``SimState``, whose variants axis shards across devices).
+
+    The divisibility fallback applies per leaf: a leading dim that does not
+    divide the mesh-axis size (or a scalar leaf) replicates instead of
+    failing to lower.
+    """
+    size = int(mesh.shape[axis])
+
+    def one(x):
+        shape = getattr(x, "shape", ())
+        spec = P(axis) if (shape and shape[0] % size == 0) else P()
+        return NamedSharding(mesh, spec)
+
+    return jax.tree.map(one, tree)
 
 
 def data_axis_size(mesh) -> int:

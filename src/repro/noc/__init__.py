@@ -1,19 +1,20 @@
 """NoC substrate: topology, cycle-level simulator, DNN traffic, sweep
 engine, power model."""
-from .topology import (NocConfig, PAPER_NOCS, xy_route, neighbor_table,
-                       make_noc, mesh_by_name)
+from .topology import (NocConfig, PAPER_NOCS, PLACEMENTS, xy_route,
+                       neighbor_table, make_noc, mc_placement, mesh_by_name)
 from .sim import (Traffic, SimResult, simulate, simulate_batch, make_state)
 from .traffic import (LayerTraffic, build_traffic, build_traffic_batch,
-                      conv_layer_traffic, linear_layer_traffic)
+                      build_traffic_streamed, conv_layer_traffic,
+                      linear_layer_traffic)
 from .sweep import SweepGrid, SweepReport, run_sweep, recovery_overhead_bits
 from . import power
 
 __all__ = [
-    "NocConfig", "PAPER_NOCS", "xy_route", "neighbor_table", "make_noc",
-    "mesh_by_name",
+    "NocConfig", "PAPER_NOCS", "PLACEMENTS", "xy_route", "neighbor_table",
+    "make_noc", "mc_placement", "mesh_by_name",
     "Traffic", "SimResult", "simulate", "simulate_batch", "make_state",
     "LayerTraffic", "build_traffic", "build_traffic_batch",
-    "conv_layer_traffic", "linear_layer_traffic",
+    "build_traffic_streamed", "conv_layer_traffic", "linear_layer_traffic",
     "SweepGrid", "SweepReport", "run_sweep", "recovery_overhead_bits",
     "power",
 ]

@@ -330,6 +330,37 @@ def _chunk_runner(mesh_key, count_headers: bool, chunk: int, batched: bool):
     return jax.jit(run, donate_argnums=0)
 
 
+@functools.lru_cache(maxsize=None)
+def _sharded_chunk_runner(mesh_key, count_headers: bool, chunk: int,
+                          dev_mesh):
+    """``_chunk_runner(batched=True)`` with the variants axis split across
+    the devices of ``dev_mesh`` via shard_map.
+
+    Variant lanes are fully independent (the vmapped drain exchanges
+    nothing between them), so each device runs the plain local vmap over
+    its slice - results are bit-identical to the single-device runner by
+    construction, and the only cross-device traffic is the host readback
+    of the drain bookkeeping between chunks.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    step = _make_step(mesh_key, count_headers)
+
+    def run(state: SimState, traffic: Traffic,
+            mc_nodes: jax.Array) -> SimState:
+        def body(s, _):
+            return step(s, traffic, mc_nodes), ()
+        out, _ = jax.lax.scan(body, state, None, length=chunk)
+        return out
+
+    run = jax.vmap(run, in_axes=(0, 0, None))
+    spec_b = jax.sharding.PartitionSpec("variants")
+    run = shard_map(run, mesh=dev_mesh,
+                    in_specs=(spec_b, spec_b, jax.sharding.PartitionSpec()),
+                    out_specs=spec_b, check_rep=False)
+    return jax.jit(run, donate_argnums=0)
+
+
 def _conservation_error(traffic_row, eject_pkt: np.ndarray,
                         npkt: int) -> Optional[str]:
     """Check every injected pkt id ejected exactly once; None when clean."""
@@ -431,8 +462,8 @@ def simulate(cfg: NocConfig, traffic: Traffic, *, count_headers: bool = True,
 
 def simulate_batch(cfg: NocConfig, traffic: Traffic, *,
                    count_headers: bool = True, max_cycles: int = 2_000_000,
-                   chunk: int = 4096,
-                   check_conservation: bool = False) -> List[SimResult]:
+                   chunk: int = 4096, check_conservation: bool = False,
+                   devices=None) -> List[SimResult]:
     """Drain B traffic variants (leading axis) in one vmapped program.
 
     All variants must share shapes - which O0/O1/O2 x precision variants of
@@ -441,6 +472,12 @@ def simulate_batch(cfg: NocConfig, traffic: Traffic, *,
     variant until the slowest one empties; already-drained variants idle at
     zero cost to correctness (no flits move, BT accumulators freeze) and
     their exact drain time is read from ``drain_cycle``.
+
+    devices: shard the variants axis across these devices (shard_map over a
+        1-D device mesh; the batch is padded with empty traffic rows up to
+        a device multiple). Per-variant results are bit-identical to the
+        single-device drain - variant lanes never communicate. ``None`` or
+        a single device falls back to the plain vmapped runner.
     """
     if traffic.length.ndim != 2:
         raise ValueError("simulate_batch wants a leading variants axis; "
@@ -449,8 +486,28 @@ def simulate_batch(cfg: NocConfig, traffic: Traffic, *,
     mc_nodes = _mc_array(cfg, traffic, m, batched=True)
     npkt = _npkt(traffic) if check_conservation else 0
     base = make_state(cfg, m, npkt=npkt)
-    state = jax.tree.map(lambda x: jnp.stack([x] * b), base)
-    run_chunk = _chunk_runner(_mesh_key(cfg), count_headers, chunk, True)
+    devs = list(devices) if devices is not None else []
+    if len(devs) > 1:
+        # Lazy import: repro.dist pulls in repro.models, which imports this
+        # package back for its layer_traffic helpers.
+        from repro.dist.sharding import batch_shardings
+        bp = -(-b // len(devs)) * len(devs)
+        if bp != b:
+            traffic = Traffic(*(
+                jnp.concatenate(
+                    [x, jnp.zeros((bp - b,) + x.shape[1:], x.dtype)])
+                for x in traffic))
+        state = jax.tree.map(lambda x: jnp.stack([x] * bp), base)
+        dev_mesh = jax.sharding.Mesh(np.asarray(devs), ("variants",))
+        state = jax.device_put(
+            state, batch_shardings(dev_mesh, state, "variants"))
+        traffic = jax.device_put(
+            traffic, batch_shardings(dev_mesh, traffic, "variants"))
+        run_chunk = _sharded_chunk_runner(_mesh_key(cfg), count_headers,
+                                          chunk, dev_mesh)
+    else:
+        state = jax.tree.map(lambda x: jnp.stack([x] * b), base)
+        run_chunk = _chunk_runner(_mesh_key(cfg), count_headers, chunk, True)
 
     totals = np.asarray(traffic.length).sum(axis=1)
     ejected = np.asarray(state.ejected)

@@ -28,11 +28,14 @@ import os
 import time
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
+import jax
+
 from repro.core.wire import WireTransform, by_name
 from repro.quant import quantize_fixed8
-from .topology import NocConfig, mesh_by_name
-from .traffic import (LayerTraffic, assemble_traffic, ordered_payloads,
-                      pad_traffic_length, stream_lengths)
+from .topology import NocConfig, PLACEMENTS, mc_placement, mesh_by_name
+from .traffic import (LayerTraffic, assemble_traffic, build_traffic_streamed,
+                      ordered_payloads, pad_traffic_length, payload_shapes,
+                      stream_lengths)
 from .sim import SimResult, simulate_batch
 
 __all__ = ["SweepGrid", "SweepReport", "run_sweep", "recovery_overhead_bits"]
@@ -48,20 +51,33 @@ _QUANTIZERS = {
 
 @dataclasses.dataclass(frozen=True)
 class SweepGrid:
-    """One declarative sweep: mesh sizes x MC counts x transforms x
+    """One declarative sweep: mesh sizes x MC placements x transforms x
     tiebreaks x precisions x models.
 
     meshes: PAPER_NOCS names, ``RxC_mcN`` specs, or NocConfig instances.
+    placements: MC placement strategies (``topology.PLACEMENTS``). The
+        default ``"edge"`` keeps every mesh's resolved mc_nodes untouched
+        (for named meshes that IS the evenly-spread boundary placement);
+        other strategies re-place the same MC count via ``mc_placement``.
+        Placements of one mesh size stay in one shape class and share the
+        compiled simulator.
     transforms: WireTransform names (``repro.core.wire.by_name``); the
         ``baseline`` transform anchors the per-cell reduction percentages.
+    max_packets_per_layer: deterministic-stride neuron subsampling budget;
+        ``None`` packetizes the *full* layers through the streamed
+        chunked path (``build_traffic_streamed``) instead of the one-shot
+        payload cache.
+    stream_chunk_packets: packet-chunk size of the streamed path.
     """
 
     meshes: Sequence[Mesh] = ("4x4_mc2",)
+    placements: Sequence[str] = ("edge",)
     transforms: Sequence[str] = ("O0", "O1", "O2")
     tiebreaks: Sequence[str] = ("pattern",)
     precisions: Sequence[str] = ("float32", "fixed8")
     models: Sequence[str] = ("lenet",)
     max_packets_per_layer: Optional[int] = 40
+    stream_chunk_packets: int = 4096
     count_headers: bool = True
     chunk: int = 2048
     max_cycles: int = 2_000_000
@@ -72,6 +88,12 @@ class SweepGrid:
         if unknown:
             raise ValueError(f"unknown precisions {sorted(unknown)}; "
                              f"supported: {sorted(_QUANTIZERS)}")
+        unknown = set(self.placements) - set(PLACEMENTS)
+        if unknown:
+            raise ValueError(f"unknown placements {sorted(unknown)}; "
+                             f"supported: {sorted(PLACEMENTS)}")
+        if not self.placements:
+            raise ValueError("need at least one MC placement")
         if self.baseline not in self.transforms:
             raise ValueError(
                 f"baseline {self.baseline!r} not in transforms {self.transforms}")
@@ -121,18 +143,52 @@ def _resolve_mesh(mesh: Mesh) -> tuple:
     return (mesh, mesh_by_name(mesh))
 
 
+def _place(cfg: NocConfig, placement: str) -> NocConfig:
+    """Apply a placement strategy to a resolved mesh.
+
+    ``edge`` keeps the resolved mc_nodes untouched - named meshes already
+    use the evenly-spread boundary placement, and an explicit NocConfig's
+    hand-picked nodes stay authoritative. Other strategies re-place the
+    same MC count.
+    """
+    if placement == "edge":
+        return cfg
+    return dataclasses.replace(
+        cfg, mc_nodes=mc_placement(cfg.rows, cfg.cols, cfg.num_mcs,
+                                   placement))
+
+
+def _resolve_devices(devices):
+    """``"auto"`` -> every local device when there are >1, else None."""
+    if isinstance(devices, str):
+        if devices != "auto":
+            raise ValueError(f"devices must be 'auto', None, or a device "
+                             f"sequence, got {devices!r}")
+        local = jax.local_devices()
+        return local if len(local) > 1 else None
+    return devices
+
+
 def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
               out_path: Optional[str] = None,
-              check_conservation: bool = False) -> SweepReport:
+              check_conservation: bool = False,
+              devices="auto") -> SweepReport:
     """Execute every cell of ``grid``; one packetization + one batched
-    simulation per (mesh, model) shape class.
+    simulation per (mesh, placement, model) shape class.
 
     layers_for_model: model name -> LayerTraffic sequence (the sweep engine
         stays decoupled from how weights are trained or loaded).
+    devices: forwarded to :func:`repro.noc.sim.simulate_batch` - the
+        default ``"auto"`` shards the variants axis across all local
+        devices on multi-device hosts and falls back to the single-device
+        vmapped drain otherwise (per-variant results are bit-identical
+        either way).
     """
     axes = grid.variant_axes()
     variants = [(by_name(tr, tiebreak=tb), _QUANTIZERS[prec])
                 for prec, tb, tr in axes]
+    devs = _resolve_devices(devices)
+    streamed = grid.max_packets_per_layer is None
     rows: List[dict] = []
     classes = []
     pack_s = sim_s = 0.0
@@ -141,79 +197,107 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
     # Ordered payload words are mesh-independent (the transform sees only
     # packet payloads and the flit width), so every mesh/MC-count cell of a
     # model reuses one ordering pass; only the per-MC assembly is per-mesh.
+    # The streamed path deliberately skips this cache - holding every
+    # layer's full payload tensor is exactly what it exists to avoid - and
+    # re-streams per (mesh, placement) cell instead.
     payload_cache: Dict[tuple, list] = {}
+    shape_cache: Dict[tuple, list] = {}
     # MC placements of one mesh size share a compiled simulator when their
     # traffic shapes match; pad every member of a size group to the group's
-    # max MC-stream count and max stream length.
+    # max MC-stream count and max stream length. Placement never changes
+    # the MC count, so the placement axis rides inside each size group.
     resolved = [_resolve_mesh(m) for m in grid.meshes]
     size_groups: Dict[tuple, List[NocConfig]] = {}
     for _, cfg in resolved:
         key = (cfg.rows, cfg.cols, cfg.num_vcs, cfg.vc_depth, cfg.lanes)
         size_groups.setdefault(key, []).append(cfg)
 
-    for mesh_name, cfg in resolved:
-        for model in grid.models:
-            if model not in layer_cache:
-                layer_cache[model] = layers_for_model(model)
-            layers = layer_cache[model]
+    for mesh_name, base_cfg in resolved:
+        for placement in grid.placements:
+            cfg = _place(base_cfg, placement)
+            for model in grid.models:
+                if model not in layer_cache:
+                    layer_cache[model] = layers_for_model(model)
+                layers = layer_cache[model]
 
-            t0 = time.perf_counter()
-            pkey = (model, cfg.lanes)
-            if pkey not in payload_cache:
-                payload_cache[pkey] = ordered_payloads(
-                    layers, cfg.lanes, variants,
-                    max_packets_per_layer=grid.max_packets_per_layer)
-            group = size_groups[(cfg.rows, cfg.cols, cfg.num_vcs,
-                                 cfg.vc_depth, cfg.lanes)]
-            shapes = [(w.shape[1], w.shape[2]) for w in payload_cache[pkey]]
-            mc_pad = max(c.num_mcs for c in group)
-            t_pad = max(int(stream_lengths(shapes, c.num_mcs).max())
-                        for c in group)
-            traffic = pad_traffic_length(
-                assemble_traffic(payload_cache[pkey], cfg,
-                                 num_streams=mc_pad,
-                                 num_variants=len(variants)), t_pad)
-            t1 = time.perf_counter()
-            results: List[SimResult] = simulate_batch(
-                cfg, traffic, count_headers=grid.count_headers,
-                chunk=grid.chunk, max_cycles=grid.max_cycles,
-                check_conservation=check_conservation)
-            t2 = time.perf_counter()
-            pack_s += t1 - t0
-            sim_s += t2 - t1
-            stepped_cycles += sum(r.cycles for r in results)
-            classes.append({
-                "mesh": mesh_name, "model": model, "variants": len(axes),
-                "packetize_s": round(t1 - t0, 4), "simulate_s": round(t2 - t1, 4),
-            })
-
-            base_bt = {}
-            for (prec, tb, tr), res in zip(axes, results):
-                if tr == grid.baseline:
-                    base_bt[(prec, tb)] = res.total_bt
-            for (prec, tb, tr), (transform, _), res in zip(axes, variants,
-                                                           results):
-                overhead = recovery_overhead_bits(
-                    layers, transform,
-                    max_packets_per_layer=grid.max_packets_per_layer)
-                # Charge each recovery-index bit half a transition (the
-                # toggle expectation of an uninformative bit stream): the
-                # index rides the same links as the payload, so an honest
-                # reduction figure must pay for it (paper Sec. IV-C1).
-                adjusted_bt = res.total_bt + overhead // 2
-                base = base_bt[(prec, tb)]
-                rows.append({
-                    "mesh": mesh_name, "model": model, "precision": prec,
-                    "transform": tr, "tiebreak": tb,
-                    "total_bt": res.total_bt,
-                    "adjusted_bt": adjusted_bt,
-                    "overhead_bits": overhead,
-                    "cycles": res.drain_cycle,
-                    "flits": res.injected,
-                    "bt_per_flit": res.bt_per_flit,
-                    "reduction_pct": (1 - res.total_bt / base) * 100,
-                    "adjusted_reduction_pct": (1 - adjusted_bt / base) * 100,
+                t0 = time.perf_counter()
+                pkey = (model, cfg.lanes)
+                if pkey not in shape_cache:
+                    if streamed:
+                        # One single-packet geometry probe per model; the
+                        # payloads themselves never materialize whole.
+                        shape_cache[pkey] = payload_shapes(
+                            layers, cfg.lanes, variants,
+                            max_packets_per_layer=grid.max_packets_per_layer)
+                    else:
+                        # The one-shot path reads the geometry off the
+                        # payload arrays it needs anyway - probing all
+                        # variants again would double the transform work.
+                        payload_cache[pkey] = ordered_payloads(
+                            layers, cfg.lanes, variants,
+                            max_packets_per_layer=grid.max_packets_per_layer)
+                        shape_cache[pkey] = [(w.shape[1], w.shape[2])
+                                             for w in payload_cache[pkey]]
+                group = size_groups[(cfg.rows, cfg.cols, cfg.num_vcs,
+                                     cfg.vc_depth, cfg.lanes)]
+                shapes = shape_cache[pkey]
+                mc_pad = max(c.num_mcs for c in group)
+                t_pad = max(int(stream_lengths(shapes, c.num_mcs).max())
+                            for c in group)
+                if streamed:
+                    traffic = build_traffic_streamed(
+                        layers, cfg, variants,
+                        chunk_packets=grid.stream_chunk_packets,
+                        num_streams=mc_pad, shapes=shapes)
+                else:
+                    traffic = assemble_traffic(
+                        payload_cache[pkey], cfg, num_streams=mc_pad,
+                        num_variants=len(variants))
+                traffic = pad_traffic_length(traffic, t_pad)
+                t1 = time.perf_counter()
+                results: List[SimResult] = simulate_batch(
+                    cfg, traffic, count_headers=grid.count_headers,
+                    chunk=grid.chunk, max_cycles=grid.max_cycles,
+                    check_conservation=check_conservation, devices=devs)
+                t2 = time.perf_counter()
+                pack_s += t1 - t0
+                sim_s += t2 - t1
+                stepped_cycles += sum(r.cycles for r in results)
+                classes.append({
+                    "mesh": mesh_name, "placement": placement,
+                    "model": model, "variants": len(axes),
+                    "packetize_s": round(t1 - t0, 4),
+                    "simulate_s": round(t2 - t1, 4),
                 })
+
+                base_bt = {}
+                for (prec, tb, tr), res in zip(axes, results):
+                    if tr == grid.baseline:
+                        base_bt[(prec, tb)] = res.total_bt
+                for (prec, tb, tr), (transform, _), res in zip(axes, variants,
+                                                               results):
+                    overhead = recovery_overhead_bits(
+                        layers, transform,
+                        max_packets_per_layer=grid.max_packets_per_layer)
+                    # Charge each recovery-index bit half a transition (the
+                    # toggle expectation of an uninformative bit stream): the
+                    # index rides the same links as the payload, so an honest
+                    # reduction figure must pay for it (paper Sec. IV-C1).
+                    adjusted_bt = res.total_bt + overhead // 2
+                    base = base_bt[(prec, tb)]
+                    rows.append({
+                        "mesh": mesh_name, "placement": placement,
+                        "model": model, "precision": prec,
+                        "transform": tr, "tiebreak": tb,
+                        "total_bt": res.total_bt,
+                        "adjusted_bt": adjusted_bt,
+                        "overhead_bits": overhead,
+                        "cycles": res.drain_cycle,
+                        "flits": res.injected,
+                        "bt_per_flit": res.bt_per_flit,
+                        "reduction_pct": (1 - res.total_bt / base) * 100,
+                        "adjusted_reduction_pct": (1 - adjusted_bt / base) * 100,
+                    })
 
     wall = pack_s + sim_s
     stats = {
@@ -224,6 +308,8 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
         "wall_s": round(wall, 4),
         "stepped_cycles": stepped_cycles,
         "cycles_per_sec": round(stepped_cycles / sim_s, 1) if sim_s else None,
+        "streamed": streamed,
+        "devices": len(devs) if devs else 1,
     }
     report = SweepReport(rows=rows, stats=stats)
     if out_path:
@@ -237,6 +323,7 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
 def _grid_json(grid: SweepGrid) -> dict:
     out = dataclasses.asdict(grid)
     out["meshes"] = [_resolve_mesh(m)[0] for m in grid.meshes]
-    for key in ("transforms", "tiebreaks", "precisions", "models"):
+    for key in ("placements", "transforms", "tiebreaks", "precisions",
+                "models"):
         out[key] = list(out[key])
     return out

@@ -20,7 +20,7 @@ import numpy as np
 
 __all__ = ["NocConfig", "PORT_N", "PORT_E", "PORT_S", "PORT_W", "PORT_LOCAL",
            "NUM_PORTS", "OPPOSITE", "xy_route", "neighbor_table", "PAPER_NOCS",
-           "make_noc", "mesh_by_name"]
+           "PLACEMENTS", "mc_placement", "make_noc", "mesh_by_name"]
 
 PORT_N, PORT_E, PORT_S, PORT_W, PORT_LOCAL = 0, 1, 2, 3, 4
 NUM_PORTS = 5
@@ -125,6 +125,69 @@ def _edge_spread(rows: int, cols: int, n: int) -> Tuple[int, ...]:
     return tuple(r * cols + c for r, c in picks)
 
 
+def _corner_spread(rows: int, cols: int, n: int) -> Tuple[int, ...]:
+    """Corners first (diagonal-opposite pairs), then evenly along the rest
+    of the boundary.
+
+    n=2 gives the two opposite corners, which on square meshes coincides
+    with the evenly-spaced edge spread - the symmetry the placement parity
+    tests pin (identical mc_nodes => identical sweep rows).
+    """
+    corners = [(0, 0), (rows - 1, cols - 1), (0, cols - 1), (rows - 1, 0)]
+    corners = list(dict.fromkeys(corners))
+    picks = corners[:n]
+    need = n - len(picks)
+    if need > 0:
+        border = []
+        border += [(0, c) for c in range(cols)]
+        border += [(r, cols - 1) for r in range(1, rows)]
+        border += [(rows - 1, c) for c in range(cols - 2, -1, -1)]
+        border += [(r, 0) for r in range(rows - 2, 0, -1)]
+        rest = [b for b in dict.fromkeys(border) if b not in set(picks)]
+        step = len(rest) / need
+        picks += [rest[int(i * step)] for i in range(need)]
+    return tuple(r * cols + c for r, c in picks)
+
+
+def _interleave_spread(rows: int, cols: int, n: int) -> Tuple[int, ...]:
+    """MCs interleaved among the PEs through the whole mesh (row-major,
+    evenly spaced) - interior placements the paper never measured, for the
+    MC-placement sensitivity axis."""
+    nr = rows * cols
+    return tuple(int(i * nr / n) for i in range(n))
+
+
+PLACEMENTS = ("edge", "corner", "interleaved")
+_PLACEMENT_FNS = {
+    "edge": _edge_spread,
+    "corner": _corner_spread,
+    "interleaved": _interleave_spread,
+}
+
+
+def mc_placement(rows: int, cols: int, num_mcs: int,
+                 strategy: str = "edge") -> Tuple[int, ...]:
+    """Router ids hosting the memory controllers under a placement strategy.
+
+    ``edge``: evenly spaced along the mesh boundary (the paper's layout,
+    next to the off-chip interface). ``corner``: corners first, then evenly
+    along the remaining boundary. ``interleaved``: evenly through the whole
+    row-major node list (interior MCs). All strategies are deterministic,
+    return distinct nodes, and leave at least one PE router.
+    """
+    if strategy not in _PLACEMENT_FNS:
+        raise KeyError(f"unknown MC placement {strategy!r}; "
+                       f"supported: {sorted(_PLACEMENT_FNS)}")
+    if num_mcs >= rows * cols:
+        raise ValueError(f"{num_mcs} MCs on a {rows}x{cols} mesh leave no "
+                         "PE routers to receive traffic")
+    boundary = rows * cols - max(rows - 2, 0) * max(cols - 2, 0)
+    if num_mcs < 1 or (strategy != "interleaved" and num_mcs > boundary):
+        raise ValueError(f"cannot place {num_mcs} MCs on a "
+                         f"{rows}x{cols} mesh boundary ({boundary} routers)")
+    return _PLACEMENT_FNS[strategy](rows, cols, num_mcs)
+
+
 # The paper's three evaluated NoC configurations (Sec. V-B).
 PAPER_NOCS = {
     "4x4_mc2": NocConfig(4, 4, _edge_spread(4, 4, 2)),
@@ -133,21 +196,17 @@ PAPER_NOCS = {
 }
 
 
-def make_noc(rows: int, cols: int, num_mcs: int, **kw) -> NocConfig:
-    """Any mesh size with evenly edge-spread MCs.
+def make_noc(rows: int, cols: int, num_mcs: int, placement: str = "edge",
+             **kw) -> NocConfig:
+    """Any mesh size under any MC placement strategy.
 
     The sweep engine uses this to go beyond the paper's three PAPER_NOCS
-    (e.g. the 2x2/MC1 CI smoke mesh or 16x16 scaling studies); MC placement
-    follows the same boundary spread as the paper configurations.
+    (e.g. the 2x2/MC1 CI smoke mesh, 16x16 scaling studies, and the
+    MC-placement sensitivity axis); ``placement`` picks one of
+    :data:`PLACEMENTS` (default: the paper's boundary spread).
     """
-    boundary = rows * cols - max(rows - 2, 0) * max(cols - 2, 0)
-    if num_mcs < 1 or num_mcs > boundary:
-        raise ValueError(f"cannot place {num_mcs} MCs on a "
-                         f"{rows}x{cols} mesh boundary ({boundary} routers)")
-    if num_mcs >= rows * cols:
-        raise ValueError(f"{num_mcs} MCs on a {rows}x{cols} mesh leave no "
-                         "PE routers to receive traffic")
-    return NocConfig(rows, cols, _edge_spread(rows, cols, num_mcs), **kw)
+    return NocConfig(rows, cols, mc_placement(rows, cols, num_mcs, placement),
+                     **kw)
 
 
 _MESH_NAME = re.compile(r"^(\d+)x(\d+)_mc(\d+)$")

@@ -35,9 +35,10 @@ from .topology import NocConfig
 from .sim import Traffic, META_PAYLOAD, META_TAIL
 
 __all__ = ["LayerTraffic", "build_traffic", "build_traffic_batch",
-           "ordered_payloads", "assemble_traffic", "stream_lengths",
-           "pad_traffic_length", "conv_layer_traffic",
-           "linear_layer_traffic"]
+           "build_traffic_streamed", "ordered_payloads",
+           "ordered_payloads_streamed", "payload_shapes", "assemble_traffic",
+           "TrafficAssembler", "stream_lengths", "pad_traffic_length",
+           "conv_layer_traffic", "linear_layer_traffic"]
 
 # One sweep variant: an ordering transform plus an optional value->wire-dtype
 # quantizer (None transmits raw float32 words).
@@ -146,6 +147,12 @@ def ordered_payloads(
     out: List[np.ndarray] = []
     for layer in layers:
         inp, wgt = _subsample(layer, max_packets_per_layer)
+        if inp.shape[0] == 0:
+            # Probe the geometry instead of transforming nothing - a
+            # quantizer's scale reduction has no identity on empty operands.
+            (_, fpay), = payload_shapes([layer], lanes, variants)
+            out.append(np.zeros((len(variants), 0, fpay, lanes), np.uint32))
+            continue
         per_variant = [_payload_words(inp, wgt, tr, q, lanes)
                        for tr, q in variants]
         shapes = {w.shape for w in per_variant}
@@ -154,6 +161,103 @@ def ordered_payloads(
                 f"variants disagree on flit geometry: {sorted(shapes)}")
         out.append(np.stack(per_variant))
     return out
+
+
+@functools.lru_cache(maxsize=None)
+def _packet_chunk_fn(transform: WireTransform, lanes: int):
+    """Jitted wrapper of :func:`_packet_fn` for the streamed path.
+
+    One whole-program compile per (transform, lanes, chunk shape) that every
+    chunk of every layer with that operand width reuses - the streamed
+    packetizer pads its ragged final chunk up to the fixed chunk size
+    precisely so this executable is hit on every call. Wrapping the shared
+    vmap keeps the one-shot and streamed paths on a single transform kernel.
+    """
+    fn = _packet_fn(transform, lanes)
+    return jax.jit(lambda i, w: fn(i, w).astype(jnp.uint32))
+
+
+def payload_shapes(
+    layers: Sequence[LayerTraffic],
+    lanes: int,
+    variants: Sequence[Variant],
+    *,
+    max_packets_per_layer: Optional[int] = None,
+) -> List[Tuple[int, int]]:
+    """Per-layer ``(n_packets, payload_flits)`` without materializing any
+    payloads: the flit geometry is probed on a single packet per variant.
+
+    Lets the streamed path (and the sweep engine's stream-length padding)
+    size everything up front at O(1) cost per layer.
+    """
+    if not variants:
+        raise ValueError("need at least one (transform, quantizer) variant")
+    out: List[Tuple[int, int]] = []
+    for layer in layers:
+        inp, wgt = _subsample(layer, max_packets_per_layer)
+        # Geometry depends only on the operand width k, so a zero-packet
+        # layer is probed with a dummy packet (matching the one-shot path,
+        # which emits a (B, 0, F, L) array for it).
+        i1, w1 = (inp[:1], wgt[:1]) if inp.shape[0] else (
+            jnp.zeros((1,) + inp.shape[1:], inp.dtype),
+            jnp.zeros((1,) + wgt.shape[1:], wgt.dtype))
+        shapes = set()
+        for tr, q in variants:
+            i0, w0 = (i1, w1) if q is None else (q(i1), q(w1))
+            shapes.add(tuple(tr.apply(i0[0], w0[0], lanes).words.shape))
+        if len(shapes) != 1:
+            raise ValueError(
+                f"variants disagree on flit geometry: {sorted(shapes)}")
+        (fpay, _), = shapes
+        out.append((int(inp.shape[0]), int(fpay)))
+    return out
+
+
+def ordered_payloads_streamed(
+    layers: Sequence[LayerTraffic],
+    lanes: int,
+    variants: Sequence[Variant],
+    *,
+    chunk_packets: int = 4096,
+    max_packets_per_layer: Optional[int] = None,
+):
+    """Generator form of :func:`ordered_payloads` with bounded working set.
+
+    Yields ``(layer_index, start_packet, words)`` where ``words`` is the
+    ``(B, c, F, L)`` uint32 payload block for packets
+    ``[start, start + c)`` of that layer, ``c <= chunk_packets``.
+    Concatenating a layer's chunks is bit-identical to the one-shot path:
+    quantizers are applied to the *whole* layer first (a fixed-point scale
+    must not depend on the chunking), and the transform - per-packet by
+    construction - runs through one jit-cached vmap whose ragged final
+    chunk is zero-padded to the fixed chunk shape and sliced back.
+    """
+    if not variants:
+        raise ValueError("need at least one (transform, quantizer) variant")
+    if chunk_packets < 1:
+        raise ValueError(f"chunk_packets must be >= 1, got {chunk_packets}")
+    for li, layer in enumerate(layers):
+        inp, wgt = _subsample(layer, max_packets_per_layer)
+        n = int(inp.shape[0])
+        if n == 0:          # nothing to order or scatter for an empty layer
+            continue
+        ops = [(inp, wgt) if q is None else (q(inp), q(wgt))
+               for _, q in variants]
+        for start in range(0, n, chunk_packets):
+            c = min(chunk_packets, n - start)
+            per_variant = []
+            for (tr, _), (qi, qw) in zip(variants, ops):
+                ci, cw = qi[start:start + c], qw[start:start + c]
+                if c < chunk_packets:
+                    pad = ((0, chunk_packets - c), (0, 0))
+                    ci, cw = jnp.pad(ci, pad), jnp.pad(cw, pad)
+                words = _packet_chunk_fn(tr, lanes)(ci, cw)
+                per_variant.append(np.asarray(words)[:c])
+            shapes = {w.shape for w in per_variant}
+            if len(shapes) != 1:
+                raise ValueError(
+                    f"variants disagree on flit geometry: {sorted(shapes)}")
+            yield li, start, np.stack(per_variant)
 
 
 def stream_lengths(layer_shapes: Sequence[Tuple[int, int]],
@@ -197,6 +301,135 @@ def pad_traffic_length(traffic: Traffic, t: int) -> Traffic:
                    pkt=pad_last(traffic.pkt), length=traffic.length)
 
 
+class TrafficAssembler:
+    """Incremental per-MC stream writer - the scatter half of packetization,
+    shared verbatim by the one-shot (:func:`assemble_traffic`) and streamed
+    (:func:`build_traffic_streamed`) paths, so the two are bit-identical by
+    construction.
+
+    Closed-form round-robin skeleton. With global packet id g (consecutive
+    across layers), the seed loop's bookkeeping collapses to
+        mc(g)   = g % M                 (packet round-robin over MCs)
+        dest(g) = pes[g % num_pes]      (pe_rr increments once per packet)
+        vc(g)   = (g // M) % V          (vc_rr[mc] counts packets at mc, and
+                                         the mc assignment is a perfect RR)
+    and a packet's flit offset inside its MC stream is the running flit
+    count of earlier packets at that MC. Every quantity is elementwise in
+    g, so a layer may arrive in any number of packet chunks: each chunk
+    scatters into its final location independently.
+    """
+
+    def __init__(self, layer_shapes: Sequence[Tuple[int, int]],
+                 cfg: NocConfig, num_streams: Optional[int] = None,
+                 num_variants: int = 1):
+        m, lanes = cfg.num_mcs, cfg.lanes
+        if num_streams is not None and num_streams < m:
+            raise ValueError(
+                f"cannot pad {m} MC streams down to {num_streams}")
+        self.cfg = cfg
+        self.nv = num_variants
+        self.num_streams = num_streams
+        self.shapes = [(int(n), int(f)) for n, f in layer_shapes]
+        self.pes = np.asarray(cfg.pe_nodes, np.int64)
+        # Per-layer global packet offset and per-MC flit base at layer start.
+        ns = [n for n, _ in self.shapes]
+        self.layer_g0 = np.concatenate(
+            [[0], np.cumsum(ns)]).astype(np.int64)
+        self.layer_base = [np.zeros(m, np.int64)]
+        lengths = np.zeros(m, np.int64)
+        for (n, fpay), g0 in zip(self.shapes, self.layer_g0):
+            gids = g0 + np.arange(n, dtype=np.int64)
+            lengths = lengths + np.bincount(gids % m, minlength=m) * (fpay + 1)
+            self.layer_base.append(lengths.copy())
+        self.lengths = lengths
+        t = int(lengths.max()) if m else 0
+        self.words = np.zeros((self.nv, m, t, lanes), np.uint32)
+        self.dest = np.zeros((m, t), np.int32)
+        self.meta = np.zeros((m, t), np.int32)
+        self.vc = np.zeros((m, t), np.int32)
+        self.pkt = np.zeros((m, t), np.int32)
+
+    def add_chunk(self, layer: int, start: int, words: np.ndarray) -> None:
+        """Scatter payload ``words`` (B, c, F, L) for packets
+        ``[start, start + c)`` of ``layer`` into the per-MC streams."""
+        cfg, m, lanes = self.cfg, self.cfg.num_mcs, self.cfg.lanes
+        n_l, fpay = self.shapes[layer]
+        if words.shape[0] != self.nv:
+            raise ValueError(f"payload chunk has {words.shape[0]} variants, "
+                             f"assembler was sized for {self.nv}")
+        if words.shape[2] != fpay or words.shape[3] != lanes:
+            raise ValueError(
+                f"payload chunk {words.shape[2:]} does not match layer "
+                f"{layer} geometry ({fpay}, {lanes})")
+        c = words.shape[1]
+        if start < 0 or start + c > n_l:
+            raise ValueError(f"chunk [{start}, {start + c}) out of range for "
+                             f"layer {layer} with {n_l} packets")
+        if c == 0:
+            return
+        f = fpay + 1                                    # + header flit
+        g0 = self.layer_g0[layer]
+        gids = g0 + start + np.arange(c, dtype=np.int64)
+        mcs = gids % m
+        dest = self.pes[gids % len(self.pes)].astype(np.int32)
+        vc = ((gids // m) % cfg.num_vcs).astype(np.int32)
+        # Rank of each packet among this layer's packets at its MC: packets
+        # at one MC are g0+j0, g0+j0+M, ... so rank = (j - j0) // M.
+        j = gids - g0
+        j0 = (mcs - g0) % m
+        rank = (j - j0) // m
+        flit0 = self.layer_base[layer][mcs] + rank * f  # (c,) stream offset
+        cols = (flit0[:, None] + np.arange(f)[None, :]).reshape(-1)
+        rows = np.repeat(mcs, f)
+
+        # Header synthesis: word 0 = dest, 1 = packet id, 2 = payload flits.
+        hdr = np.zeros((c, lanes), np.uint32)
+        hdr[:, 0] = dest.astype(np.uint32)
+        hdr[:, 1] = (gids & 0xFFFFFFFF).astype(np.uint32)
+        hdr[:, 2] = fpay
+        full = np.empty((self.nv, c, f, lanes), np.uint32)
+        full[:, :, 0, :] = hdr[None]
+        full[:, :, 1:, :] = words
+
+        # META bitfield: header 0, payload flits PAYLOAD, last flit |= TAIL.
+        md = np.full((f,), META_PAYLOAD, np.int32)
+        md[0] = 0
+        md[-1] |= META_TAIL
+
+        self.words[:, rows, cols] = full.reshape(self.nv, c * f, lanes)
+        self.dest[rows, cols] = np.repeat(dest, f)
+        self.meta[rows, cols] = np.broadcast_to(md, (c, f)).reshape(-1)
+        self.vc[rows, cols] = np.repeat(vc, f)
+        self.pkt[rows, cols] = np.repeat(gids.astype(np.int32), f)
+
+    def finish(self) -> Traffic:
+        """Batched Traffic over everything scattered so far (empty padding
+        streams appended per ``num_streams``)."""
+        m, lanes, t = self.cfg.num_mcs, self.cfg.lanes, self.words.shape[2]
+        words_arr, lengths = self.words, self.lengths
+        dest_arr, meta_arr = self.dest, self.meta
+        vc_arr, pkt_arr = self.vc, self.pkt
+        if self.num_streams is not None and self.num_streams > m:
+            extra = self.num_streams - m
+            words_arr = np.concatenate(
+                [words_arr, np.zeros((self.nv, extra, t, lanes), np.uint32)],
+                axis=1)
+            pad2 = ((0, extra), (0, 0))
+            dest_arr = np.pad(dest_arr, pad2)
+            meta_arr = np.pad(meta_arr, pad2)
+            vc_arr = np.pad(vc_arr, pad2)
+            pkt_arr = np.pad(pkt_arr, pad2)
+            lengths = np.pad(lengths, (0, extra))
+
+        def tile(a):
+            return jnp.asarray(np.broadcast_to(a, (self.nv,) + a.shape))
+
+        return Traffic(
+            words=jnp.asarray(words_arr), dest=tile(dest_arr),
+            meta=tile(meta_arr), vc=tile(vc_arr), pkt=tile(pkt_arr),
+            length=tile(lengths.astype(np.int32)))
+
+
 def assemble_traffic(layer_words: Sequence[np.ndarray],
                      cfg: NocConfig,
                      num_streams: Optional[int] = None,
@@ -217,99 +450,52 @@ def assemble_traffic(layer_words: Sequence[np.ndarray],
     num_variants: the variants-axis size when ``layer_words`` is empty (it
         is otherwise read off the payload arrays).
     """
-    m, lanes = cfg.num_mcs, cfg.lanes
-    if num_streams is not None and num_streams < m:
-        raise ValueError(f"cannot pad {m} MC streams down to {num_streams}")
     nv = layer_words[0].shape[0] if layer_words else (num_variants or 1)
-    pes = np.asarray(cfg.pe_nodes, np.int64)
     for words_v in layer_words:
-        if words_v.shape[3] != lanes:
+        if words_v.shape[3] != cfg.lanes:
             raise ValueError(f"payloads built for {words_v.shape[3]} lanes, "
-                             f"config has {lanes}")
+                             f"config has {cfg.lanes}")
+    asm = TrafficAssembler([(w.shape[1], w.shape[2]) for w in layer_words],
+                           cfg, num_streams=num_streams, num_variants=nv)
+    for li, words_v in enumerate(layer_words):
+        asm.add_chunk(li, 0, words_v)
+    return asm.finish()
 
-    # Closed-form round-robin skeleton. With global packet id g
-    # (consecutive across layers), the seed loop's bookkeeping collapses to
-    #   mc(g)   = g % M                 (packet round-robin over MCs)
-    #   dest(g) = pes[g % num_pes]      (pe_rr increments once per packet)
-    #   vc(g)   = (g // M) % V          (vc_rr[mc] counts packets at mc, and
-    #                                    the mc assignment is a perfect RR)
-    # and a packet's flit offset inside its MC stream is the running flit
-    # count of earlier packets at that MC.
-    per_layer = []
-    lengths = np.zeros(m, np.int64)
-    g0 = 0
-    for words_v in layer_words:
-        n, fpay = words_v.shape[1], words_v.shape[2]
-        f = fpay + 1                                    # + header flit
-        gids = g0 + np.arange(n, dtype=np.int64)
-        mcs = gids % m
-        per_layer.append((gids, mcs, f))
-        lengths += np.bincount(mcs, minlength=m) * f
-        g0 += n
 
-    t = int(lengths.max()) if len(lengths) else 0
-    words_arr = np.zeros((nv, m, t, lanes), np.uint32)
-    dest_arr = np.zeros((m, t), np.int32)
-    meta_arr = np.zeros((m, t), np.int32)
-    vc_arr = np.zeros((m, t), np.int32)
-    pkt_arr = np.zeros((m, t), np.int32)
+def build_traffic_streamed(
+    layers: Sequence[LayerTraffic],
+    cfg: NocConfig,
+    variants: Sequence[Variant],
+    *,
+    chunk_packets: int = 4096,
+    num_streams: Optional[int] = None,
+    max_packets_per_layer: Optional[int] = None,
+    shapes: Optional[Sequence[Tuple[int, int]]] = None,
+) -> Traffic:
+    """Packetize full (DarkNet-scale) layers in fixed-size packet chunks.
 
-    mc_base = np.zeros(m, np.int64)                     # flits written per MC
-    for (gids, mcs, f), words_v in zip(per_layer, layer_words):
-        n, fpay = words_v.shape[1], words_v.shape[2]
-        if n == 0:
-            continue
-        start = gids[0]
-        dest = pes[gids % len(pes)].astype(np.int32)
-        vc = ((gids // m) % cfg.num_vcs).astype(np.int32)
-        # Rank of each packet among this layer's packets at its MC: packets
-        # at one MC are g0+j0, g0+j0+M, ... so rank = (j - j0) // M.
-        j = gids - start
-        j0 = (mcs - start) % m
-        rank = (j - j0) // m
-        flit0 = mc_base[mcs] + rank * f                 # (n,) stream offset
-        cols = (flit0[:, None] + np.arange(f)[None, :]).reshape(-1)
-        rows = np.repeat(mcs, f)
+    Bit-identical to ``build_traffic_batch`` (property-tested in
+    tests/test_noc_stream.py) with a bounded packetization working set: the
+    one-shot path materializes every layer's (B, n, F, L) payload tensor
+    *plus* the transform's whole-layer intermediates before assembling,
+    while this path holds one (B, chunk_packets, F, L) block at a time and
+    scatters it straight into its final stream location. The dense output
+    Traffic is the same either way - it is the input to the simulator.
 
-        # Header synthesis: word 0 = dest, 1 = packet id, 2 = payload flits.
-        hdr = np.zeros((n, lanes), np.uint32)
-        hdr[:, 0] = dest.astype(np.uint32)
-        hdr[:, 1] = (gids & 0xFFFFFFFF).astype(np.uint32)
-        hdr[:, 2] = fpay
-        full = np.empty((nv, n, f, lanes), np.uint32)
-        full[:, :, 0, :] = hdr[None]
-        full[:, :, 1:, :] = words_v
-
-        # META bitfield: header 0, payload flits PAYLOAD, last flit |= TAIL.
-        md = np.full((f,), META_PAYLOAD, np.int32)
-        md[0] = 0
-        md[-1] |= META_TAIL
-
-        words_arr[:, rows, cols] = full.reshape(nv, n * f, lanes)
-        dest_arr[rows, cols] = np.repeat(dest, f)
-        meta_arr[rows, cols] = np.broadcast_to(md, (n, f)).reshape(-1)
-        vc_arr[rows, cols] = np.repeat(vc, f)
-        pkt_arr[rows, cols] = np.repeat(gids.astype(np.int32), f)
-        mc_base += np.bincount(mcs, minlength=m) * f
-
-    if num_streams is not None and num_streams > m:
-        extra = num_streams - m
-        words_arr = np.concatenate(
-            [words_arr, np.zeros((nv, extra, t, lanes), np.uint32)], axis=1)
-        pad2 = ((0, extra), (0, 0))
-        dest_arr = np.pad(dest_arr, pad2)
-        meta_arr = np.pad(meta_arr, pad2)
-        vc_arr = np.pad(vc_arr, pad2)
-        pkt_arr = np.pad(pkt_arr, pad2)
-        lengths = np.pad(lengths, (0, extra))
-
-    def tile(a):
-        return jnp.asarray(np.broadcast_to(a, (nv,) + a.shape))
-
-    return Traffic(
-        words=jnp.asarray(words_arr), dest=tile(dest_arr), meta=tile(meta_arr),
-        vc=tile(vc_arr), pkt=tile(pkt_arr),
-        length=tile(lengths.astype(np.int32)))
+    shapes: precomputed :func:`payload_shapes` result for these layers /
+        variants (the sweep engine already has it for padding); probed here
+        when omitted.
+    """
+    if shapes is None:
+        shapes = payload_shapes(layers, cfg.lanes, variants,
+                                max_packets_per_layer=max_packets_per_layer)
+    asm = TrafficAssembler(shapes, cfg, num_streams=num_streams,
+                           num_variants=len(variants))
+    for li, start, words in ordered_payloads_streamed(
+            layers, cfg.lanes, variants, chunk_packets=chunk_packets,
+            max_packets_per_layer=max_packets_per_layer):
+        asm.add_chunk(li, start, words)
+    return asm.finish()
 
 
 def build_traffic_batch(

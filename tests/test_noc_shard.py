@@ -1,0 +1,94 @@
+"""Device-sharded sweep drain: `simulate_batch(devices=...)` splits the
+variants axis across devices with shard_map and must be bit-identical to
+the single-device vmapped drain (variant lanes never communicate).
+
+Multi-device cases need forced host devices:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m pytest tests/test_noc_shard.py
+On a 1-device host they skip; the fallback and helper tests always run.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.wire import by_name
+from repro.dist.sharding import batch_shardings
+from repro.noc import NocConfig, SweepGrid, build_traffic_batch, run_sweep, \
+    simulate_batch
+from repro.noc.traffic import LayerTraffic
+
+multi_device = pytest.mark.skipif(
+    jax.local_device_count() < 2,
+    reason="needs >1 device (set --xla_force_host_platform_device_count)")
+
+
+@pytest.fixture(scope="module")
+def workload():
+    key = jax.random.PRNGKey(0)
+    layers = [LayerTraffic(
+        jax.random.normal(key, (14, 6)),
+        jax.random.normal(jax.random.fold_in(key, 1), (14, 6)) * 0.4)]
+    cfg = NocConfig(4, 4, (0, 15), lanes=8)
+    variants = [(by_name(o), None) for o in ("O0", "O1", "O2")]
+    return layers, cfg, build_traffic_batch(layers, cfg, variants)
+
+
+@multi_device
+def test_sharded_drain_bit_identical(workload):
+    """B=3 over N devices (padded with empty rows to a device multiple):
+    every per-variant result matches the unsharded drain exactly."""
+    _, cfg, batch = workload
+    plain = simulate_batch(cfg, batch, chunk=128, check_conservation=True)
+    shard = simulate_batch(cfg, batch, chunk=128, check_conservation=True,
+                           devices=jax.local_devices())
+    assert len(plain) == len(shard) == 3
+    for p, s in zip(plain, shard):
+        assert s.total_bt == p.total_bt
+        assert s.drain_cycle == p.drain_cycle
+        assert s.cycles == p.cycles
+        assert s.ejected == p.ejected == s.injected
+        assert np.array_equal(s.link_bt, p.link_bt)
+        assert np.array_equal(s.inj_bt, p.inj_bt)
+
+
+@multi_device
+def test_sharded_sweep_matches_unsharded(workload):
+    """run_sweep(devices='auto') on a multi-device host returns the same
+    rows as the explicit single-device sweep."""
+    layers, _, _ = workload
+    grid = SweepGrid(meshes=("4x4_mc2",), transforms=("O0", "O2"),
+                     precisions=("fixed8",), models=("toy",),
+                     max_packets_per_layer=None, chunk=128)
+    auto = run_sweep(grid, lambda _n: layers)
+    single = run_sweep(grid, lambda _n: layers, devices=None)
+    assert auto.stats["devices"] == jax.local_device_count()
+    assert single.stats["devices"] == 1
+    strip = lambda rows: [{k: v for k, v in r.items()} for r in rows]
+    assert strip(auto.rows) == strip(single.rows)
+
+
+def test_single_device_fallback(workload):
+    """devices=None and a 1-device list take the plain vmapped runner."""
+    _, cfg, batch = workload
+    a = simulate_batch(cfg, batch, chunk=128)
+    b = simulate_batch(cfg, batch, chunk=128,
+                       devices=jax.local_devices()[:1])
+    for x, y in zip(a, b):
+        assert x.total_bt == y.total_bt and x.drain_cycle == y.drain_cycle
+
+
+def test_batch_shardings_leading_axis():
+    """The dist.sharding helper shards divisible leading dims over the axis
+    and replicates scalars / non-divisible leading dims (the same fallback
+    contract as logical_to_pspec)."""
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    ndev = jax.local_device_count()
+    mesh = Mesh(np.asarray(jax.local_devices()), ("variants",))
+    tree = {"a": np.zeros((2 * ndev, 3)), "s": np.zeros(()),
+            "odd": np.zeros((2 * ndev + 1, 2))}
+    shardings = batch_shardings(mesh, tree, "variants")
+    assert shardings["a"].spec == P("variants")
+    assert shardings["s"].spec == P()
+    if ndev > 1:
+        assert shardings["odd"].spec == P()

@@ -1,0 +1,153 @@
+"""Streamed packetization parity: the chunked path
+(``ordered_payloads_streamed`` / ``build_traffic_streamed``) must be
+bit-identical to the one-shot packetizer for every chunk size - including
+chunk=1, chunk > total, and ragged final chunks - and must scale to a full
+unsubsampled DarkNet layer. The one-shot path is itself pinned to the seed
+loop (tests/test_noc_sweep.py), so these tests transitively pin the
+streamed path to the seed as well."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.wire import by_name
+from repro.noc import NocConfig, build_traffic_batch, build_traffic_streamed
+from repro.noc.traffic import (LayerTraffic, assemble_traffic,
+                               ordered_payloads, ordered_payloads_streamed,
+                               payload_shapes, stream_lengths)
+from repro.quant import quantize_fixed8
+
+VARIANTS = [(by_name(o, tiebreak=tb), q)
+            for o in ("O0", "O1", "O2")
+            for tb in ("pattern",)
+            for q in (None, lambda t: quantize_fixed8(t).values)]
+
+
+def _layers(sizes, seed=0):
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i, (n, k) in enumerate(sizes):
+        ki = jax.random.fold_in(key, 2 * i)
+        kw = jax.random.fold_in(key, 2 * i + 1)
+        out.append(LayerTraffic(jax.random.normal(ki, (n, k)),
+                                jax.random.normal(kw, (n, k)) * 0.3))
+    return out
+
+
+def _assert_traffic_equal(a, b):
+    for name in a._fields:
+        xa, xb = np.asarray(getattr(a, name)), np.asarray(getattr(b, name))
+        assert xa.dtype == xb.dtype, name
+        assert xa.shape == xb.shape, name
+        assert np.array_equal(xa, xb), f"Traffic.{name} diverged"
+
+
+@pytest.fixture(scope="module")
+def two_layers():
+    return _layers([(13, 7), (6, 11)])
+
+
+@pytest.fixture(scope="module")
+def pinned_cfg():
+    return NocConfig(rows=4, cols=4, mc_nodes=(0, 15), num_vcs=3, lanes=8)
+
+
+# chunk=1, tiny, ragged-final, exact divisor, chunk > total packets
+@pytest.mark.parametrize("chunk", [1, 3, 6, 13, 1000])
+def test_streamed_traffic_bit_identical(two_layers, pinned_cfg, chunk):
+    ref = build_traffic_batch(two_layers, pinned_cfg, VARIANTS)
+    got = build_traffic_streamed(two_layers, pinned_cfg, VARIANTS,
+                                 chunk_packets=chunk)
+    _assert_traffic_equal(ref, got)
+
+
+def test_streamed_payload_chunks_reassemble(two_layers, pinned_cfg):
+    """The generator's (layer, start, words) chunks tile the one-shot
+    payload arrays exactly, and the shape probe agrees with both."""
+    lanes = pinned_cfg.lanes
+    ref = ordered_payloads(two_layers, lanes, VARIANTS)
+    assert payload_shapes(two_layers, lanes, VARIANTS) == \
+        [(w.shape[1], w.shape[2]) for w in ref]
+    acc = [np.full_like(w, 0xFF) for w in ref]
+    seen = [np.zeros(w.shape[1], bool) for w in ref]
+    for li, start, words in ordered_payloads_streamed(
+            two_layers, lanes, VARIANTS, chunk_packets=4):
+        c = words.shape[1]
+        assert not seen[li][start:start + c].any(), "overlapping chunks"
+        seen[li][start:start + c] = True
+        acc[li][:, start:start + c] = words
+    assert all(s.all() for s in seen), "missing packets"
+    for a, w in zip(acc, ref):
+        assert np.array_equal(a, w)
+
+
+def test_streamed_respects_subsampling_and_padding(two_layers, pinned_cfg):
+    """max_packets_per_layer and num_streams thread through the streamed
+    path exactly as through the one-shot path."""
+    ref = assemble_traffic(
+        ordered_payloads(two_layers, pinned_cfg.lanes, VARIANTS,
+                         max_packets_per_layer=5),
+        pinned_cfg, num_streams=4)
+    got = build_traffic_streamed(two_layers, pinned_cfg, VARIANTS,
+                                 chunk_packets=2, num_streams=4,
+                                 max_packets_per_layer=5)
+    _assert_traffic_equal(ref, got)
+
+
+def test_zero_packet_layer(pinned_cfg):
+    """A 0-packet layer must flow through probe, streamed, and one-shot
+    paths alike (the one-shot path emits a (B, 0, F, L) array for it)."""
+    layers = _layers([(5, 7)]) + [
+        LayerTraffic(jnp.zeros((0, 7)), jnp.zeros((0, 7)))]
+    assert payload_shapes(layers, pinned_cfg.lanes, VARIANTS)[1][0] == 0
+    ref = build_traffic_batch(layers, pinned_cfg, VARIANTS)
+    got = build_traffic_streamed(layers, pinned_cfg, VARIANTS,
+                                 chunk_packets=3)
+    _assert_traffic_equal(ref, got)
+
+
+def test_streamed_validation():
+    layers = _layers([(4, 3)])
+    cfg = NocConfig(2, 2, (0,), lanes=8)
+    with pytest.raises(ValueError, match="chunk_packets"):
+        list(ordered_payloads_streamed(layers, 8, VARIANTS[:1],
+                                       chunk_packets=0))
+    with pytest.raises(ValueError, match="variant"):
+        build_traffic_streamed(layers, cfg, [])
+
+
+def test_stream_lengths_match_assembled_lengths(two_layers, pinned_cfg):
+    shapes = payload_shapes(two_layers, pinned_cfg.lanes, VARIANTS)
+    traffic = build_traffic_streamed(two_layers, pinned_cfg, VARIANTS,
+                                     chunk_packets=3)
+    assert np.array_equal(stream_lengths(shapes, pinned_cfg.num_mcs),
+                          np.asarray(traffic.length[0]))
+
+
+def test_full_darknet_layer_smoke():
+    """A full, unsubsampled DarkNet conv layer (61504 packets - the layer
+    the seed's `_subsample` existed to avoid) streams through in bounded
+    chunks and lands bit-identical to the one-shot packetizer."""
+    from repro.models import DarkNetLike, init_params
+
+    model = DarkNetLike()
+    params = init_params(model.specs(), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), model.input_shape)
+    layer = model.layer_traffic(params, x)[0]
+    n = int(layer.inputs.shape[0])
+    assert n == 62 * 62 * 16          # full layer, nothing subsampled
+
+    cfg = NocConfig(4, 4, (0, 15), lanes=16)
+    variants = [(by_name("O1", tiebreak="pattern"),
+                 lambda t: quantize_fixed8(t).values)]
+    ref = assemble_traffic(ordered_payloads([layer], cfg.lanes, variants),
+                           cfg)
+    got = build_traffic_streamed([layer], cfg, variants, chunk_packets=4096)
+    _assert_traffic_equal(ref, got)
+    assert int(np.asarray(got.length).sum()) == n * (4 + 1)
+
+
+# The hypothesis property test (arbitrary geometries x chunk sizes) lives in
+# tests/test_noc_stream_properties.py: importorskip is module-granular, and
+# the deterministic parity tests above must run even where hypothesis is not
+# installed.

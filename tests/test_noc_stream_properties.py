@@ -1,0 +1,38 @@
+"""Property test (hypothesis): streamed packetization is bit-identical to
+the one-shot path for *arbitrary* layer geometries and chunk sizes -
+chunk=1, chunk > total, ragged final chunks, multi-layer mixes. The
+deterministic parity suite is tests/test_noc_stream.py; this module only
+holds the hypothesis half so importorskip can stay module-granular."""
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this container")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.wire import by_name
+from repro.noc import NocConfig, build_traffic_batch, build_traffic_streamed
+from repro.quant import quantize_fixed8
+
+from test_noc_stream import _assert_traffic_equal, _layers
+
+settings.register_profile("noc_stream", max_examples=25, deadline=None)
+settings.load_profile("noc_stream")
+
+
+@given(data=st.data(),
+       chunk=st.integers(min_value=1, max_value=50),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_property_streamed_equals_oneshot(data, chunk, seed):
+    """P: chunking is invisible - for any layer list and any chunk size the
+    streamed Traffic equals the one-shot Traffic bit for bit."""
+    sizes = data.draw(st.lists(
+        st.tuples(st.integers(1, 40), st.integers(1, 24)),
+        min_size=1, max_size=3))
+    layers = _layers(sizes, seed=seed)
+    cfg = NocConfig(2, 2, (0, 3), lanes=8)
+    variants = [(by_name("O2", tiebreak="pattern"), None),
+                (by_name("O1", tiebreak="stable"),
+                 lambda t: quantize_fixed8(t).values)]
+    ref = build_traffic_batch(layers, cfg, variants)
+    got = build_traffic_streamed(layers, cfg, variants, chunk_packets=chunk)
+    _assert_traffic_equal(ref, got)

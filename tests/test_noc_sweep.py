@@ -12,8 +12,8 @@ from repro.data import glyph_batch
 from repro.models import LeNet, init_params
 from repro.noc import (NocConfig, LayerTraffic, SweepGrid, Traffic,
                        build_traffic, build_traffic_batch, make_noc,
-                       mesh_by_name, recovery_overhead_bits, run_sweep,
-                       simulate, simulate_batch)
+                       mc_placement, mesh_by_name, recovery_overhead_bits,
+                       run_sweep, simulate, simulate_batch)
 from repro.noc._reference import build_traffic_reference, simulate_reference
 from repro.quant import quantize_fixed8
 
@@ -179,3 +179,123 @@ def test_sweep_grid_validation():
         SweepGrid(transforms=("O1",), baseline="O0")
     with pytest.raises(ValueError, match="precisions"):
         SweepGrid(precisions=("int4",))
+    with pytest.raises(ValueError, match="placements"):
+        SweepGrid(placements=("diagonal",))
+    with pytest.raises(ValueError, match="placement"):
+        SweepGrid(placements=())
+
+
+def test_mc_placement_strategies():
+    """Placement geometry: edge is the paper's boundary spread, corner is
+    diagonal-corners-first, interleaved walks the whole mesh; all are
+    deterministic, distinct-node, PE-preserving."""
+    # On square meshes the n=2 edge spread lands on opposite corners, so
+    # edge and corner coincide - the symmetry the sweep parity test uses.
+    assert mc_placement(4, 4, 2, "edge") == mc_placement(4, 4, 2, "corner")
+    assert mc_placement(2, 2, 2, "edge") == mc_placement(2, 2, 2, "corner")
+    assert mc_placement(4, 4, 4, "corner") == (0, 15, 3, 12)
+    assert mc_placement(4, 4, 2, "interleaved") == (0, 8)
+    assert mc_placement(16, 16, 8, "edge") == \
+        tuple(make_noc(16, 16, 8).mc_nodes)
+    for strategy in ("edge", "corner", "interleaved"):
+        nodes = mc_placement(5, 3, 4, strategy)
+        assert len(set(nodes)) == 4
+        assert all(0 <= n < 15 for n in nodes)
+    with pytest.raises(KeyError):
+        mc_placement(4, 4, 2, "diagonal")
+    with pytest.raises(ValueError):
+        mc_placement(2, 2, 4, "interleaved")   # no PE routers left
+    with pytest.raises(ValueError):
+        mc_placement(4, 4, 13, "corner")       # beyond the boundary
+
+
+def test_placement_axis_parity(lenet_layers):
+    """The MC-placement axis: symmetric placements (edge/corner resolve to
+    the same opposite-corner node set on 4x4/MC2) give identical rows;
+    interleaved genuinely moves the MCs, keeps the flit volume, and still
+    conserves every packet."""
+    grid = SweepGrid(meshes=("4x4_mc2",),
+                     placements=("edge", "corner", "interleaved"),
+                     transforms=("O0", "O1"), tiebreaks=("pattern",),
+                     precisions=("fixed8",), models=("lenet",),
+                     max_packets_per_layer=6, chunk=CHUNK)
+    report = run_sweep(grid, lambda _n: lenet_layers,
+                       check_conservation=True)
+    assert report.stats["cells"] == 6
+    for tr in ("O0", "O1"):
+        edge = report.row(placement="edge", transform=tr)
+        corner = report.row(placement="corner", transform=tr)
+        inter = report.row(placement="interleaved", transform=tr)
+        assert edge["total_bt"] == corner["total_bt"]
+        assert edge["cycles"] == corner["cycles"]
+        assert inter["flits"] == edge["flits"]
+        assert inter["total_bt"] != edge["total_bt"]
+
+
+def test_conservation_on_16x16_mesh(lenet_layers):
+    """The scale axis: a 16x16/MC8 mesh drains with every packet ejected
+    exactly once (positive), and the ledger still catches corrupted packet
+    ids at that scale (negative)."""
+    cfg = make_noc(16, 16, 8, lanes=8)
+    traffic = build_traffic(lenet_layers, cfg, by_name("O1"),
+                            max_packets_per_layer=8)
+    res = simulate(cfg, traffic, chunk=CHUNK, check_conservation=True)
+    assert res.ejected == res.injected > 0
+    bad = traffic._replace(pkt=jnp.zeros_like(traffic.pkt))
+    with pytest.raises(RuntimeError, match="conservation"):
+        simulate(cfg, bad, chunk=CHUNK, check_conservation=True)
+
+
+def test_streamed_sweep_matches_oneshot_sweep(lenet_layers):
+    """max_packets_per_layer=None routes through the streamed packetizer;
+    its rows must equal the one-shot sweep run at an unreached budget."""
+    kw = dict(meshes=("4x4_mc2",), transforms=("O0", "O2"),
+              precisions=("fixed8",), models=("lenet",), chunk=CHUNK)
+    layers = [LayerTraffic(l.inputs[:10], l.weights[:10])
+              for l in lenet_layers]
+    streamed = run_sweep(
+        SweepGrid(max_packets_per_layer=None, stream_chunk_packets=3, **kw),
+        lambda _n: layers)
+    oneshot = run_sweep(SweepGrid(max_packets_per_layer=10 ** 9, **kw),
+                        lambda _n: layers)
+    assert streamed.stats["streamed"] is True
+    assert oneshot.stats["streamed"] is False
+    keep = ("mesh", "placement", "model", "precision", "transform",
+            "total_bt", "cycles", "flits", "overhead_bits")
+    assert [{k: r[k] for k in keep} for r in streamed.rows] == \
+        [{k: r[k] for k in keep} for r in oneshot.rows]
+
+
+# Pinned by running the engine at PR-3 time; any schema or numeric drift in
+# the sweep output is a deliberate, reviewed change, not an accident. The
+# workload is fully deterministic (threefry PRNG, integer BT counters).
+GOLDEN_GRID = dict(meshes=("2x2_mc1",), placements=("edge", "interleaved"),
+                   transforms=("O0", "O1"), tiebreaks=("pattern",),
+                   precisions=("fixed8",), models=("toy",),
+                   max_packets_per_layer=None, chunk=256)
+GOLDEN_ROWS = [
+    {"mesh": "2x2_mc1", "placement": "edge", "transform": "O0",
+     "total_bt": 4499, "cycles": 30, "flits": 27},
+    {"mesh": "2x2_mc1", "placement": "edge", "transform": "O1",
+     "total_bt": 4687, "cycles": 30, "flits": 27},
+    {"mesh": "2x2_mc1", "placement": "interleaved", "transform": "O0",
+     "total_bt": 4499, "cycles": 30, "flits": 27},
+    {"mesh": "2x2_mc1", "placement": "interleaved", "transform": "O1",
+     "total_bt": 4687, "cycles": 30, "flits": 27},
+]
+
+
+def test_sweep_golden_rows():
+    key = jax.random.PRNGKey(5)
+    layers = [LayerTraffic(
+        jax.random.normal(key, (9, 12)),
+        jax.random.normal(jax.random.fold_in(key, 1), (9, 12)) * 0.5)]
+    report = run_sweep(SweepGrid(**GOLDEN_GRID), lambda _n: layers)
+    schema = {"mesh", "placement", "model", "precision", "transform",
+              "tiebreak", "total_bt", "adjusted_bt", "overhead_bits",
+              "cycles", "flits", "bt_per_flit", "reduction_pct",
+              "adjusted_reduction_pct"}
+    assert all(set(r) == schema for r in report.rows)
+    got = [{k: r[k] for k in ("mesh", "placement", "transform", "total_bt",
+                              "cycles", "flits")} for r in report.rows]
+    assert got == GOLDEN_ROWS
