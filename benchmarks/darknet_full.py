@@ -89,6 +89,9 @@ def run() -> dict:
         **{k: report.stats[k] for k in
            ("cells", "packetize_s", "simulate_s", "stepped_cycles",
             "cycles_per_sec", "streamed")},
+        # per-shape-class engine throughput (one entry per mesh x model,
+        # placements ride one drain-aware batched call)
+        "shape_classes": report.stats["shape_classes"],
     }
 
     # Sharded-vs-unsharded speedup: re-drain one placement's shape class

@@ -1,0 +1,188 @@
+"""Before/after measurement of the fused-state router-step overhaul.
+
+Two numbers back the overhaul's claims in BENCH_noc.json:
+
+* ``pinned_8x8``: cycles-per-sec of a fixed 2048-cycle chunk (B=3 variant
+  lanes, 8x8/MC4, LeNet-like synthetic traffic) stepped by the frozen
+  PR-3 unfused runner (``repro.noc._reference``) and by the fused runner -
+  an apples-to-apples per-cycle cost comparison with no drain logic, no
+  retirement, and no sharding involved.
+* ``bt_identical``: the same pinned chunk's BT accumulators and ejection
+  counts must agree bit-for-bit between the two steps mid-flight (the full
+  36-cell drain parity lives in tests/test_noc_step.py).
+
+``main()`` (the ``step_overhaul`` suite in ``benchmarks.run``) returns both
+plus the retirement parity flag; ``--check-floor N`` runs only the fused
+measurement and exits nonzero below N cycles/sec - the CI perf-smoke gate
+against step regressions (the floor carries generous margin for CI jitter).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.wire import by_name
+from repro.noc import make_noc
+from repro.noc.sim import (_chunk_runner, _mesh_key, fuse_traffic,
+                           make_state, simulate_batch)
+from repro.noc.traffic import LayerTraffic, build_traffic, \
+    build_traffic_batch
+from repro.noc import _reference as ref
+
+# The pinned chunk: mesh, lanes-of-variants, synthetic operand geometry,
+# and the fixed cycle count every measurement steps.
+PIN = {"mesh": "8x8_mc4", "variants": ("O0", "O1", "O2"), "packets": 400,
+       "k": 32, "seed": 11, "cycles": 2048, "chunk": 512}
+
+# cycles_per_sec of the full-DarkNet 16x16/MC16 darknet_full suite recorded
+# in BENCH_noc.json at PR 3 - the overhaul's end-to-end baseline.
+PR3_DARKNET_CPS = 416.9
+
+
+def _pinned_traffic():
+    cfg = make_noc(*[int(x) for x in
+                     PIN["mesh"].replace("x", " ").replace("_mc", " ").split()])
+    key = jax.random.PRNGKey(PIN["seed"])
+    layers = [LayerTraffic(
+        jax.random.normal(key, (PIN["packets"], PIN["k"])),
+        jax.random.normal(jax.random.fold_in(key, 1),
+                          (PIN["packets"], PIN["k"])) * 0.3)]
+    variants = [(by_name(o), None) for o in PIN["variants"]]
+    return cfg, build_traffic_batch(layers, cfg, variants)
+
+
+def _time_chunks(step_fn, n_chunks):
+    """Best-of-3 wall time for ``n_chunks`` sequential chunk calls."""
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        step_fn(n_chunks)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _fused_cps(cfg, batch):
+    b, m = batch.length.shape
+    wire = fuse_traffic(batch, False)
+    mc = jnp.broadcast_to(jnp.asarray(cfg.mc_nodes, jnp.int32), (b, m))
+    run = _chunk_runner(_mesh_key(cfg), True, PIN["chunk"], True, False)
+    state0 = jax.tree.map(lambda x: jnp.broadcast_to(x, (b,) + x.shape),
+                          make_state(cfg, m))
+    state, ej = run(state0, wire, mc)       # compile + warm
+    holder = {"state": state}
+
+    def go(n):
+        st = holder["state"]
+        for _ in range(n):
+            st, ej = run(st, wire, mc)
+        jax.block_until_ready(ej)
+        holder["state"] = st
+
+    n_chunks = PIN["cycles"] // PIN["chunk"]
+    wall = _time_chunks(go, n_chunks)
+    return b * PIN["cycles"] / wall, holder["state"]
+
+
+def _unfused_cps(cfg, batch):
+    b, m = batch.length.shape
+    mc = jnp.asarray(cfg.mc_nodes, jnp.int32)
+    run = ref._unfused_chunk_runner(ref._mesh_key_unfused(cfg), True,
+                                    PIN["chunk"], True)
+    state0 = jax.tree.map(lambda x: jnp.stack([x] * b),
+                          ref.make_state(cfg, m))
+    state = run(state0, batch, mc)          # compile + warm
+    holder = {"state": state}
+
+    def go(n):
+        st = holder["state"]
+        for _ in range(n):
+            st = run(st, batch, mc)
+        jax.block_until_ready(st.ejected)
+        holder["state"] = st
+
+    n_chunks = PIN["cycles"] // PIN["chunk"]
+    wall = _time_chunks(go, n_chunks)
+    return b * PIN["cycles"] / wall, holder["state"]
+
+
+def pinned_chunk_compare() -> dict:
+    """Step the pinned chunk with both generations; verify mid-flight BT
+    agreement and report the cycles-per-sec ratio."""
+    cfg, batch = _pinned_traffic()
+    after_cps, fused_state = _fused_cps(cfg, batch)
+    before_cps, unfused_state = _unfused_cps(cfg, batch)
+    # Both holders stepped 1 warm + 3x timed chunk groups from zeroed
+    # state, so their accumulators are comparable mid-flight.
+    bt_ok = (np.array_equal(np.asarray(fused_state.link_bt),
+                            np.asarray(unfused_state.link_bt))
+             and np.array_equal(np.asarray(fused_state.inj_bt),
+                                np.asarray(unfused_state.inj_bt))
+             and np.array_equal(np.asarray(fused_state.ejected),
+                                np.asarray(unfused_state.ejected)))
+    return {
+        "pinned": dict(PIN, variants=list(PIN["variants"])),
+        "before_cps": round(before_cps, 1),
+        "after_cps": round(after_cps, 1),
+        "step_speedup": round(after_cps / before_cps, 2),
+        "bt_identical": bool(bt_ok),
+    }
+
+
+def retirement_parity() -> bool:
+    """Exact drain_cycle parity of the retire/compact scheduler vs the
+    plain batched drain on heterogeneous lanes (also unit-tested)."""
+    cfg = make_noc(3, 3, 1, lanes=4)
+    key = jax.random.PRNGKey(5)
+    singles = []
+    for i, n in enumerate((34, 3, 11, 0)):
+        ki = jax.random.fold_in(key, i)
+        layer = LayerTraffic(
+            jax.random.normal(ki, (n, 5)),
+            jax.random.normal(jax.random.fold_in(ki, 1), (n, 5)) * 0.4)
+        singles.append(build_traffic([layer], cfg, by_name("O0")))
+    from repro.noc.traffic import stack_traffics
+    batch = stack_traffics(singles)
+    fast = simulate_batch(cfg, batch, chunk=32, retire=True)
+    plain = simulate_batch(cfg, batch, chunk=32, retire=False)
+    return all(f.drain_cycle == p.drain_cycle and f.total_bt == p.total_bt
+               for f, p in zip(fast, plain))
+
+
+def main(print_csv: bool = True) -> dict:
+    cmp_ = pinned_chunk_compare()
+    drain_ok = retirement_parity()
+    bench = {**cmp_, "retirement_drain_parity": bool(drain_ok)}
+    if not cmp_["bt_identical"]:
+        raise RuntimeError("fused step diverged from the PR-3 step on the "
+                           f"pinned chunk: {cmp_}")
+    if not drain_ok:
+        raise RuntimeError("retirement scheduler broke drain_cycle parity")
+    if print_csv:
+        print(f"step_overhaul/pinned_8x8,0,before={cmp_['before_cps']} "
+              f"after={cmp_['after_cps']} speedup={cmp_['step_speedup']}x "
+              f"bt_identical={cmp_['bt_identical']} "
+              f"drain_parity={drain_ok}")
+    return {"results": {"pinned_8x8": cmp_}, "bench": bench}
+
+
+def check_floor(floor: float) -> None:
+    cfg, batch = _pinned_traffic()
+    cps, _ = _fused_cps(cfg, batch)
+    print(f"step_overhaul floor check: {cps:.1f} cycles/sec "
+          f"(floor {floor})")
+    if cps < floor:
+        raise SystemExit(
+            f"fused-step perf regression: {cps:.1f} < floor {floor}")
+
+
+if __name__ == "__main__":
+    if len(sys.argv) == 1:
+        main()
+    elif sys.argv[1] == "--check-floor" and len(sys.argv) == 3:
+        check_floor(float(sys.argv[2]))
+    else:
+        raise SystemExit(f"usage: {sys.argv[0]} [--check-floor CPS]")

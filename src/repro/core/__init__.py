@@ -8,7 +8,7 @@ Public API:
     wire      - composable WireTransform API used by the NoC and dist layers
 """
 from . import bits, flits, bt, ordering, wire
-from .bits import popcount, transitions
+from .bits import popcount, popcount_hw, transitions
 from .flits import FlitStream, pack, pack_paired, unpack
 from .bt import (
     bt_stream, bt_per_flit, bt_between, expected_bt_pair, expected_bt_stream,
@@ -23,7 +23,7 @@ from .wire import WireTransform, by_name as wire_transform, measure as measure_s
 
 __all__ = [
     "bits", "flits", "bt", "ordering", "wire",
-    "popcount", "transitions",
+    "popcount", "popcount_hw", "transitions",
     "FlitStream", "pack", "pack_paired", "unpack",
     "bt_stream", "bt_per_flit", "bt_between", "expected_bt_pair",
     "expected_bt_stream", "pairing_objective", "reduction_rate",

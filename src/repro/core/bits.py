@@ -19,6 +19,7 @@ import jax.numpy as jnp
 __all__ = [
     "unsigned_view",
     "popcount",
+    "popcount_hw",
     "popcount32",
     "popcount8",
     "bit_width",
@@ -88,6 +89,19 @@ def popcount(values: jax.Array) -> jax.Array:
         return popcount8(u).astype(jnp.int32)
     # Promote 16-bit lanes to 32-bit; popcount32 handles both.
     return popcount32(u.astype(jnp.uint32)).astype(jnp.int32)
+
+
+def popcount_hw(values: jax.Array) -> jax.Array:
+    """'1'-bit count via :func:`jax.lax.population_count`.
+
+    Numerically identical to :func:`popcount` (the SWAR form above remains
+    the oracle, mirroring the paper's RTL circuit); this variant lowers to
+    the backend's native popcount when one exists and to an XLA-chosen
+    bit-twiddling expansion otherwise, which is what the NoC simulator's
+    per-cycle BT recorder wants on its hot path. Returns int32 counts.
+    """
+    u = unsigned_view(values)
+    return jax.lax.population_count(u).astype(jnp.int32)
 
 
 def bits_of(values: jax.Array) -> jax.Array:

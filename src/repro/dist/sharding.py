@@ -24,12 +24,13 @@ from __future__ import annotations
 from typing import Dict, Optional, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.spec import is_spec
 
 __all__ = ["Rules", "DEFAULT_RULES", "logical_to_pspec", "spec_shardings",
-           "batch_shardings", "data_axis_size"]
+           "batch_shardings", "compact_batch", "data_axis_size"]
 
 # A rule maps one logical axis name to a mesh axis, a tuple of mesh axes, or
 # None (replicate). Meshes only need .shape (name -> size) and .axis_names,
@@ -125,6 +126,25 @@ def batch_shardings(mesh, tree, axis: str = "data"):
         return NamedSharding(mesh, spec)
 
     return jax.tree.map(one, tree)
+
+
+def compact_batch(mesh, tree, idx, axis: str = "data"):
+    """Regroup a device-sharded batch: gather rows ``idx`` of every leaf's
+    leading dim, then re-place the narrower tree across ``axis`` with
+    :func:`batch_shardings`.
+
+    This is the sharded half of the NoC drain scheduler's variant
+    retirement: when lanes of a sharded ``simulate_batch`` finish early,
+    the survivors (plus any clone-padding rows repeated in ``idx`` to keep
+    the batch a device multiple) are compacted into a smaller batch without
+    a host round-trip for the bulk state - the gather runs on device and
+    only the re-placement moves shards. Works for any leaf whose leading
+    dim is the batch axis; the usual divisibility fallback applies to the
+    re-placement.
+    """
+    idx = jnp.asarray(idx)
+    out = jax.tree.map(lambda x: x[idx], tree)
+    return jax.device_put(out, batch_shardings(mesh, out, axis))
 
 
 def data_axis_size(mesh) -> int:

@@ -2,7 +2,8 @@
 engine, power model."""
 from .topology import (NocConfig, PAPER_NOCS, PLACEMENTS, xy_route,
                        neighbor_table, make_noc, mc_placement, mesh_by_name)
-from .sim import (Traffic, SimResult, simulate, simulate_batch, make_state)
+from .sim import (Traffic, Wire, SimResult, simulate, simulate_batch,
+                  make_state, fuse_traffic, pack_sideband)
 from .traffic import (LayerTraffic, build_traffic, build_traffic_batch,
                       build_traffic_streamed, conv_layer_traffic,
                       linear_layer_traffic)
@@ -12,7 +13,8 @@ from . import power
 __all__ = [
     "NocConfig", "PAPER_NOCS", "PLACEMENTS", "xy_route", "neighbor_table",
     "make_noc", "mc_placement", "mesh_by_name",
-    "Traffic", "SimResult", "simulate", "simulate_batch", "make_state",
+    "Traffic", "Wire", "SimResult", "simulate", "simulate_batch",
+    "make_state", "fuse_traffic", "pack_sideband",
     "LayerTraffic", "build_traffic", "build_traffic_batch",
     "build_traffic_streamed", "conv_layer_traffic", "linear_layer_traffic",
     "SweepGrid", "SweepReport", "run_sweep", "recovery_overhead_bits",

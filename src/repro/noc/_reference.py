@@ -1,34 +1,102 @@
-"""Seed (pre-vectorization) packetizer and retracing simulator — the oracle.
+"""Frozen pre-overhaul packetizer and simulators — the oracles.
 
-This module preserves, verbatim, the original per-neuron packetization loop
-and the closure-captured simulator driver that ``repro.noc.traffic`` /
-``repro.noc.sim`` shipped with. It exists for two reasons:
+This module preserves, verbatim, two retired implementations:
 
-* the equivalence regression test pins the vectorized packetizer and the
-  retrace-free simulator to be bit-identical to this implementation on a
-  fixed LeNet configuration (``tests/test_noc_sweep.py``);
-* ``benchmarks.run`` measures the sweep-engine speedup against this driver
-  and records it in ``BENCH_noc.json``.
+* the seed per-neuron packetization loop and the closure-captured simulator
+  driver (``build_traffic_reference`` / ``simulate_reference``) that
+  ``repro.noc.traffic`` / ``repro.noc.sim`` originally shipped with;
+* the PR-3 *unfused* router step and drivers (``simulate_unfused`` /
+  ``simulate_batch_unfused``): traffic-as-traced-argument and compile
+  cached like production, but with the split words/dest/meta/pkt FIFO
+  state, the route/neighbor-table gathers, the SWAR BT recorder, and the
+  always-on conservation ledger that the fused step replaced.
+
+They exist so the equivalence regression tests can pin the vectorized
+packetizer and the fused-state simulator bit-for-bit against fixed
+implementations (``tests/test_noc_sweep.py`` / ``tests/test_noc_step.py``),
+and so ``benchmarks.run`` can measure speedups against both generations
+and record them in ``BENCH_noc.json``.
 
 Do not "improve" this file: its value is that it does not change. The
-production implementations live in ``traffic.py`` / ``sim.py``.
+production implementations live in ``traffic.py`` / ``sim.py``. The legacy
+state layout is defined locally (the production ``SimState`` moved on to
+the fused layout).
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+import functools
+from typing import List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.bits import popcount
 from repro.core.wire import WireTransform
 from .topology import NocConfig, NUM_PORTS, OPPOSITE, PORT_LOCAL, \
     neighbor_table, xy_route
-from .sim import (Traffic, SimResult, META_PAYLOAD, META_TAIL, make_state,
-                  SimState, _front)
+from .sim import Traffic, SimResult, META_PAYLOAD, META_TAIL, _result
 from .traffic import LayerTraffic
 
-__all__ = ["build_traffic_reference", "simulate_reference"]
+__all__ = ["build_traffic_reference", "simulate_reference",
+           "simulate_unfused", "simulate_batch_unfused"]
+
+
+# --- the pre-overhaul (split-field) simulator state, frozen ---
+
+class SimState(NamedTuple):
+    # FIFO contents; router axis padded by one phantom row absorbing
+    # masked-out scatters.
+    words: jax.Array   # (NR+1, P, V, D, L) uint32
+    dest: jax.Array    # (NR+1, P, V, D) int32
+    meta: jax.Array    # (NR+1, P, V, D) int32
+    pkt: jax.Array     # (NR+1, P, V, D) int32
+    head: jax.Array    # (NR+1, P, V) int32
+    count: jax.Array   # (NR+1, P, V) int32
+    rr: jax.Array      # (NR, P) int32
+    link_last: jax.Array  # (NR, P, L) uint32
+    link_bt: jax.Array    # (NR, P) int32
+    link_flits: jax.Array # (NR, P) int32
+    inj_ptr: jax.Array    # (M,) int32
+    inj_last: jax.Array   # (M, L) uint32
+    inj_bt: jax.Array     # (M,) int32
+    ejected: jax.Array    # () int32
+    cycle: jax.Array      # () int32
+    eject_pkt: jax.Array  # (NP+1,) int32
+    drained_at: jax.Array # () int32
+
+
+def make_state(cfg: NocConfig, num_mcs: int, npkt: int = 0) -> SimState:
+    nr, p, v, d, l = cfg.num_routers, NUM_PORTS, cfg.num_vcs, cfg.vc_depth, cfg.lanes
+    return SimState(
+        words=jnp.zeros((nr + 1, p, v, d, l), jnp.uint32),
+        dest=jnp.zeros((nr + 1, p, v, d), jnp.int32),
+        meta=jnp.zeros((nr + 1, p, v, d), jnp.int32),
+        pkt=jnp.zeros((nr + 1, p, v, d), jnp.int32),
+        head=jnp.zeros((nr + 1, p, v), jnp.int32),
+        count=jnp.zeros((nr + 1, p, v), jnp.int32),
+        rr=jnp.zeros((nr, p), jnp.int32),
+        link_last=jnp.zeros((nr, p, l), jnp.uint32),
+        link_bt=jnp.zeros((nr, p), jnp.int32),
+        link_flits=jnp.zeros((nr, p), jnp.int32),
+        inj_ptr=jnp.zeros((num_mcs,), jnp.int32),
+        inj_last=jnp.zeros((num_mcs, l), jnp.uint32),
+        inj_bt=jnp.zeros((num_mcs,), jnp.int32),
+        ejected=jnp.zeros((), jnp.int32),
+        cycle=jnp.zeros((), jnp.int32),
+        eject_pkt=jnp.zeros((npkt + 1,), jnp.int32),
+        drained_at=jnp.full((), -1, jnp.int32),
+    )
+
+
+def _front(state: SimState, nr: int):
+    """Gather the front flit of every FIFO -> (NR, P, V, ...)."""
+    idx = state.head[:nr, :, :, None]
+    fw = jnp.take_along_axis(state.words[:nr], idx[..., None], axis=3)[:, :, :, 0]
+    fd = jnp.take_along_axis(state.dest[:nr], idx, axis=3)[:, :, :, 0]
+    fm = jnp.take_along_axis(state.meta[:nr], idx, axis=3)[:, :, :, 0]
+    fp = jnp.take_along_axis(state.pkt[:nr], idx, axis=3)[:, :, :, 0]
+    return fw, fd, fm, fp
 
 
 def _header_word(dest: int, pkt_id: int, n_payload: int, lanes: int) -> np.ndarray:
@@ -113,7 +181,8 @@ def build_traffic_reference(
     return Traffic(
         words=jnp.asarray(words_arr), dest=jnp.asarray(dest_arr),
         meta=jnp.asarray(meta_arr), vc=jnp.asarray(vc_arr),
-        pkt=jnp.asarray(pkt_arr), length=jnp.asarray(lengths))
+        pkt=jnp.asarray(pkt_arr), length=jnp.asarray(lengths),
+        num_packets=pkt_id)
 
 
 def _make_step_reference(cfg: NocConfig, traffic: Traffic, count_headers: bool):
@@ -272,3 +341,231 @@ def simulate_reference(cfg: NocConfig, traffic: Traffic, *,
         cycles=int(state.cycle), ejected=int(state.ejected), injected=total,
         link_bt=link_bt, link_flits=link_flits, inj_bt=inj_bt,
         total_bt=total_bt, inter_router_bt=inter)
+
+
+# --- the PR-3 unfused router step and drivers, frozen at PR 4 ---
+#
+# This is the production step as it stood before the fused-state overhaul:
+# four sideband gathers + four scatters per cycle (words/dest/meta/pkt),
+# route/neighbor/opposite table gathers, the SWAR popcount recorder, and an
+# unconditional per-packet ejection ledger. The fused step is pinned
+# bit-for-bit (total_bt / link_bt / drain_cycle) against it.
+
+def _make_step_unfused(cfg: NocConfig, count_headers: bool):
+    nr, p, v, d, l = cfg.num_routers, NUM_PORTS, cfg.num_vcs, cfg.vc_depth, cfg.lanes
+    nslots = p * v
+    route = xy_route(cfg)                      # (NR, NR)
+    nb = neighbor_table(cfg)                   # (NR, P)
+    opp = jnp.asarray(OPPOSITE)
+
+    def step(state: SimState, traffic: Traffic, mc_nodes: jax.Array):
+        m = traffic.length.shape[0]
+        t_cap = traffic.words.shape[1]
+        valid = state.count[:nr] > 0                       # (NR, P, V)
+        fw, fd, fm, fp = _front(state, nr)
+
+        rid = jnp.arange(nr)[:, None, None]
+        out_port = route[rid, fd]                          # (NR, P, V)
+
+        down = nb[rid, out_port]                            # (NR, P, V)
+        down_ip = opp[out_port]
+        vcs = jnp.arange(v)[None, None, :]
+        down_cnt = state.count[jnp.where(down < 0, nr, down), down_ip, vcs]
+        is_eject = out_port == PORT_LOCAL
+        space = jnp.where(is_eject, True, (down >= 0) & (down_cnt < d))
+        request = valid & space                             # (NR, P, V)
+
+        slot_req = request.reshape(nr, nslots)
+        slot_out = out_port.reshape(nr, nslots)
+        outs = jnp.arange(NUM_PORTS)[None, :, None]
+        req_po = slot_req[:, None, :] & (slot_out[:, None, :] == outs)
+        rot_idx = (jnp.arange(nslots)[None, None, :] + state.rr[:, :, None]) % nslots
+        rot = jnp.take_along_axis(req_po, rot_idx, axis=2)
+        has = jnp.any(rot, axis=2)                          # (NR, P_out)
+        first = jnp.argmax(rot, axis=2)
+        winner = (first + state.rr) % nslots                # (NR, P_out)
+        rr_new = jnp.where(has, (winner + 1) % nslots, state.rr)
+
+        onehot = (jnp.arange(nslots)[None, None, :] == winner[:, :, None]) & has[:, :, None]
+        pop = jnp.any(onehot, axis=1).reshape(nr, p, v)     # (NR, P, V)
+        head_new = jnp.where(pop, (state.head[:nr] + 1) % d, state.head[:nr])
+        count_new = state.count[:nr] - pop.astype(jnp.int32)
+        head2 = state.head.at[:nr].set(head_new)
+        count2 = state.count.at[:nr].set(count_new)
+
+        win_p = winner // v
+        win_v = winner % v
+        r2 = jnp.arange(nr)[:, None]
+        mv_word = fw[r2, win_p, win_v]                      # (NR, P_out, L)
+        mv_dest = fd[r2, win_p, win_v]
+        mv_meta = fm[r2, win_p, win_v]
+        mv_pkt = fp[r2, win_p, win_v]
+
+        tog = popcount(state.link_last ^ mv_word).sum(-1).astype(jnp.int32)
+        if count_headers:
+            counted = has
+        else:
+            counted = has & ((mv_meta & META_PAYLOAD) > 0)
+        link_bt = state.link_bt + jnp.where(counted, tog, 0)
+        link_flits = state.link_flits + has.astype(jnp.int32)
+        link_last = jnp.where(has[:, :, None], mv_word, state.link_last)
+
+        o_ids = jnp.arange(NUM_PORTS)[None, :]
+        push_ok = has & (o_ids != PORT_LOCAL)
+        down_r = nb[jnp.arange(nr)[:, None], o_ids]         # (NR, P_out)
+        tgt_r = jnp.where(push_ok & (down_r >= 0), down_r, nr)  # phantom row
+        tgt_p = opp[o_ids] * jnp.ones((nr, 1), jnp.int32)
+        tgt_v = win_v
+        slot = (head2[tgt_r, tgt_p, tgt_v] + count2[tgt_r, tgt_p, tgt_v]) % d
+
+        fr, fo = tgt_r.reshape(-1), tgt_p.reshape(-1)
+        fv, fs = tgt_v.reshape(-1), slot.reshape(-1)
+        words3 = state.words.at[fr, fo, fv, fs].set(mv_word.reshape(-1, l))
+        dest3 = state.dest.at[fr, fo, fv, fs].set(mv_dest.reshape(-1))
+        meta3 = state.meta.at[fr, fo, fv, fs].set(mv_meta.reshape(-1))
+        pkt3 = state.pkt.at[fr, fo, fv, fs].set(mv_pkt.reshape(-1))
+        count3 = count2.at[fr, fo, fv].add(push_ok.reshape(-1).astype(jnp.int32))
+
+        ejected = state.ejected + jnp.sum(has & (o_ids == PORT_LOCAL))
+
+        npcap = state.eject_pkt.shape[0] - 1
+        ej_tail = has & (o_ids == PORT_LOCAL) & ((mv_meta & META_TAIL) > 0)
+        ledger_idx = jnp.where(ej_tail, jnp.minimum(mv_pkt, npcap), npcap)
+        eject_pkt = state.eject_pkt.at[ledger_idx.reshape(-1)].add(
+            ej_tail.reshape(-1).astype(jnp.int32))
+
+        ptr = state.inj_ptr
+        active = ptr < traffic.length
+        safe_ptr = jnp.minimum(ptr, t_cap - 1)
+        mrange = jnp.arange(m)
+        iw = traffic.words[mrange, safe_ptr]                # (M, L)
+        idst = traffic.dest[mrange, safe_ptr]
+        imeta = traffic.meta[mrange, safe_ptr]
+        ivc = traffic.vc[mrange, safe_ptr]
+        ipkt = traffic.pkt[mrange, safe_ptr]
+        mc_cnt = count3[mc_nodes, PORT_LOCAL, ivc]
+        can = active & (mc_cnt < d)
+        tgt_mr = jnp.where(can, mc_nodes, nr)
+        islot = (head2[tgt_mr, PORT_LOCAL, ivc] + count3[tgt_mr, PORT_LOCAL, ivc]) % d
+        words4 = words3.at[tgt_mr, PORT_LOCAL, ivc, islot].set(iw)
+        dest4 = dest3.at[tgt_mr, PORT_LOCAL, ivc, islot].set(idst)
+        meta4 = meta3.at[tgt_mr, PORT_LOCAL, ivc, islot].set(imeta)
+        pkt4 = pkt3.at[tgt_mr, PORT_LOCAL, ivc, islot].set(ipkt)
+        count4 = count3.at[tgt_mr, PORT_LOCAL, ivc].add(can.astype(jnp.int32))
+        ptr_new = ptr + can.astype(jnp.int32)
+
+        itog = popcount(state.inj_last ^ iw).sum(-1).astype(jnp.int32)
+        if count_headers:
+            icounted = can
+        else:
+            icounted = can & ((imeta & META_PAYLOAD) > 0)
+        inj_bt = state.inj_bt + jnp.where(icounted, itog, 0)
+        inj_last = jnp.where(can[:, None], iw, state.inj_last)
+
+        total = jnp.sum(traffic.length)
+        drained_at = jnp.where((state.drained_at < 0) & (ejected >= total),
+                               state.cycle + 1, state.drained_at)
+
+        return SimState(words4, dest4, meta4, pkt4, head2, count4, rr_new,
+                        link_last, link_bt, link_flits, ptr_new, inj_last,
+                        inj_bt, ejected, state.cycle + 1, eject_pkt,
+                        drained_at)
+
+    return step
+
+
+@functools.lru_cache(maxsize=None)
+def _unfused_chunk_runner(mesh_key, count_headers: bool, chunk: int,
+                          batched: bool):
+    rows, cols, num_vcs, vc_depth, lanes = mesh_key
+    cfg = NocConfig(rows, cols, (), num_vcs=num_vcs, vc_depth=vc_depth,
+                    lanes=lanes)
+    step = _make_step_unfused(cfg, count_headers)
+
+    def run(state: SimState, traffic: Traffic,
+            mc_nodes: jax.Array) -> SimState:
+        def body(s, _):
+            return step(s, traffic, mc_nodes), ()
+        out, _ = jax.lax.scan(body, state, None, length=chunk)
+        return out
+
+    if batched:
+        # Traffic.num_packets is scalar metadata shared by every lane;
+        # broadcast it instead of mapping it.
+        tr_axes = Traffic(words=0, dest=0, meta=0, vc=0, pkt=0, length=0,
+                          num_packets=None)
+        run = jax.vmap(run, in_axes=(0, tr_axes, None))
+    return jax.jit(run, donate_argnums=0)
+
+
+def _mesh_key_unfused(cfg: NocConfig):
+    return (cfg.rows, cfg.cols, cfg.num_vcs, cfg.vc_depth, cfg.lanes)
+
+
+def _mc_array_unfused(cfg: NocConfig, traffic: Traffic, m: int) -> jax.Array:
+    if m < cfg.num_mcs:
+        raise ValueError(
+            f"traffic has {m} MC streams, config has {cfg.num_mcs}")
+    nodes = tuple(cfg.mc_nodes) + (0,) * (m - cfg.num_mcs)
+    return jnp.asarray(nodes, jnp.int32)
+
+
+def simulate_unfused(cfg: NocConfig, traffic: Traffic, *,
+                     count_headers: bool = True, max_cycles: int = 2_000_000,
+                     chunk: int = 4096) -> SimResult:
+    """The PR-3 drain loop: serial chunks, readback-synchronized."""
+    m = int(traffic.length.shape[0])
+    mc_nodes = _mc_array_unfused(cfg, traffic, m)
+    state = make_state(cfg, m)
+    run_chunk = _unfused_chunk_runner(_mesh_key_unfused(cfg), count_headers,
+                                      chunk, False)
+    total = int(np.sum(np.asarray(traffic.length)))
+    while total:
+        state = run_chunk(state, traffic, mc_nodes)
+        if int(state.ejected) == total or int(state.cycle) >= max_cycles:
+            break
+    if int(state.ejected) != total:
+        raise RuntimeError(
+            f"NoC did not drain: {int(state.ejected)}/{total} flits ejected "
+            f"after {int(state.cycle)} cycles")
+    return _result(cfg, (np.asarray(state.link_bt),
+                         np.asarray(state.link_flits),
+                         np.asarray(state.inj_bt), state.ejected, state.cycle,
+                         state.drained_at), total)
+
+
+def simulate_batch_unfused(cfg: NocConfig, traffic: Traffic, *,
+                           count_headers: bool = True,
+                           max_cycles: int = 2_000_000,
+                           chunk: int = 4096) -> List[SimResult]:
+    """The PR-3 batched drain: vmapped lanes, no retirement, no pipeline."""
+    if traffic.length.ndim != 2:
+        raise ValueError("simulate_batch_unfused wants a variants axis")
+    b, m = traffic.length.shape
+    mc_nodes = _mc_array_unfused(cfg, traffic, m)
+    base = make_state(cfg, m)
+    state = jax.tree.map(lambda x: jnp.stack([x] * b), base)
+    run_chunk = _unfused_chunk_runner(_mesh_key_unfused(cfg), count_headers,
+                                      chunk, True)
+    totals = np.asarray(traffic.length).sum(axis=1)
+    ejected = np.asarray(state.ejected)
+    while totals.sum():
+        state = run_chunk(state, traffic, mc_nodes)
+        ejected = np.asarray(state.ejected)
+        if np.all(ejected == totals) or \
+                int(np.asarray(state.cycle).max()) >= max_cycles:
+            break
+    if not np.all(ejected == totals):
+        lag = np.flatnonzero(ejected != totals)
+        raise RuntimeError(
+            f"NoC did not drain for variants {lag.tolist()}: "
+            f"{ejected[lag].tolist()}/{totals[lag].tolist()} flits ejected "
+            f"after {int(np.asarray(state.cycle).max())} cycles")
+    link_bt = np.asarray(state.link_bt)
+    link_flits = np.asarray(state.link_flits)
+    inj_bt = np.asarray(state.inj_bt)
+    cycles = np.asarray(state.cycle)
+    drained_at = np.asarray(state.drained_at)
+    return [_result(cfg, (link_bt[i], link_flits[i], inj_bt[i], ejected[i],
+                          cycles[i], drained_at[i]), int(totals[i]))
+            for i in range(b)]

@@ -18,13 +18,28 @@ Simplifications (documented in DESIGN.md):
   * result traffic (PE->MC) is not modeled; the paper's figures measure the
     distribution traffic (inputs/weights), which dominates volume.
 
-Everything is fixed-shape and jitted. ``Traffic`` is a *traced argument* of
-the compiled cycle chunk (not closed over), so every ordering/precision
+Fused-state hot loop (see DESIGN.md "Fused router step"): the per-flit
+sideband (dest | META | VC) is packed into one uint32 word and stacked with
+the payload lanes, so the per-cycle FIFO traffic is one sideband gather,
+one winner-flit gather, and one combined push+inject scatter; X-Y routing,
+port opposition, neighbor lookup, and the credit/count bookkeeping are
+closed-form coordinate arithmetic and *static-index* gathers (XLA:CPU
+lowers dynamic table gathers and scatters to scalar loops - they were most
+of the cycle time); the BT recorder runs through
+``jax.lax.population_count`` (the SWAR form in ``repro.core.bits`` stays
+the oracle); and the per-packet conservation ledger exists only under
+``check_conservation=True``. The pre-overhaul step survives verbatim in
+``repro.noc._reference`` and the parity tests pin this step bit-for-bit
+against it.
+
+Everything is fixed-shape and jitted. Traffic enters the compiled cycle
+chunk as a *traced argument* (not closed over), so every ordering/precision
 variant of the same traffic shape reuses one compiled executable; the
-carried ``SimState`` is donated between chunks. :func:`simulate_batch` vmaps
-the drain loop over a leading variants axis, which is how the sweep engine
-(``repro.noc.sweep``) runs O0/O1/O2 x precision cells of one shape class in
-a single compiled program.
+carried ``SimState`` is donated between chunks. :func:`simulate_batch`
+vmaps the drain over a leading variants axis, pipelines chunk dispatch
+ahead of the host-side drain bookkeeping, and retires drained variants by
+compacting the live lanes into a narrower batch (exact per-variant
+``drain_cycle`` either way).
 """
 from __future__ import annotations
 
@@ -36,16 +51,28 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.bits import popcount
-from .topology import (NocConfig, NUM_PORTS, OPPOSITE, PORT_LOCAL,
-                       neighbor_table, xy_route)
+from repro.core.bits import popcount_hw
+from .topology import (NocConfig, NUM_PORTS, OPPOSITE, PORT_E, PORT_LOCAL,
+                       PORT_N, PORT_S, PORT_W)
 
-__all__ = ["Traffic", "SimState", "SimResult", "simulate", "simulate_batch",
-           "make_state"]
+__all__ = ["Traffic", "Wire", "SimState", "SimResult", "simulate",
+           "simulate_batch", "make_state", "fuse_traffic", "pack_sideband"]
 
 # Flit meta bitfield
 META_PAYLOAD = 1
 META_TAIL = 2
+
+# Packed sideband word layout (one uint32 lane stacked after the payload):
+#   bits 0..8    destination router id (up to 512 routers; 16x16 = 256)
+#   bits 9..10   META bitfield (META_PAYLOAD | META_TAIL)
+#   bits 11..15  static VC index (up to 32 VCs)
+SIDE_DEST_BITS = 9
+SIDE_META_SHIFT = 9
+SIDE_VC_SHIFT = 11
+_DEST_MASK = (1 << SIDE_DEST_BITS) - 1
+_META_MASK = 3
+MAX_ROUTERS = 1 << SIDE_DEST_BITS
+MAX_VCS = 1 << (16 - SIDE_VC_SHIFT)
 
 
 class Traffic(NamedTuple):
@@ -57,10 +84,15 @@ class Traffic(NamedTuple):
     vc:     (M, T) int32     - static VC assignment (round-robin per packet)
     pkt:    (M, T) int32     - packet id (checked by ``check_conservation``)
     length: (M,) int32       - real stream length per MC
+    num_packets: int         - packet-id count, carried as metadata by the
+        packetizer so the conservation path never has to pull the full
+        ``pkt`` tensor to the host just to size its ledger. ``-1`` means
+        unknown (hand-built Traffic) and falls back to ``pkt.max()``.
 
     A *batched* Traffic (as built by ``build_traffic_batch`` and consumed by
     :func:`simulate_batch`) carries one extra leading variants axis B on
-    every field.
+    every array field; ``num_packets`` stays a single int (the skeleton is
+    shared across variants).
     """
 
     words: jax.Array
@@ -69,15 +101,56 @@ class Traffic(NamedTuple):
     vc: jax.Array
     pkt: jax.Array
     length: jax.Array
+    num_packets: int = -1
+
+    def variant(self, i) -> "Traffic":
+        """One variant row of a batched Traffic (metadata preserved)."""
+        return self._replace(
+            words=self.words[i], dest=self.dest[i], meta=self.meta[i],
+            vc=self.vc[i], pkt=self.pkt[i], length=self.length[i])
+
+
+class Wire(NamedTuple):
+    """Fused wire-format traffic: the simulator's traced input.
+
+    wire: (M, T, LF) uint32 - payload lanes, then the packed sideband lane,
+        then (only when the conservation ledger is on) a packet-id lane.
+    length: (M,) int32
+    """
+
+    wire: jax.Array
+    length: jax.Array
+
+
+def pack_sideband(dest: jax.Array, meta: jax.Array, vc: jax.Array) -> jax.Array:
+    """Pack (dest, META, VC) into the one-word sideband layout.
+
+    Fields must fit their bitfields (dest < 512, meta < 4, vc < 32) or
+    they bleed into each other; :func:`simulate` / :func:`simulate_batch`
+    validate traffic against the config before packing.
+    """
+    return (dest.astype(jnp.uint32)
+            | (meta.astype(jnp.uint32) << SIDE_META_SHIFT)
+            | (vc.astype(jnp.uint32) << SIDE_VC_SHIFT))
+
+
+def fuse_traffic(traffic: Traffic, track_pkt: bool = False) -> Wire:
+    """Stack payload lanes with the packed sideband (and optional pkt lane).
+
+    One device-side copy per simulate call; every per-cycle injection read
+    then costs a single gather instead of five.
+    """
+    side = pack_sideband(traffic.dest, traffic.meta, traffic.vc)
+    parts = [traffic.words, side[..., None]]
+    if track_pkt:
+        parts.append(traffic.pkt.astype(jnp.uint32)[..., None])
+    return Wire(jnp.concatenate(parts, axis=-1), traffic.length)
 
 
 class SimState(NamedTuple):
-    # FIFO contents; router axis padded by one phantom row absorbing
-    # masked-out scatters.
-    words: jax.Array   # (NR+1, P, V, D, L) uint32
-    dest: jax.Array    # (NR+1, P, V, D) int32
-    meta: jax.Array    # (NR+1, P, V, D) int32
-    pkt: jax.Array     # (NR+1, P, V, D) int32
+    # Fused FIFO contents: payload lanes | sideband | optional pkt lane.
+    # Router axis padded by one phantom row absorbing masked-out scatters.
+    fifo: jax.Array    # (NR+1, P, V, D, LF) uint32
     head: jax.Array    # (NR+1, P, V) int32
     count: jax.Array   # (NR+1, P, V) int32
     rr: jax.Array      # (NR, P) int32 round-robin pointer per output port
@@ -89,9 +162,10 @@ class SimState(NamedTuple):
     inj_bt: jax.Array     # (M,) int32
     ejected: jax.Array    # () int32 flits delivered
     cycle: jax.Array      # () int32
-    eject_pkt: jax.Array  # (NP+1,) int32 tail ejections per pkt id (last row
-                          # is a dump slot; NP=0 when conservation tracking
-                          # is off)
+    # Conservation ledger: tail ejections per pkt id (last row is a dump
+    # slot). ``None`` - the field does not exist - unless the drain runs
+    # with check_conservation; production drains pay nothing for it.
+    eject_pkt: Optional[jax.Array]   # (NP+1,) int32 or None
     drained_at: jax.Array # () int32 first cycle with everything ejected, -1
                           # while the network still holds flits
 
@@ -118,13 +192,18 @@ class SimResult:
 
 def make_state(cfg: NocConfig, num_mcs: int, npkt: int = 0) -> SimState:
     """Zeroed simulator state. ``npkt``: number of packet ids to track for
-    the conservation check (0 disables tracking at ~no cost)."""
+    the conservation check (0 omits the ledger and its pkt lane entirely)."""
     nr, p, v, d, l = cfg.num_routers, NUM_PORTS, cfg.num_vcs, cfg.vc_depth, cfg.lanes
+    if nr > MAX_ROUTERS:
+        raise ValueError(f"{nr} routers exceed the {SIDE_DEST_BITS}-bit "
+                         f"sideband dest field ({MAX_ROUTERS} max)")
+    if cfg.num_vcs > MAX_VCS:
+        raise ValueError(f"{cfg.num_vcs} VCs exceed the sideband VC field "
+                         f"({MAX_VCS} max)")
+    track = npkt > 0
+    lf = l + 1 + (1 if track else 0)
     return SimState(
-        words=jnp.zeros((nr + 1, p, v, d, l), jnp.uint32),
-        dest=jnp.zeros((nr + 1, p, v, d), jnp.int32),
-        meta=jnp.zeros((nr + 1, p, v, d), jnp.int32),
-        pkt=jnp.zeros((nr + 1, p, v, d), jnp.int32),
+        fifo=jnp.zeros((nr + 1, p, v, d, lf), jnp.uint32),
         head=jnp.zeros((nr + 1, p, v), jnp.int32),
         count=jnp.zeros((nr + 1, p, v), jnp.int32),
         rr=jnp.zeros((nr, p), jnp.int32),
@@ -136,19 +215,9 @@ def make_state(cfg: NocConfig, num_mcs: int, npkt: int = 0) -> SimState:
         inj_bt=jnp.zeros((num_mcs,), jnp.int32),
         ejected=jnp.zeros((), jnp.int32),
         cycle=jnp.zeros((), jnp.int32),
-        eject_pkt=jnp.zeros((npkt + 1,), jnp.int32),
+        eject_pkt=jnp.zeros((npkt + 1,), jnp.int32) if track else None,
         drained_at=jnp.full((), -1, jnp.int32),
     )
-
-
-def _front(state: SimState, nr: int):
-    """Gather the front flit of every FIFO -> (NR, P, V, ...)."""
-    idx = state.head[:nr, :, :, None]
-    fw = jnp.take_along_axis(state.words[:nr], idx[..., None], axis=3)[:, :, :, 0]
-    fd = jnp.take_along_axis(state.dest[:nr], idx, axis=3)[:, :, :, 0]
-    fm = jnp.take_along_axis(state.meta[:nr], idx, axis=3)[:, :, :, 0]
-    fp = jnp.take_along_axis(state.pkt[:nr], idx, axis=3)[:, :, :, 0]
-    return fw, fd, fm, fp
 
 
 def _mesh_key(cfg: NocConfig):
@@ -162,177 +231,276 @@ def _mesh_key(cfg: NocConfig):
     return (cfg.rows, cfg.cols, cfg.num_vcs, cfg.vc_depth, cfg.lanes)
 
 
-def _make_step(mesh_key, count_headers: bool):
-    """One router cycle as a pure function of (state, traffic, mc_nodes).
+def _make_step(mesh_key, count_headers: bool, track: bool):
+    """One router cycle as a pure function of (state, wire, mc_nodes).
 
-    Unlike the seed implementation this does NOT close over the traffic
-    tensors: they are traced arguments, so one compiled step serves every
-    traffic value of the same shape (all orderings/precisions of a sweep
-    shape class, and every MC placement of a mesh size).
+    Bit-identical to the pre-overhaul step (``repro.noc._reference``,
+    pinned by tests/test_noc_step.py) with the hot-path structure changed:
+
+    * one front gather of the packed sideband word per FIFO (the payload is
+      gathered only for the <= NR*P switch winners, not every FIFO slot);
+    * X-Y routing, port opposition, and downstream-router lookup are
+      coordinate arithmetic / compile-time constants - XLA:CPU lowers table
+      gathers to scalar loops, and these were half the cycle time;
+    * the credit check gathers every neighbor's input-FIFO counts with a
+      *static* index array (the four downstream blocks per router are fixed
+      by the mesh) and selects by out_port elementwise;
+    * round-robin arbitration picks winners by a masked min over the
+      rotation distance instead of gathering a rotated request matrix;
+    * pushes and injections write one combined scatter (their FIFO targets
+      are provably disjoint: pushes never write local in-ports), and the
+      FIFO-count increments are reconstructed receiver-side from another
+      static-index gather instead of a second scatter.
     """
     rows, cols, num_vcs, vc_depth, lanes = mesh_key
     cfg = NocConfig(rows, cols, (), num_vcs=num_vcs, vc_depth=vc_depth,
                     lanes=lanes)    # mc-free view: routing/geometry only
     nr, p, v, d, l = cfg.num_routers, NUM_PORTS, cfg.num_vcs, cfg.vc_depth, cfg.lanes
+    lf = l + 1 + (1 if track else 0)
     nslots = p * v
-    route = xy_route(cfg)                      # (NR, NR)
-    nb = neighbor_table(cfg)                   # (NR, P)
-    opp = jnp.asarray(OPPOSITE)
 
-    def step(state: SimState, traffic: Traffic, mc_nodes: jax.Array):
-        m = traffic.length.shape[0]
-        t_cap = traffic.words.shape[1]
-        valid = state.count[:nr] > 0                       # (NR, P, V)
-        fw, fd, fm, fp = _front(state, nr)
+    # Compile-time routing constants (replacing the route/neighbor tables).
+    coords = np.arange(nr)
+    rrow_np, rcol_np = coords // cols, coords % cols
+    rrow = jnp.asarray(rrow_np[:, None, None], jnp.int32)   # (NR, 1, 1)
+    rcol = jnp.asarray(rcol_np[:, None, None], jnp.int32)
+    # Downstream router per (router, out_port); phantom row nr at mesh edges
+    # (the direction a port faces is static, only *whether* a flit goes
+    # there is dynamic).
+    delta_np = np.array([-cols, 1, cols, -1, 0])
+    down_np = coords[:, None] + delta_np[None, :]
+    dir_ok = np.stack([rrow_np > 0, rcol_np < cols - 1, rrow_np < rows - 1,
+                       rcol_np > 0, np.zeros(nr, bool)], axis=1)
+    down_o = jnp.asarray(np.where(dir_ok, down_np, nr), jnp.int32)  # (NR, P)
+    opp4 = OPPOSITE[:4]                  # in/out opposition, non-local ports
+    # Credit blocks: for output direction o of router r, the downstream
+    # input FIFO block (nbr(r,o), opp(o)); phantom block (always count 0)
+    # where the direction leaves the mesh.
+    nb_blk = jnp.asarray(
+        np.where(dir_ok[:, :4], down_np[:, :4] * NUM_PORTS + opp4[None, :],
+                 nr * NUM_PORTS), jnp.int32)                        # (NR, 4)
+    # Receiver-centric incoming map: in-port ip of router r receives the
+    # winner of output opp(ip) at neighbor nbr(r, ip), when it exists.
+    src_ok = jnp.asarray(dir_ok[:, :4])                             # (NR, 4)
+    src_po = jnp.asarray(
+        np.where(dir_ok[:, :4], down_np[:, :4], 0) * NUM_PORTS
+        + opp4[None, :], jnp.int32)                                 # (NR, 4)
+    rcv_base = jnp.asarray(
+        coords[:, None] * NUM_PORTS + np.arange(4)[None, :], jnp.int32)
+    phantom_row = nr * NUM_PORTS * num_vcs * vc_depth
 
-        # --- route computation (X-Y, deterministic) ---
-        rid = jnp.arange(nr)[:, None, None]
-        out_port = route[rid, fd]                          # (NR, P, V)
+    def step(state: SimState, wire: Wire, mc_nodes: jax.Array):
+        m = wire.length.shape[0]
+        t_cap = wire.wire.shape[1]
+        head_r = state.head[:nr]                           # (NR, P, V)
+        count_r = state.count[:nr]
+        valid = count_r > 0
+
+        # Row-flat FIFO views: gathers/scatters move whole LF-word rows
+        # (one contiguous memcpy per flit) instead of per-element loops.
+        fifo_rows = state.fifo.reshape((nr + 1) * p * v * d, lf)
+
+        # --- front sideband: one word per FIFO ---
+        side_col = fifo_rows[:, l]                         # strided slice
+        front_row = (jnp.arange(nr * p * v, dtype=jnp.int32) * d
+                     + head_r.reshape(-1))
+        fside = jnp.take(side_col, front_row,
+                         mode="clip").astype(jnp.int32)
+        fside = fside.reshape(nr, p, v)
+        fd = fside & _DEST_MASK                            # (NR, P, V)
+
+        # --- route computation (X-Y, closed form) ---
+        dr, dc = fd // cols, fd % cols
+        out_port = jnp.where(
+            dc > rcol, PORT_E, jnp.where(
+                dc < rcol, PORT_W, jnp.where(
+                    dr > rrow, PORT_S, jnp.where(
+                        dr < rrow, PORT_N, PORT_LOCAL)))).astype(jnp.int32)
 
         # --- credit check: downstream FIFO (same VC) has space ---
-        down = nb[rid, out_port]                            # (NR, P, V)
-        down_ip = opp[out_port]
-        vcs = jnp.arange(v)[None, None, :]
-        down_cnt = state.count[jnp.where(down < 0, nr, down), down_ip, vcs]
+        # One static-index gather of every neighbor's input-FIFO counts
+        # (the four possible downstream blocks per router are fixed by the
+        # mesh), then an elementwise select by the flit's out_port. X-Y
+        # routing never points off-mesh for a real flit, and ejection needs
+        # no credit.
         is_eject = out_port == PORT_LOCAL
-        space = jnp.where(is_eject, True, (down >= 0) & (down_cnt < d))
-        request = valid & space                             # (NR, P, V)
+        count_blocks = state.count.reshape((nr + 1) * p, v)
+        ok = (jnp.take(count_blocks, nb_blk.reshape(-1), axis=0,
+                       mode="clip").reshape(nr, 4, v) < d)  # (NR, dir, V)
+        space = jnp.where(
+            out_port == PORT_N, ok[:, None, PORT_N, :], jnp.where(
+                out_port == PORT_E, ok[:, None, PORT_E, :], jnp.where(
+                    out_port == PORT_S, ok[:, None, PORT_S, :],
+                    ok[:, None, PORT_W, :])))
+        request = valid & (is_eject | space)               # (NR, P, V)
 
         # --- switch allocation: round-robin per (router, out_port) ---
-        # req_po[r, o, slot]: slot = p*V + v requests output o
+        # winner = requesting slot with the smallest rotation distance from
+        # the rr pointer (exactly the rotated-argmax of the old step).
         slot_req = request.reshape(nr, nslots)
         slot_out = out_port.reshape(nr, nslots)
         outs = jnp.arange(NUM_PORTS)[None, :, None]
         req_po = slot_req[:, None, :] & (slot_out[:, None, :] == outs)
-        rot_idx = (jnp.arange(nslots)[None, None, :] + state.rr[:, :, None]) % nslots
-        rot = jnp.take_along_axis(req_po, rot_idx, axis=2)
-        has = jnp.any(rot, axis=2)                          # (NR, P_out)
-        first = jnp.argmax(rot, axis=2)
-        winner = (first + state.rr) % nslots                # (NR, P_out)
-        rr_new = jnp.where(has, (winner + 1) % nslots, state.rr)
+        slots = jnp.arange(nslots, dtype=jnp.int32)[None, None, :]
+        rel = slots - state.rr[:, :, None]
+        rel = jnp.where(rel < 0, rel + nslots, rel)        # mod w/o division
+        min_rel = jnp.where(req_po, rel, nslots).min(axis=2)  # (NR, P_out)
+        has = min_rel < nslots
+        winner = state.rr + min_rel
+        winner = jnp.where(winner >= nslots, winner - nslots, winner)
+        rr_new = winner + 1
+        rr_new = jnp.where(rr_new >= nslots, rr_new - nslots, rr_new)
+        rr_new = jnp.where(has, rr_new, state.rr)
 
         # --- pops ---
-        onehot = (jnp.arange(nslots)[None, None, :] == winner[:, :, None]) & has[:, :, None]
-        pop = jnp.any(onehot, axis=1).reshape(nr, p, v)     # (NR, P, V)
-        head_new = jnp.where(pop, (state.head[:nr] + 1) % d, state.head[:nr])
-        count_new = state.count[:nr] - pop.astype(jnp.int32)
+        pop = ((slots == winner[:, :, None]) & has[:, :, None]).any(axis=1)
+        pop = pop.reshape(nr, p, v)                         # (NR, P, V)
+        head_new = jnp.where(pop, (head_r + 1) % d, head_r)
+        count_new = count_r - pop.astype(jnp.int32)
         head2 = state.head.at[:nr].set(head_new)
         count2 = state.count.at[:nr].set(count_new)
 
-        # --- gather moved flits per (router, out_port) ---
+        # --- gather the winners' flits only: (NR, P_out, LF) ---
         win_p = winner // v
         win_v = winner % v
-        r2 = jnp.arange(nr)[:, None]
-        mv_word = fw[r2, win_p, win_v]                      # (NR, P_out, L)
-        mv_dest = fd[r2, win_p, win_v]
-        mv_meta = fm[r2, win_p, win_v]
-        mv_pkt = fp[r2, win_p, win_v]
+        r2 = jnp.arange(nr, dtype=jnp.int32)[:, None]
+        win_pv = (r2 * p + win_p) * v + win_v              # (NR, P_out)
+        win_head = jnp.take(state.head.reshape(-1), win_pv.reshape(-1),
+                            mode="clip")
+        win_row = win_pv.reshape(-1) * d + win_head
+        mv = jnp.take(fifo_rows, win_row, axis=0,
+                      mode="clip").reshape(nr, p, lf)
+        mv_side = mv[..., l].astype(jnp.int32)
+        mv_meta = (mv_side >> SIDE_META_SHIFT) & _META_MASK
 
         # --- link BT recording (the Fig. 8 recorder) ---
-        tog = popcount(state.link_last ^ mv_word).sum(-1).astype(jnp.int32)
+        tog = popcount_hw(state.link_last ^ mv[..., :l]).sum(-1)
         if count_headers:
             counted = has
         else:
             counted = has & ((mv_meta & META_PAYLOAD) > 0)
         link_bt = state.link_bt + jnp.where(counted, tog, 0)
         link_flits = state.link_flits + has.astype(jnp.int32)
-        link_last = jnp.where(has[:, :, None], mv_word, state.link_last)
+        link_last = jnp.where(has[:, :, None], mv[..., :l], state.link_last)
 
-        # --- pushes into downstream FIFOs ---
+        # --- pushes, receiver-side ---
+        # In-port ip of router r receives the winner of output opp(ip) at
+        # neighbor nbr(r, ip) - a *static* mapping, so the incoming flit,
+        # its VC, and the write slot all come from static-index gathers and
+        # local elementwise math; no dynamic sender->receiver indexing.
         o_ids = jnp.arange(NUM_PORTS)[None, :]
-        push_ok = has & (o_ids != PORT_LOCAL)
-        down_r = nb[jnp.arange(nr)[:, None], o_ids]         # (NR, P_out)
-        tgt_r = jnp.where(push_ok & (down_r >= 0), down_r, nr)  # phantom row
-        tgt_p = opp[o_ids] * jnp.ones((nr, 1), jnp.int32)
-        tgt_v = win_v
-        slot = (head2[tgt_r, tgt_p, tgt_v] + count2[tgt_r, tgt_p, tgt_v]) % d
-
-        fr, fo = tgt_r.reshape(-1), tgt_p.reshape(-1)
-        fv, fs = tgt_v.reshape(-1), slot.reshape(-1)
-        words3 = state.words.at[fr, fo, fv, fs].set(mv_word.reshape(-1, l))
-        dest3 = state.dest.at[fr, fo, fv, fs].set(mv_dest.reshape(-1))
-        meta3 = state.meta.at[fr, fo, fv, fs].set(mv_meta.reshape(-1))
-        pkt3 = state.pkt.at[fr, fo, fv, fs].set(mv_pkt.reshape(-1))
-        count3 = count2.at[fr, fo, fv].add(push_ok.reshape(-1).astype(jnp.int32))
-
+        inc_ok = (jnp.take(has.reshape(-1), src_po.reshape(-1), mode="clip")
+                  .reshape(nr, 4) & src_ok)
+        inc_vc = jnp.take(win_v.reshape(-1), src_po.reshape(-1),
+                          mode="clip").reshape(nr, 4)
+        inc_w = jnp.take(mv.reshape(nr * p, lf), src_po.reshape(-1),
+                         axis=0, mode="clip")               # (NR*4, LF)
+        # Write slot per (router, in-port): (head + count) of the incoming
+        # VC's FIFO, selected elementwise over the V axis.
+        wc4 = (head2[:nr, :4, :] + count2[:nr, :4, :]) % d   # (NR, 4, V)
+        wslot = wc4[..., 0]
+        for vi in range(1, v):      # static V-way select, no gather
+            wslot = jnp.where(inc_vc == vi, wc4[..., vi], wslot)
         ejected = state.ejected + jnp.sum(has & (o_ids == PORT_LOCAL))
 
         # --- conservation ledger: tail flits ejecting at their PE ---
-        npcap = state.eject_pkt.shape[0] - 1
-        ej_tail = has & (o_ids == PORT_LOCAL) & ((mv_meta & META_TAIL) > 0)
-        ledger_idx = jnp.where(ej_tail, jnp.minimum(mv_pkt, npcap), npcap)
-        eject_pkt = state.eject_pkt.at[ledger_idx.reshape(-1)].add(
-            ej_tail.reshape(-1).astype(jnp.int32))
+        if track:
+            mv_pkt = mv[..., l + 1].astype(jnp.int32)
+            npcap = state.eject_pkt.shape[0] - 1
+            ej_tail = has & (o_ids == PORT_LOCAL) & ((mv_meta & META_TAIL) > 0)
+            ledger_idx = jnp.where(ej_tail, jnp.minimum(mv_pkt, npcap), npcap)
+            eject_pkt = state.eject_pkt.at[ledger_idx.reshape(-1)].add(
+                ej_tail.reshape(-1).astype(jnp.int32))
+        else:
+            eject_pkt = None
 
         # --- injection: one flit per MC per cycle into the local in-port ---
         ptr = state.inj_ptr
-        active = ptr < traffic.length
+        active = ptr < wire.length
         safe_ptr = jnp.minimum(ptr, t_cap - 1)
         mrange = jnp.arange(m)
-        iw = traffic.words[mrange, safe_ptr]                # (M, L)
-        idst = traffic.dest[mrange, safe_ptr]
-        imeta = traffic.meta[mrange, safe_ptr]
-        ivc = traffic.vc[mrange, safe_ptr]
-        ipkt = traffic.pkt[mrange, safe_ptr]
-        mc_cnt = count3[mc_nodes, PORT_LOCAL, ivc]
+        iw = wire.wire[mrange, safe_ptr]                    # (M, LF)
+        iside = iw[..., l].astype(jnp.int32)
+        imeta = (iside >> SIDE_META_SHIFT) & _META_MASK
+        ivc = iside >> SIDE_VC_SHIFT
+        # Pushes never touch local in-ports, so the local-port counts in
+        # ``count2`` are already post-push values: injection composes with
+        # the push scatter below without an intermediate count array.
+        head2_flat = head2.reshape(-1)
+        count2_flat = count2.reshape(-1)
+        mc_pv = (mc_nodes * p + PORT_LOCAL) * v + ivc
+        mc_cnt = jnp.take(count2_flat, mc_pv, mode="clip")
         can = active & (mc_cnt < d)
-        tgt_mr = jnp.where(can, mc_nodes, nr)
-        islot = (head2[tgt_mr, PORT_LOCAL, ivc] + count3[tgt_mr, PORT_LOCAL, ivc]) % d
-        words4 = words3.at[tgt_mr, PORT_LOCAL, ivc, islot].set(iw)
-        dest4 = dest3.at[tgt_mr, PORT_LOCAL, ivc, islot].set(idst)
-        meta4 = meta3.at[tgt_mr, PORT_LOCAL, ivc, islot].set(imeta)
-        pkt4 = pkt3.at[tgt_mr, PORT_LOCAL, ivc, islot].set(ipkt)
-        count4 = count3.at[tgt_mr, PORT_LOCAL, ivc].add(can.astype(jnp.int32))
+        inj_pv = jnp.where(can, mc_pv, (nr * p + PORT_LOCAL) * v + ivc)
+        islot = (jnp.take(head2_flat, inj_pv, mode="clip")
+                 + jnp.take(count2_flat, inj_pv, mode="clip")) % d
+
+        # --- one combined push+inject scatter (disjoint FIFO targets) ---
+        rcv_row = jnp.where(inc_ok, (rcv_base * v + inc_vc) * d + wslot,
+                            phantom_row)
+        cat_row = jnp.concatenate([rcv_row.reshape(-1), inj_pv * d + islot])
+        cat_w = jnp.concatenate([inc_w, iw])
+        fifo_new = fifo_rows.at[cat_row].set(
+            cat_w, mode="promise_in_bounds").reshape(state.fifo.shape)
+        # Count increments ride the same receiver-side masks: a one-hot VC
+        # add instead of scattering increment rows (XLA:CPU scatters cost
+        # ~5x a same-size gather).
+        vcs4 = jnp.arange(v, dtype=jnp.int32)[None, None, :]
+        count_inc = ((vcs4 == inc_vc[..., None])
+                     & inc_ok[..., None]).astype(jnp.int32)  # (NR, 4, V)
+        count_new = count2.at[:nr, :4, :].add(count_inc).reshape(-1).at[
+            inj_pv].add(can.astype(jnp.int32),
+                        mode="promise_in_bounds").reshape(count2.shape)
         ptr_new = ptr + can.astype(jnp.int32)
 
         # NI-link BT (MC -> router); the ordering unit sits right before it.
-        itog = popcount(state.inj_last ^ iw).sum(-1).astype(jnp.int32)
+        itog = popcount_hw(state.inj_last ^ iw[..., :l]).sum(-1)
         if count_headers:
             icounted = can
         else:
             icounted = can & ((imeta & META_PAYLOAD) > 0)
         inj_bt = state.inj_bt + jnp.where(icounted, itog, 0)
-        inj_last = jnp.where(can[:, None], iw, state.inj_last)
+        inj_last = jnp.where(can[:, None], iw[..., :l], state.inj_last)
 
-        total = jnp.sum(traffic.length)
+        total = jnp.sum(wire.length)
         drained_at = jnp.where((state.drained_at < 0) & (ejected >= total),
                                state.cycle + 1, state.drained_at)
 
-        return SimState(words4, dest4, meta4, pkt4, head2, count4, rr_new,
-                        link_last, link_bt, link_flits, ptr_new, inj_last,
-                        inj_bt, ejected, state.cycle + 1, eject_pkt,
-                        drained_at)
+        return SimState(fifo_new, head2, count_new, rr_new, link_last,
+                        link_bt, link_flits, ptr_new, inj_last, inj_bt,
+                        ejected, state.cycle + 1, eject_pkt, drained_at)
 
     return step
 
 
 @functools.lru_cache(maxsize=None)
-def _chunk_runner(mesh_key, count_headers: bool, chunk: int, batched: bool):
+def _chunk_runner(mesh_key, count_headers: bool, chunk: int, batched: bool,
+                  track: bool):
     """Compiled ``chunk``-cycle driver for one (mesh size, recorder) pair.
 
     Returned once per static key and cached; jax.jit then caches one
-    executable per (state, traffic, mc_nodes) shape signature, so
-    re-simulating a new traffic value of a known shape costs zero retraces
-    (the seed driver re-traced on every Traffic). The carried state is
-    donated chunk-to-chunk.
+    executable per (state, wire, mc_nodes) shape signature, so re-simulating
+    a new traffic value of a known shape costs zero retraces. The carried
+    state is donated chunk-to-chunk; the returned ``ejected`` snapshot is a
+    separate small output so the pipelined driver can dispatch chunk k+1
+    and only then read chunk k's drain bookkeeping.
     """
-    step = _make_step(mesh_key, count_headers)
+    step = _make_step(mesh_key, count_headers, track)
 
-    def run(state: SimState, traffic: Traffic,
-            mc_nodes: jax.Array) -> SimState:
+    def run(state: SimState, wire: Wire, mc_nodes: jax.Array):
         def body(s, _):
-            return step(s, traffic, mc_nodes), ()
+            return step(s, wire, mc_nodes), ()
         out, _ = jax.lax.scan(body, state, None, length=chunk)
-        return out
+        return out, out.ejected
 
     if batched:
-        run = jax.vmap(run, in_axes=(0, 0, None))
+        run = jax.vmap(run, in_axes=(0, 0, 0))
     return jax.jit(run, donate_argnums=0)
 
 
 @functools.lru_cache(maxsize=None)
 def _sharded_chunk_runner(mesh_key, count_headers: bool, chunk: int,
-                          dev_mesh):
+                          dev_mesh, track: bool):
     """``_chunk_runner(batched=True)`` with the variants axis split across
     the devices of ``dev_mesh`` via shard_map.
 
@@ -344,29 +512,26 @@ def _sharded_chunk_runner(mesh_key, count_headers: bool, chunk: int,
     """
     from jax.experimental.shard_map import shard_map
 
-    step = _make_step(mesh_key, count_headers)
+    step = _make_step(mesh_key, count_headers, track)
 
-    def run(state: SimState, traffic: Traffic,
-            mc_nodes: jax.Array) -> SimState:
+    def run(state: SimState, wire: Wire, mc_nodes: jax.Array):
         def body(s, _):
-            return step(s, traffic, mc_nodes), ()
+            return step(s, wire, mc_nodes), ()
         out, _ = jax.lax.scan(body, state, None, length=chunk)
-        return out
+        return out, out.ejected
 
-    run = jax.vmap(run, in_axes=(0, 0, None))
+    run = jax.vmap(run, in_axes=(0, 0, 0))
     spec_b = jax.sharding.PartitionSpec("variants")
     run = shard_map(run, mesh=dev_mesh,
-                    in_specs=(spec_b, spec_b, jax.sharding.PartitionSpec()),
-                    out_specs=spec_b, check_rep=False)
+                    in_specs=(spec_b, spec_b, spec_b),
+                    out_specs=(spec_b, spec_b), check_rep=False)
     return jax.jit(run, donate_argnums=0)
 
 
-def _conservation_error(traffic_row, eject_pkt: np.ndarray,
+def _conservation_error(length: np.ndarray, meta: np.ndarray,
+                        pkt: np.ndarray, eject_pkt: np.ndarray,
                         npkt: int) -> Optional[str]:
     """Check every injected pkt id ejected exactly once; None when clean."""
-    length = np.asarray(traffic_row.length)
-    meta = np.asarray(traffic_row.meta)
-    pkt = np.asarray(traffic_row.pkt)
     valid = np.arange(meta.shape[1])[None, :] < length[:, None]
     tails = valid & ((meta & META_TAIL) > 0)
     injected = np.bincount(pkt[tails].reshape(-1), minlength=npkt)[:npkt]
@@ -387,7 +552,32 @@ def _conservation_error(traffic_row, eject_pkt: np.ndarray,
     return None
 
 
+def _validate_fields(cfg: NocConfig, traffic: Traffic) -> None:
+    """Range-check the fields that feed packed sidebands and
+    promise-in-bounds scatters.
+
+    The packetizer satisfies these by construction; hand-built Traffic
+    (or traffic packetized for a different config) must fail loudly here
+    rather than corrupt the fused scatter. One device-side reduction per
+    drain call - no host pull of the full tensors.
+    """
+    if not traffic.dest.size:
+        return
+    dmax = int(jnp.max(traffic.dest))
+    if dmax >= cfg.num_routers:
+        raise ValueError(f"traffic dest {dmax} out of range for a "
+                         f"{cfg.num_routers}-router config")
+    vmax = int(jnp.max(traffic.vc))
+    if vmax >= cfg.num_vcs:
+        raise ValueError(f"traffic vc {vmax} out of range for a "
+                         f"{cfg.num_vcs}-VC config")
+
+
 def _npkt(traffic: Traffic) -> int:
+    n = int(traffic.num_packets)
+    if n >= 0:
+        return n
+    # Hand-built Traffic without metadata: legacy full host pull.
     pkt = np.asarray(traffic.pkt)
     return int(pkt.max()) + 1 if pkt.size else 0
 
@@ -433,26 +623,33 @@ def simulate(cfg: NocConfig, traffic: Traffic, *, count_headers: bool = True,
     """Run the NoC until all traffic drains; returns per-link BT counts.
 
     check_conservation: debug path - track tail ejections per packet id and
-        raise if any injected packet id does not eject exactly once.
+        raise if any injected packet id does not eject exactly once. Only
+        then does the state carry the ledger (and the FIFOs a pkt lane).
     """
     m = int(traffic.length.shape[0])
     mc_nodes = _mc_array(cfg, traffic, m, batched=False)
+    _validate_fields(cfg, traffic)
     npkt = _npkt(traffic) if check_conservation else 0
+    track = npkt > 0
     state = make_state(cfg, m, npkt=npkt)
-    run_chunk = _chunk_runner(_mesh_key(cfg), count_headers, chunk, False)
+    wire = fuse_traffic(traffic, track)
+    run_chunk = _chunk_runner(_mesh_key(cfg), count_headers, chunk, False,
+                              track)
 
     total = int(np.sum(np.asarray(traffic.length)))
     while total:    # empty traffic: nothing to drain (and T may be 0)
-        state = run_chunk(state, traffic, mc_nodes)
-        drained = (int(state.ejected) == total)
+        state, ej = run_chunk(state, wire, mc_nodes)
+        drained = (int(ej) == total)
         if drained or int(state.cycle) >= max_cycles:
             break
     if int(state.ejected) != total:
         raise RuntimeError(
             f"NoC did not drain: {int(state.ejected)}/{total} flits ejected "
             f"after {int(state.cycle)} cycles")
-    if check_conservation:
-        err = _conservation_error(traffic, np.asarray(state.eject_pkt), npkt)
+    if check_conservation and track:
+        err = _conservation_error(
+            np.asarray(traffic.length), np.asarray(traffic.meta),
+            np.asarray(traffic.pkt), np.asarray(state.eject_pkt), npkt)
         if err:
             raise RuntimeError(f"packet conservation violated: {err}")
     return _result(cfg, (np.asarray(state.link_bt), np.asarray(state.link_flits),
@@ -460,86 +657,165 @@ def simulate(cfg: NocConfig, traffic: Traffic, *, count_headers: bool = True,
                          state.drained_at), total)
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
 def simulate_batch(cfg: NocConfig, traffic: Traffic, *,
                    count_headers: bool = True, max_cycles: int = 2_000_000,
                    chunk: int = 4096, check_conservation: bool = False,
-                   devices=None) -> List[SimResult]:
+                   devices=None, mc_nodes=None,
+                   retire: bool = True) -> List[SimResult]:
     """Drain B traffic variants (leading axis) in one vmapped program.
 
     All variants must share shapes - which O0/O1/O2 x precision variants of
     one sweep shape class do by construction (ordering permutes words within
-    packets and never changes the flit geometry). The drain loop steps every
-    variant until the slowest one empties; already-drained variants idle at
-    zero cost to correctness (no flits move, BT accumulators freeze) and
-    their exact drain time is read from ``drain_cycle``.
+    packets and never changes the flit geometry). The drain is pipelined
+    (chunk k+1 dispatches before chunk k's drain bookkeeping is read back)
+    and *drain-aware*: once a variant's exact ``drain_cycle`` is recorded,
+    its lane can retire, and when at least half the lanes have retired the
+    survivors are compacted into a narrower batch (results spliced back by
+    lane index, bit-identical to the uncompacted drain - retired lanes were
+    frozen anyway).
 
     devices: shard the variants axis across these devices (shard_map over a
         1-D device mesh; the batch is padded with empty traffic rows up to
         a device multiple). Per-variant results are bit-identical to the
         single-device drain - variant lanes never communicate. ``None`` or
         a single device falls back to the plain vmapped runner.
+    mc_nodes: optional (B, M) per-variant injection-node ids - this is how
+        the sweep engine batches *different MC placements* of one mesh size
+        into a single drain. ``None`` broadcasts ``cfg.mc_nodes``.
+    retire: disable lane retirement/compaction (debug / parity testing);
+        every lane then steps until the slowest variant drains.
     """
     if traffic.length.ndim != 2:
         raise ValueError("simulate_batch wants a leading variants axis; "
                          "use simulate() for a single Traffic")
     b, m = traffic.length.shape
-    mc_nodes = _mc_array(cfg, traffic, m, batched=True)
+    default_nodes = np.asarray(_mc_array(cfg, traffic, m, batched=True))
+    if mc_nodes is None:
+        mc = np.broadcast_to(default_nodes, (b, m)).copy()
+    else:
+        mc = np.ascontiguousarray(np.asarray(mc_nodes, np.int32))
+        if mc.shape != (b, m):
+            raise ValueError(f"mc_nodes must be ({b}, {m}), got {mc.shape}")
+        if mc.size and (mc.min() < 0 or mc.max() >= cfg.num_routers):
+            raise ValueError("mc_nodes out of range for a "
+                             f"{cfg.num_routers}-router config")
+    _validate_fields(cfg, traffic)
     npkt = _npkt(traffic) if check_conservation else 0
-    base = make_state(cfg, m, npkt=npkt)
+    track = npkt > 0
+    host_cons = ((np.asarray(traffic.length), np.asarray(traffic.meta),
+                  np.asarray(traffic.pkt)) if track else None)
+    totals = np.asarray(traffic.length).sum(axis=1).astype(np.int64)
+    wire = fuse_traffic(traffic, track)
+
     devs = list(devices) if devices is not None else []
-    if len(devs) > 1:
+    sharded = len(devs) > 1
+    if sharded:
         # Lazy import: repro.dist pulls in repro.models, which imports this
         # package back for its layer_traffic helpers.
-        from repro.dist.sharding import batch_shardings
-        bp = -(-b // len(devs)) * len(devs)
+        from repro.dist.sharding import batch_shardings, compact_batch
+        ndev = len(devs)
+        bp = -(-b // ndev) * ndev
         if bp != b:
-            traffic = Traffic(*(
-                jnp.concatenate(
-                    [x, jnp.zeros((bp - b,) + x.shape[1:], x.dtype)])
-                for x in traffic))
-        state = jax.tree.map(lambda x: jnp.stack([x] * bp), base)
+            zpad = lambda x: jnp.concatenate(   # noqa: E731
+                [x, jnp.zeros((bp - b,) + x.shape[1:], x.dtype)])
+            wire = Wire(zpad(wire.wire), zpad(wire.length))
+            mc = np.concatenate([mc, np.zeros((bp - b, m), np.int32)])
+            totals = np.concatenate([totals, np.zeros(bp - b, np.int64)])
         dev_mesh = jax.sharding.Mesh(np.asarray(devs), ("variants",))
-        state = jax.device_put(
-            state, batch_shardings(dev_mesh, state, "variants"))
-        traffic = jax.device_put(
-            traffic, batch_shardings(dev_mesh, traffic, "variants"))
+        place = lambda tree: jax.device_put(  # noqa: E731
+            tree, batch_shardings(dev_mesh, tree, "variants"))
+        compact = lambda tree, idx: compact_batch(  # noqa: E731
+            dev_mesh, tree, idx, "variants")
         run_chunk = _sharded_chunk_runner(_mesh_key(cfg), count_headers,
-                                          chunk, dev_mesh)
+                                          chunk, dev_mesh, track)
+        min_rows = ndev
     else:
-        state = jax.tree.map(lambda x: jnp.stack([x] * b), base)
-        run_chunk = _chunk_runner(_mesh_key(cfg), count_headers, chunk, True)
+        bp = b
+        place = lambda tree: tree  # noqa: E731
+        compact = lambda tree, idx: jax.tree.map(  # noqa: E731
+            lambda x: x[idx], tree)
+        run_chunk = _chunk_runner(_mesh_key(cfg), count_headers, chunk, True,
+                                  track)
+        min_rows = 1
 
-    totals = np.asarray(traffic.length).sum(axis=1)
-    ejected = np.asarray(state.ejected)
-    while totals.sum():   # empty traffic: nothing to drain (and T may be 0)
-        state = run_chunk(state, traffic, mc_nodes)
-        ejected = np.asarray(state.ejected)
-        if np.all(ejected == totals) or int(np.asarray(state.cycle).max()) >= max_cycles:
-            break
-    if not np.all(ejected == totals):
-        lag = np.flatnonzero(ejected != totals)
-        raise RuntimeError(
-            f"NoC did not drain for variants {lag.tolist()}: "
-            f"{ejected[lag].tolist()}/{totals[lag].tolist()} flits ejected "
-            f"after {int(np.asarray(state.cycle).max())} cycles")
+    # Broadcast the zeroed base state instead of stacking B host copies;
+    # the first chunk call takes ownership of the buffer via donation.
+    base = make_state(cfg, m, npkt=npkt)
+    state = place(jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (bp,) + x.shape), base))
+    wire = place(wire)
+    mc_dev = place(jnp.asarray(mc, jnp.int32))
 
-    link_bt = np.asarray(state.link_bt)
-    link_flits = np.asarray(state.link_flits)
-    inj_bt = np.asarray(state.inj_bt)
-    cycles = np.asarray(state.cycle)
-    drained_at = np.asarray(state.drained_at)
-    eject_pkt = np.asarray(state.eject_pkt)
-    host_traffic = ([np.asarray(x) for x in traffic]
-                    if check_conservation else None)
+    harvested = {}      # lane id -> host bookkeeping leaves
+
+    def harvest(st, pairs):
+        leaves = [np.asarray(st.link_bt), np.asarray(st.link_flits),
+                  np.asarray(st.inj_bt), np.asarray(st.ejected),
+                  np.asarray(st.cycle), np.asarray(st.drained_at)]
+        ep = np.asarray(st.eject_pkt) if track else None
+        for lane, row in pairs:
+            harvested[lane] = tuple(a[row] for a in leaves) + (
+                (ep[row],) if track else (None,))
+
+    if totals.sum() == 0:   # empty traffic: nothing to drain (and T may be 0)
+        harvest(state, [(lane, lane) for lane in range(bp)])
+    else:
+        live = list(range(bp))          # lanes still draining
+        prim = {lane: lane for lane in live}    # lane -> device row
+        state, ej = run_chunk(state, wire, mc_dev)
+        nch = 1
+        while True:
+            # Pipelined driver: dispatch chunk k+1, then read chunk k's
+            # bookkeeping - the readback no longer leaves the device idle.
+            state2, ej2 = run_chunk(state, wire, mc_dev)
+            nch += 1
+            e = np.asarray(ej)          # ejected after chunk nch-1
+            done = [lane for lane in live if e[prim[lane]] >= totals[lane]]
+            if len(done) == len(live):
+                harvest(state2, [(lane, prim[lane]) for lane in live])
+                break
+            if (nch - 1) * chunk >= max_cycles:
+                lag = sorted(set(live) - set(done))
+                raise RuntimeError(
+                    f"NoC did not drain for variants {lag}: "
+                    f"{[int(e[prim[x]]) for x in lag]}/"
+                    f"{[int(totals[x]) for x in lag]} flits ejected "
+                    f"after {(nch - 1) * chunk} cycles")
+            if retire and done:
+                # Retire drained lanes: their recorders froze at the exact
+                # drain_cycle, so chunk k+1's rows hold their final state.
+                harvest(state2, [(lane, prim[lane]) for lane in done])
+                live = [lane for lane in live if lane not in set(done)]
+                cur = int(ej2.shape[0])
+                target = max(_next_pow2(len(live)), min_rows)
+                if target % min_rows:
+                    target = -(-target // min_rows) * min_rows
+                if len(live) <= cur // 2 and target < cur:
+                    keep = [prim[lane] for lane in live]
+                    rows = keep + [keep[0]] * (target - len(keep))
+                    idx = jnp.asarray(rows, jnp.int32)
+                    state2 = compact(state2, idx)
+                    wire = compact(wire, idx)
+                    mc_dev = compact(mc_dev, idx)
+                    ej2 = compact(ej2, idx)
+                    prim = {lane: i for i, lane in enumerate(live)}
+            state, ej = state2, ej2
+
     out = []
     for i in range(b):
-        if check_conservation:
-            row = Traffic(*(x[i] for x in host_traffic))
-            err = _conservation_error(row, eject_pkt[i], npkt)
+        (link_bt, link_flits, inj_bt, ejected, cycle, drained_at,
+         eject_pkt) = harvested[i]
+        if check_conservation and track:
+            length, meta, pkt = host_cons
+            err = _conservation_error(length[i], meta[i], pkt[i],
+                                      eject_pkt, npkt)
             if err:
                 raise RuntimeError(
                     f"packet conservation violated (variant {i}): {err}")
-        out.append(_result(cfg, (link_bt[i], link_flits[i], inj_bt[i],
-                                 ejected[i], cycles[i], drained_at[i]),
-                           int(totals[i])))
+        out.append(_result(cfg, (link_bt, link_flits, inj_bt, ejected,
+                                 cycle, drained_at), int(totals[i])))
     return out

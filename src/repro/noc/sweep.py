@@ -29,16 +29,20 @@ import time
 from typing import Callable, Dict, List, Optional, Sequence, Union
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.wire import WireTransform, by_name
 from repro.quant import quantize_fixed8
-from .topology import NocConfig, PLACEMENTS, mc_placement, mesh_by_name
+from .topology import (NocConfig, PLACEMENTS, mc_placement,
+                       mesh_by_name, xy_link_loads)
 from .traffic import (LayerTraffic, assemble_traffic, build_traffic_streamed,
                       ordered_payloads, pad_traffic_length, payload_shapes,
                       stream_lengths)
-from .sim import SimResult, simulate_batch
+from .sim import SimResult, Traffic, simulate_batch
 
-__all__ = ["SweepGrid", "SweepReport", "run_sweep", "recovery_overhead_bits"]
+__all__ = ["SweepGrid", "SweepReport", "run_sweep", "recovery_overhead_bits",
+           "drain_estimate"]
 
 Mesh = Union[str, NocConfig]
 LayersFn = Callable[[str], Sequence[LayerTraffic]]
@@ -158,6 +162,54 @@ def _place(cfg: NocConfig, placement: str) -> NocConfig:
                                    placement))
 
 
+def drain_estimate(cfg: NocConfig, lengths: np.ndarray) -> float:
+    """Cheap lower-bound drain estimate for one (config, stream set) cell.
+
+    The drain cannot beat the injection bound (each MC injects at most one
+    flit per cycle, so the longest stream is a floor) nor the hottest-link
+    bound (one flit per link per cycle, with per-link loads walked along
+    every MC->PE X-Y path in :func:`repro.noc.topology.xy_link_loads`).
+    The link bound is what separates boundary MC placements - whose few
+    escape links carry everything - from interleaved ones with identical
+    injection bounds; on the recorded 16x16 DarkNet run it ranks edge
+    (~181k-cycle drain) far above interleaved (~82k). Used only to *order*
+    lanes so device-sharded batches stay balanced and slow lanes retire
+    last; it carries no correctness weight.
+    """
+    lengths = np.asarray(lengths, float)[:cfg.num_mcs]
+    inj = float(lengths.max()) if lengths.size else 0.0
+    link = float(xy_link_loads(cfg, lengths).max()) if lengths.size else 0.0
+    return max(inj, link)
+
+
+def _deal_order(ests: np.ndarray, ndev: int) -> np.ndarray:
+    """Lane permutation dealing estimate-sorted lanes round-robin across
+    ``ndev`` contiguous device shards; identity when there is nothing to
+    balance (one device or uniform estimates)."""
+    if ndev <= 1 or np.unique(ests).size <= 1:
+        return np.arange(ests.size)
+    order = np.argsort(-ests, kind="stable")
+    return np.concatenate([order[i::ndev] for i in range(ndev)])
+
+
+def _take_lanes(traffic: Traffic, idx: np.ndarray) -> Traffic:
+    if np.array_equal(idx, np.arange(idx.size)):
+        return traffic
+    j = jnp.asarray(idx)
+    return traffic._replace(
+        words=traffic.words[j], dest=traffic.dest[j], meta=traffic.meta[j],
+        vc=traffic.vc[j], pkt=traffic.pkt[j], length=traffic.length[j])
+
+
+def _concat_lanes(parts: Sequence[Traffic]) -> Traffic:
+    if len(parts) == 1:
+        return parts[0]
+    cat = lambda f: jnp.concatenate([getattr(p, f) for p in parts])  # noqa: E731
+    return Traffic(words=cat("words"), dest=cat("dest"), meta=cat("meta"),
+                   vc=cat("vc"), pkt=cat("pkt"), length=cat("length"),
+                   num_packets=parts[0].num_packets)
+
+
 def _resolve_devices(devices):
     """``"auto"`` -> every local device when there are >1, else None."""
     if isinstance(devices, str):
@@ -173,8 +225,12 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
               out_path: Optional[str] = None,
               check_conservation: bool = False,
               devices="auto") -> SweepReport:
-    """Execute every cell of ``grid``; one packetization + one batched
-    simulation per (mesh, placement, model) shape class.
+    """Execute every cell of ``grid``; one packetization per (mesh,
+    placement, model) cell and ONE batched, drain-aware simulation per
+    (mesh, model): all placements ride the same call as extra variant
+    lanes (per-lane ``mc_nodes``), ordered by :func:`drain_estimate` so
+    device shards stay balanced, and lanes retire as they drain instead of
+    idle-stepping until the most congested placement finishes.
 
     layers_for_model: model name -> LayerTraffic sequence (the sweep engine
         stays decoupled from how weights are trained or loaded).
@@ -212,38 +268,48 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
         key = (cfg.rows, cfg.cols, cfg.num_vcs, cfg.vc_depth, cfg.lanes)
         size_groups.setdefault(key, []).append(cfg)
 
+    nv = len(variants)
+    ndev = len(devs) if devs else 1
     for mesh_name, base_cfg in resolved:
-        for placement in grid.placements:
-            cfg = _place(base_cfg, placement)
-            for model in grid.models:
-                if model not in layer_cache:
-                    layer_cache[model] = layers_for_model(model)
-                layers = layer_cache[model]
+        for model in grid.models:
+            if model not in layer_cache:
+                layer_cache[model] = layers_for_model(model)
+            layers = layer_cache[model]
 
-                t0 = time.perf_counter()
-                pkey = (model, cfg.lanes)
-                if pkey not in shape_cache:
-                    if streamed:
-                        # One single-packet geometry probe per model; the
-                        # payloads themselves never materialize whole.
-                        shape_cache[pkey] = payload_shapes(
-                            layers, cfg.lanes, variants,
-                            max_packets_per_layer=grid.max_packets_per_layer)
-                    else:
-                        # The one-shot path reads the geometry off the
-                        # payload arrays it needs anyway - probing all
-                        # variants again would double the transform work.
-                        payload_cache[pkey] = ordered_payloads(
-                            layers, cfg.lanes, variants,
-                            max_packets_per_layer=grid.max_packets_per_layer)
-                        shape_cache[pkey] = [(w.shape[1], w.shape[2])
-                                             for w in payload_cache[pkey]]
-                group = size_groups[(cfg.rows, cfg.cols, cfg.num_vcs,
-                                     cfg.vc_depth, cfg.lanes)]
-                shapes = shape_cache[pkey]
-                mc_pad = max(c.num_mcs for c in group)
-                t_pad = max(int(stream_lengths(shapes, c.num_mcs).max())
-                            for c in group)
+            t0 = time.perf_counter()
+            pkey = (model, base_cfg.lanes)
+            if pkey not in shape_cache:
+                if streamed:
+                    # One single-packet geometry probe per model; the
+                    # payloads themselves never materialize whole.
+                    shape_cache[pkey] = payload_shapes(
+                        layers, base_cfg.lanes, variants,
+                        max_packets_per_layer=grid.max_packets_per_layer)
+                else:
+                    # The one-shot path reads the geometry off the
+                    # payload arrays it needs anyway - probing all
+                    # variants again would double the transform work.
+                    payload_cache[pkey] = ordered_payloads(
+                        layers, base_cfg.lanes, variants,
+                        max_packets_per_layer=grid.max_packets_per_layer)
+                    shape_cache[pkey] = [(w.shape[1], w.shape[2])
+                                         for w in payload_cache[pkey]]
+            group = size_groups[(base_cfg.rows, base_cfg.cols,
+                                 base_cfg.num_vcs, base_cfg.vc_depth,
+                                 base_cfg.lanes)]
+            shapes = shape_cache[pkey]
+            mc_pad = max(c.num_mcs for c in group)
+            t_pad = max(int(stream_lengths(shapes, c.num_mcs).max())
+                        for c in group)
+
+            # Every MC placement of this (mesh, model) drains in ONE
+            # batched call: placements share the traffic shapes (padded
+            # above) and differ only in their per-lane mc_nodes, so the
+            # drain scheduler can retire fast placements while congested
+            # ones keep stepping.
+            placed = [(pl, _place(base_cfg, pl)) for pl in grid.placements]
+            parts = []
+            for _, cfg in placed:
                 if streamed:
                     traffic = build_traffic_streamed(
                         layers, cfg, variants,
@@ -252,30 +318,52 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
                 else:
                     traffic = assemble_traffic(
                         payload_cache[pkey], cfg, num_streams=mc_pad,
-                        num_variants=len(variants))
-                traffic = pad_traffic_length(traffic, t_pad)
-                t1 = time.perf_counter()
-                results: List[SimResult] = simulate_batch(
-                    cfg, traffic, count_headers=grid.count_headers,
-                    chunk=grid.chunk, max_cycles=grid.max_cycles,
-                    check_conservation=check_conservation, devices=devs)
-                t2 = time.perf_counter()
-                pack_s += t1 - t0
-                sim_s += t2 - t1
-                stepped_cycles += sum(r.cycles for r in results)
-                classes.append({
-                    "mesh": mesh_name, "placement": placement,
-                    "model": model, "variants": len(axes),
-                    "packetize_s": round(t1 - t0, 4),
-                    "simulate_s": round(t2 - t1, 4),
-                })
+                        num_variants=nv)
+                parts.append(pad_traffic_length(traffic, t_pad))
+            traffic = _concat_lanes(parts)
+            del parts
+            mc_rows = np.stack(
+                [np.asarray(tuple(cfg.mc_nodes) + (0,) * (mc_pad - cfg.num_mcs),
+                            np.int32)
+                 for _, cfg in placed for _ in range(nv)])
+            # Drain-aware lane order: deal estimate-sorted lanes across the
+            # device shards so no device ends up with only congested lanes.
+            ests = np.asarray([drain_estimate(cfg, stream_lengths(
+                shapes, cfg.num_mcs)) for _, cfg in placed
+                for _ in range(nv)])
+            order = _deal_order(ests, ndev)
+            inv = np.empty_like(order)
+            inv[order] = np.arange(order.size)
+            t1 = time.perf_counter()
+            res_perm: List[SimResult] = simulate_batch(
+                placed[0][1], _take_lanes(traffic, order),
+                mc_nodes=mc_rows[order],
+                count_headers=grid.count_headers,
+                chunk=grid.chunk, max_cycles=grid.max_cycles,
+                check_conservation=check_conservation, devices=devs)
+            results = [res_perm[inv[i]] for i in range(len(order))]
+            t2 = time.perf_counter()
+            pack_s += t1 - t0
+            sim_s += t2 - t1
+            class_cycles = sum(r.cycles for r in results)
+            stepped_cycles += class_cycles
+            classes.append({
+                "mesh": mesh_name, "placements": list(grid.placements),
+                "model": model, "variants": len(results),
+                "packetize_s": round(t1 - t0, 4),
+                "simulate_s": round(t2 - t1, 4),
+                "cycles_per_sec": round(class_cycles / (t2 - t1), 1)
+                if t2 > t1 else None,
+            })
 
+            for pi, (placement, cfg) in enumerate(placed):
+                cell = results[pi * nv:(pi + 1) * nv]
                 base_bt = {}
-                for (prec, tb, tr), res in zip(axes, results):
+                for (prec, tb, tr), res in zip(axes, cell):
                     if tr == grid.baseline:
                         base_bt[(prec, tb)] = res.total_bt
                 for (prec, tb, tr), (transform, _), res in zip(axes, variants,
-                                                               results):
+                                                               cell):
                     overhead = recovery_overhead_bits(
                         layers, transform,
                         max_packets_per_layer=grid.max_packets_per_layer)

@@ -20,7 +20,8 @@ import numpy as np
 
 __all__ = ["NocConfig", "PORT_N", "PORT_E", "PORT_S", "PORT_W", "PORT_LOCAL",
            "NUM_PORTS", "OPPOSITE", "xy_route", "neighbor_table", "PAPER_NOCS",
-           "PLACEMENTS", "mc_placement", "make_noc", "mesh_by_name"]
+           "PLACEMENTS", "mc_placement", "make_noc", "mesh_by_name",
+           "mean_hop_counts", "xy_link_loads"]
 
 PORT_N, PORT_E, PORT_S, PORT_W, PORT_LOCAL = 0, 1, 2, 3, 4
 NUM_PORTS = 5
@@ -186,6 +187,56 @@ def mc_placement(rows: int, cols: int, num_mcs: int,
         raise ValueError(f"cannot place {num_mcs} MCs on a "
                          f"{rows}x{cols} mesh boundary ({boundary} routers)")
     return _PLACEMENT_FNS[strategy](rows, cols, num_mcs)
+
+
+def mean_hop_counts(cfg: NocConfig) -> np.ndarray:
+    """Per-MC mean Manhattan (X-Y) hop count to the config's PE routers.
+
+    A cheap congestion proxy for the drain scheduler: with packets dealt
+    round-robin over PEs, the expected inter-router hops of one injected
+    flit equal the mean |dr| + |dc| from its MC to the PE set. Boundary MC
+    placements sit far from the PE centroid and saturate boundary links;
+    interleaved MCs sit inside it. Purely geometric - no traffic needed.
+    """
+    pes = np.asarray(cfg.pe_nodes, np.int64)
+    pr, pc = pes // cfg.cols, pes % cfg.cols
+    out = np.zeros(cfg.num_mcs)
+    for i, mc in enumerate(cfg.mc_nodes):
+        r, c = divmod(mc, cfg.cols)
+        out[i] = (np.abs(pr - r) + np.abs(pc - c)).mean() if pes.size else 0.0
+    return out
+
+
+def xy_link_loads(cfg: NocConfig, lengths) -> np.ndarray:
+    """Expected flits per directed inter-router link, (NR, 4) by out-port.
+
+    Assumes each MC's ``lengths[i]`` flits spread uniformly over the PE
+    set (the packetizer's PE round-robin is uniform up to one packet) and
+    walks every (MC, PE) X-Y path. The hottest link is a congestion lower
+    bound on the drain - exactly what separates boundary MC placements
+    (whose few escape links carry everything) from interleaved ones whose
+    injection bounds are identical. O(M * num_pes * diameter) host work.
+    """
+    loads = np.zeros((cfg.num_routers, 4))
+    pes = cfg.pe_nodes
+    if not pes:
+        return loads
+    for i, mc in enumerate(cfg.mc_nodes):
+        if i >= len(lengths):
+            break
+        w = float(lengths[i]) / len(pes)
+        r0, c0 = divmod(mc, cfg.cols)
+        for pe in pes:
+            r1, c1 = divmod(pe, cfg.cols)
+            for c in range(c0, c1):                     # X first: east
+                loads[r0 * cfg.cols + c, PORT_E] += w
+            for c in range(c0, c1, -1):                 # or west
+                loads[r0 * cfg.cols + c, PORT_W] += w
+            for r in range(r0, r1):                     # then Y: south
+                loads[r * cfg.cols + c1, PORT_S] += w
+            for r in range(r0, r1, -1):                 # or north
+                loads[r * cfg.cols + c1, PORT_N] += w
+    return loads
 
 
 # The paper's three evaluated NoC configurations (Sec. V-B).

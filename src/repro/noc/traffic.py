@@ -38,7 +38,7 @@ __all__ = ["LayerTraffic", "build_traffic", "build_traffic_batch",
            "build_traffic_streamed", "ordered_payloads",
            "ordered_payloads_streamed", "payload_shapes", "assemble_traffic",
            "TrafficAssembler", "stream_lengths", "pad_traffic_length",
-           "conv_layer_traffic", "linear_layer_traffic"]
+           "stack_traffics", "conv_layer_traffic", "linear_layer_traffic"]
 
 # One sweep variant: an ordering transform plus an optional value->wire-dtype
 # quantizer (None transmits raw float32 words).
@@ -296,9 +296,33 @@ def pad_traffic_length(traffic: Traffic, t: int) -> Traffic:
 
     words = np.pad(np.asarray(traffic.words),
                    [(0, 0)] * (traffic.words.ndim - 2) + [(0, extra), (0, 0)])
-    return Traffic(words=jnp.asarray(words), dest=pad_last(traffic.dest),
-                   meta=pad_last(traffic.meta), vc=pad_last(traffic.vc),
-                   pkt=pad_last(traffic.pkt), length=traffic.length)
+    return traffic._replace(
+        words=jnp.asarray(words), dest=pad_last(traffic.dest),
+        meta=pad_last(traffic.meta), vc=pad_last(traffic.vc),
+        pkt=pad_last(traffic.pkt))
+
+
+def stack_traffics(traffics: Sequence[Traffic]) -> Traffic:
+    """Stack single (unbatched) Traffics into one batched Traffic.
+
+    The lanes may carry different real lengths (each keeps its ``length``
+    row - this is how heterogeneous-drain batches for the retirement
+    scheduler are built); their stream axes are padded to the longest T
+    first. ``num_packets`` becomes the max, which is what the conservation
+    ledger needs to cover every lane.
+    """
+    if not traffics:
+        raise ValueError("need at least one Traffic to stack")
+    t = max(int(tr.words.shape[-2]) for tr in traffics)
+    traffics = [pad_traffic_length(tr, t) for tr in traffics]
+    return Traffic(
+        words=jnp.stack([tr.words for tr in traffics]),
+        dest=jnp.stack([tr.dest for tr in traffics]),
+        meta=jnp.stack([tr.meta for tr in traffics]),
+        vc=jnp.stack([tr.vc for tr in traffics]),
+        pkt=jnp.stack([tr.pkt for tr in traffics]),
+        length=jnp.stack([tr.length for tr in traffics]),
+        num_packets=max(int(tr.num_packets) for tr in traffics))
 
 
 class TrafficAssembler:
@@ -427,7 +451,8 @@ class TrafficAssembler:
         return Traffic(
             words=jnp.asarray(words_arr), dest=tile(dest_arr),
             meta=tile(meta_arr), vc=tile(vc_arr), pkt=tile(pkt_arr),
-            length=tile(lengths.astype(np.int32)))
+            length=tile(lengths.astype(np.int32)),
+            num_packets=int(self.layer_g0[-1]))
 
 
 def assemble_traffic(layer_words: Sequence[np.ndarray],
@@ -533,4 +558,4 @@ def build_traffic(
     """
     batch = build_traffic_batch(layers, cfg, [(transform, quantizer)],
                                 max_packets_per_layer=max_packets_per_layer)
-    return Traffic(*(field[0] for field in batch))
+    return batch.variant(0)

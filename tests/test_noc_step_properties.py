@@ -1,0 +1,58 @@
+"""Property test (hypothesis): variant retirement + lane compaction in
+``simulate_batch`` is bit-identical to the plain (uncompacted) batched
+drain for ARBITRARY per-variant drain times - arbitrary lane counts,
+arbitrary per-lane packet counts (including empty lanes), and arbitrary
+chunk sizes (chunk=1 forces a retire decision every cycle).
+
+Kept separate from tests/test_noc_step.py so importorskip can stay
+module-granular (mirrors tests/test_noc_stream_properties.py).
+"""
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this container")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.wire import by_name  # noqa: E402
+from repro.noc import (LayerTraffic, NocConfig, build_traffic,  # noqa: E402
+                       simulate_batch)
+from repro.noc.traffic import stack_traffics  # noqa: E402
+
+CFG = NocConfig(rows=3, cols=3, mc_nodes=(0, 4), lanes=4)
+
+
+def _batch(lane_packets, seed):
+    key = jax.random.PRNGKey(seed)
+    singles = []
+    for i, n in enumerate(lane_packets):
+        ki = jax.random.fold_in(key, i)
+        layer = LayerTraffic(
+            jax.random.normal(ki, (n, 5)),
+            jax.random.normal(jax.random.fold_in(ki, 1), (n, 5)) * 0.5)
+        singles.append(build_traffic([layer], CFG, by_name("O0")))
+    return stack_traffics(singles)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    lane_packets=st.lists(st.integers(min_value=0, max_value=24),
+                          min_size=2, max_size=7).filter(lambda x: sum(x)),
+    chunk=st.sampled_from([1, 3, 16, 64]),
+    seed=st.integers(min_value=0, max_value=5),
+)
+def test_retirement_compaction_matches_plain_drain(lane_packets, chunk, seed):
+    batch = _batch(lane_packets, seed)
+    fast = simulate_batch(CFG, batch, chunk=chunk, retire=True,
+                          check_conservation=True)
+    plain = simulate_batch(CFG, batch, chunk=chunk, retire=False,
+                           check_conservation=True)
+    assert len(fast) == len(plain) == len(lane_packets)
+    for f, p in zip(fast, plain):
+        assert f.total_bt == p.total_bt
+        assert f.drain_cycle == p.drain_cycle
+        assert f.ejected == p.ejected
+        assert np.array_equal(f.link_bt, p.link_bt)
+        assert np.array_equal(f.inj_bt, p.inj_bt)

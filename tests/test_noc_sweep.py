@@ -118,8 +118,8 @@ def test_padded_streams_leave_results_untouched(lenet_layers, pinned_cfg):
         assemble_traffic(payloads, pinned_cfg, num_streams=4),
         int(plain.words.shape[-2]) + 7)
     assert padded.length.shape == (1, 4)
-    a = simulate(pinned_cfg, Traffic(*(x[0] for x in plain)), chunk=CHUNK)
-    b = simulate(pinned_cfg, Traffic(*(x[0] for x in padded)), chunk=CHUNK)
+    a = simulate(pinned_cfg, plain.variant(0), chunk=CHUNK)
+    b = simulate(pinned_cfg, padded.variant(0), chunk=CHUNK)
     assert a.total_bt == b.total_bt
     assert a.drain_cycle == b.drain_cycle
     assert np.array_equal(a.link_bt, b.link_bt)
