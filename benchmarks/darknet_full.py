@@ -1,13 +1,19 @@
 """Beyond the paper's scale axis: the *full*, unsubsampled DarkNet traffic
-on a 16x16 mesh (the paper tops out at 8x8) with the MC-placement axis, via
-streamed packetization and the (optionally device-sharded) batched drain.
+on a 16x16 mesh (the paper tops out at 8x8) with the MC-placement and
+packet->MC-affinity axes plus the PE->MC result phase, via streamed
+packetization and the (optionally device-sharded) batched drain.
 
 This is the sweep the engine existed to reach: every neuron of every
 DarkNetLike layer (~100k packets, ~1.3M flits) is packetized in bounded
-chunks (`build_traffic_streamed`), placements share one compiled simulator,
-and - on multi-device hosts - the variants axis shards across devices.
-The suite records wall-clock, simulated cycles/sec, and the
-sharded-vs-unsharded speedup into BENCH_noc.json.
+chunks (`build_traffic_streamed`), placement x affinity combinations share
+one compiled simulator, the result phase drains each cell's PE->MC return
+traffic in a second batched simulation, and - on multi-device hosts - the
+variants axis shards across devices. The suite records wall-clock,
+simulated cycles/sec, the sharded-vs-unsharded speedup, per-direction BT,
+result-phase drain cycles, and the affinity hop/cycle deltas into
+BENCH_noc.json (schema: docs/bench_schema.md). Affinity-off (roundrobin)
+rows are compared against the previous recording in
+experiments/darknet_full.json - they must stay bit-identical.
 
 Continuing the paper's doubling pattern (4x4/MC2 -> 8x8/MC4 -> 8x8/MC8),
 the 16x16 mesh carries 16 MCs so injection bandwidth scales with the mesh.
@@ -24,8 +30,8 @@ import time
 
 import jax
 
-from repro.data import glyph_batch
 from repro.noc import SweepGrid, run_sweep
+from repro.data import glyph_batch
 
 from ._trained import get_trained, random_params
 
@@ -47,12 +53,23 @@ def _grid() -> SweepGrid:
     return SweepGrid(
         meshes=("4x4_mc2",) if SMOKE else ("16x16_mc16",),
         placements=("edge", "interleaved"),
+        affinity=("roundrobin", "nearest"),
         transforms=("O0", "O1") if SMOKE else ("O0", "O1", "O2"),
         tiebreaks=("pattern",),
         precisions=("fixed8",),
         models=("lenet",) if SMOKE else ("darknet",),
         max_packets_per_layer=None,          # full traffic -> streamed path
+        result_phase=True,
         chunk=4096)
+
+
+def _row_key(r, baseline_affinity="roundrobin"):
+    """Seed-stable keys: roundrobin rows keep the PR-3/PR-4 key format so
+    recordings stay comparable; other affinities append their own segment."""
+    key = f"{r['mesh']}/{r['placement']}/{r['precision']}/{r['transform']}"
+    if r["affinity"] != baseline_affinity:
+        key += f"/{r['affinity']}"
+    return key
 
 
 def run() -> dict:
@@ -68,8 +85,7 @@ def run() -> dict:
 
     results = {}
     for r in report.rows:
-        key = f"{r['mesh']}/{r['placement']}/{r['precision']}/{r['transform']}"
-        results[key] = {
+        results[_row_key(r)] = {
             "total_bt": r["total_bt"], "cycles": r["cycles"],
             "flits": r["flits"],
             "reduction_pct":
@@ -78,20 +94,77 @@ def run() -> dict:
             "adjusted_reduction_pct":
                 None if r["transform"] == grid.baseline
                 else r["adjusted_reduction_pct"],
+            "result_bt": r["result_bt"],
+            "result_cycles": r["result_cycles"],
+            "result_flits": r["result_flits"],
         }
 
+    # Affinity-off rows must be bit-identical to the previous recording
+    # (the knob defaults off, so its introduction cannot move the needle).
+    prior_path = os.path.join(OUT, "darknet_full.json")
+    rr_identical = None
+    if os.path.exists(prior_path):
+        try:
+            with open(prior_path) as f:
+                prior = json.load(f)
+            checks = [
+                (results[k][f], prior[k][f])
+                for k in prior if k in results and "/nearest" not in k
+                for f in ("total_bt", "cycles", "flits")
+                if f in prior[k]]
+            rr_identical = (all(a == b for a, b in checks)
+                            if checks else None)
+        except (ValueError, KeyError, TypeError):
+            rr_identical = None
+
+    # Per-direction BT and the affinity hop/cycle deltas, per placement.
+    affinity = {}
+    for pl in grid.placements:
+        rr = report.row(placement=pl, affinity="roundrobin",
+                        transform=grid.baseline)
+        near = report.row(placement=pl, affinity="nearest",
+                          transform=grid.baseline)
+        affinity[pl] = {
+            "mean_hops_roundrobin": rr["mean_hops"],
+            "mean_hops_nearest": near["mean_hops"],
+            "hop_delta_pct": round(
+                (1 - near["mean_hops"] / rr["mean_hops"]) * 100, 2)
+            if rr["mean_hops"] else None,
+            "cycles_roundrobin": rr["cycles"],
+            "cycles_nearest": near["cycles"],
+            "cycle_delta_pct": round(
+                (1 - near["cycles"] / rr["cycles"]) * 100, 2)
+            if rr["cycles"] else None,
+            "request_bt_delta_pct": round(
+                (1 - near["total_bt"] / rr["total_bt"]) * 100, 2)
+            if rr["total_bt"] else None,
+            "result_bt_delta_pct": round(
+                (1 - near["result_bt"] / rr["result_bt"]) * 100, 2)
+            if rr["result_bt"] else None,
+        }
+
+    base_row = report.row(placement=grid.placements[0], affinity="roundrobin",
+                          transform=grid.baseline)
     bench = {
         "model": model, "mesh": grid.meshes[0],
         "placements": list(grid.placements),
+        "affinity_axis": list(grid.affinity),
         "packets_full": int(sum(int(l.inputs.shape[0]) for l in layers)),
         "wall_s": round(wall, 3),
         "devices": ndev,
         **{k: report.stats[k] for k in
            ("cells", "packetize_s", "simulate_s", "stepped_cycles",
-            "cycles_per_sec", "streamed")},
+            "cycles_per_sec", "streamed", "result_packetize_s",
+            "result_simulate_s", "result_cycles",
+            "result_cycles_per_sec")},
         # per-shape-class engine throughput (one entry per mesh x model,
-        # placements ride one drain-aware batched call)
+        # placement x affinity combos ride one drain-aware batched call)
         "shape_classes": report.stats["shape_classes"],
+        # per-direction totals of the baseline roundrobin/edge cell
+        "request_bt_baseline": base_row["total_bt"],
+        "result_bt_baseline": base_row["result_bt"],
+        "affinity_deltas": affinity,
+        "roundrobin_bt_identical_to_prior": rr_identical,
     }
 
     # Sharded-vs-unsharded speedup: re-drain one placement's shape class
@@ -99,7 +172,9 @@ def run() -> dict:
     # device; a 1-device host records the fallback.
     if ndev > 1:
         import dataclasses
-        probe = dataclasses.replace(grid, placements=(grid.placements[0],))
+        probe = dataclasses.replace(grid, placements=(grid.placements[0],),
+                                    affinity=("roundrobin",),
+                                    result_phase=False)
         sharded = run_sweep(probe, layers_fn)
         unsharded = run_sweep(probe, layers_fn, devices=None)
         assert [r["total_bt"] for r in sharded.rows] == \
@@ -128,10 +203,13 @@ def main(print_csv=True):
                 f" reduction={r['reduction_pct']:.2f}%" \
                 f" adj={r['adjusted_reduction_pct']:.2f}%"
             print(f"darknet_full/{key},0,bt={r['total_bt']}"
-                  f" cycles={r['cycles']} flits={r['flits']}{red}")
+                  f" cycles={r['cycles']} flits={r['flits']}"
+                  f" result_bt={r['result_bt']}"
+                  f" result_cycles={r['result_cycles']}{red}")
         print(f"darknet_full/engine,{b['wall_s'] * 1e6:.0f},"
               f"cycles_per_sec={b['cycles_per_sec']}"
-              f" devices={b['devices']} shard_speedup={b['shard_speedup']}")
+              f" devices={b['devices']} shard_speedup={b['shard_speedup']}"
+              f" rr_identical={b['roundrobin_bt_identical_to_prior']}")
     return out
 
 

@@ -58,22 +58,28 @@ def lenet_layers(glyph_seed: int = 7, trained: bool = True):
 
 
 def run(max_packets=40, tiebreak="pattern", count_headers=True, meshes=None,
-        placements=("edge",)):
+        placements=("edge",), affinity=("roundrobin",), result_phase=False):
+    """The Fig. 12 sweep. ``placements``/``affinity`` widen the grid beyond
+    the paper's axes (single-strategy runs keep the seed-stable key format);
+    ``result_phase`` adds the PE->MC drain columns to every row."""
     if meshes is None:
         meshes = ("2x2_mc1",) if SMOKE else tuple(PAPER_NOCS)
     if SMOKE:
         max_packets = min(max_packets, 4)
     grid = SweepGrid(
-        meshes=meshes, placements=placements, transforms=("O0", "O1", "O2"),
+        meshes=meshes, placements=placements, affinity=affinity,
+        transforms=("O0", "O1", "O2"),
         tiebreaks=(tiebreak,), precisions=("float32", "fixed8"),
         models=("lenet",), max_packets_per_layer=max_packets,
-        count_headers=count_headers, chunk=2048)
+        count_headers=count_headers, result_phase=result_phase, chunk=2048)
     report = run_sweep(grid, lambda _name: lenet_layers(trained=not SMOKE))
     results = {}
     for r in report.rows:
         key = f"{r['mesh']}/{r['precision']}/{r['transform']}"
         if len(placements) > 1:     # single-placement keys stay seed-stable
             key = f"{r['mesh']}/{r['placement']}/{r['precision']}/{r['transform']}"
+        if len(affinity) > 1:
+            key += f"/{r['affinity']}"
         is_base = r["transform"] == grid.baseline
         results[key] = {
             "total_bt": r["total_bt"], "cycles": r["cycles"],
@@ -83,6 +89,9 @@ def run(max_packets=40, tiebreak="pattern", count_headers=True, meshes=None,
                 None if is_base else r["adjusted_reduction_pct"],
             "overhead_bits": r["overhead_bits"],
         }
+        if result_phase:
+            results[key]["result_bt"] = r["result_bt"]
+            results[key]["result_cycles"] = r["result_cycles"]
     return results, report.stats
 
 

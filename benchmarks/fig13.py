@@ -35,26 +35,36 @@ def _layers(name: str):
     return model.layer_traffic(params, x[0])
 
 
-def run(max_packets=40, tiebreak="pattern"):
+def run(max_packets=40, tiebreak="pattern", affinity=("roundrobin",),
+        result_phase=False):
+    """The Fig. 13 sweep; ``affinity``/``result_phase`` surface the PR-5
+    axes (defaults keep the paper grid and the seed-stable key format)."""
     grid = SweepGrid(
         meshes=("2x2_mc1",) if SMOKE else ("4x4_mc2",),
+        affinity=affinity,
         transforms=("O0", "O1", "O2"), tiebreaks=(tiebreak,),
         precisions=("float32", "fixed8"),
         models=("lenet",) if SMOKE else ("lenet", "darknet"),
         max_packets_per_layer=min(max_packets, 4) if SMOKE else max_packets,
-        chunk=2048)
+        result_phase=result_phase, chunk=2048)
     report = run_sweep(grid, _layers)
     results = {}
     for r in report.rows:
         base = report.row(model=r["model"], precision=r["precision"],
-                          tiebreak=r["tiebreak"],
+                          tiebreak=r["tiebreak"], affinity=r["affinity"],
                           transform=grid.baseline)["total_bt"]
-        results[f"{r['model']}/{r['precision']}/{r['transform']}"] = {
+        key = f"{r['model']}/{r['precision']}/{r['transform']}"
+        if len(affinity) > 1:
+            key += f"/{r['affinity']}"
+        results[key] = {
             "total_bt": r["total_bt"],
             "normalized": r["total_bt"] / base,
             "reduction_pct": r["reduction_pct"],
             "adjusted_reduction_pct": r["adjusted_reduction_pct"],
         }
+        if result_phase:
+            results[key]["result_bt"] = r["result_bt"]
+            results[key]["result_cycles"] = r["result_cycles"]
     return results, report.stats
 
 

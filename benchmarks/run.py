@@ -5,9 +5,11 @@ framework-level analyses. Prints ``name,us_per_call,derived`` CSV lines.
     PYTHONPATH=src python -m benchmarks.run table1 fig12
 
 After each invocation the NoC-relevant trajectory numbers (per-suite
-wall-clock, sweep-engine cycles/sec and packetizer time, and the pinned
-speedup-vs-seed-driver comparison) are written to ``BENCH_noc.json`` at the
-repo root so future PRs can track sweep-engine performance.
+wall-clock, sweep-engine cycles/sec and packetizer time, result-phase and
+affinity deltas, and the pinned speedup-vs-seed-driver comparison) are
+written to ``BENCH_noc.json`` at the repo root so future PRs can track
+sweep-engine performance. Every suite key and field is documented in
+``docs/bench_schema.md``.
 """
 from __future__ import annotations
 

@@ -3,6 +3,8 @@ under O0/O1/O2 and report per-configuration link BT - the paper's Fig. 12
 pipeline end to end (train -> quantize -> packetize -> order -> simulate),
 driven by the declarative sweep engine: all three orderings are packetized
 once and drained in a single batched, compile-cached simulation.
+``--results`` also drains the PE->MC result phase; ``--affinity nearest``
+serves each PE from its hop-minimizing MC instead of round-robin.
 
     PYTHONPATH=src python examples/noc_inference.py [--noc 8x8_mc4] [--f32]
 """
@@ -12,8 +14,8 @@ import jax
 
 from repro.data import glyph_batch
 from repro.models import LeNet, init_params
-from repro.noc import (PAPER_NOCS, PLACEMENTS, SweepGrid, mc_placement,
-                       mesh_by_name, run_sweep)
+from repro.noc import (AFFINITIES, PAPER_NOCS, PLACEMENTS, SweepGrid,
+                       mc_placement, mesh_by_name, run_sweep)
 from repro.noc.power import link_power_mw, ordering_overhead_mw
 from repro.optim import AdamW, cosine
 from repro.train import make_train_step, init_state
@@ -27,6 +29,12 @@ ap.add_argument("--placement", default="edge", choices=sorted(PLACEMENTS),
 ap.add_argument("--full", action="store_true",
                 help="packetize the full inference (streamed chunked path) "
                      "instead of subsampling to --max-packets")
+ap.add_argument("--affinity", default="roundrobin", choices=sorted(AFFINITIES),
+                help="packet->MC assignment (nearest = hop-minimizing MC "
+                     "per PE instead of the round-robin deal)")
+ap.add_argument("--results", action="store_true",
+                help="also drain the PE->MC result phase and report its "
+                     "per-direction BT and drain cycles")
 ap.add_argument("--train-steps", type=int, default=60)
 ap.add_argument("--max-packets", type=int, default=30)
 args = ap.parse_args()
@@ -51,19 +59,24 @@ print(f"\nNoC {args.noc}: {cfg.rows}x{cfg.cols}, {cfg.num_mcs} MCs "
       f"{cfg.num_inter_router_links} inter-router links")
 grid = SweepGrid(
     meshes=(args.noc,), placements=(args.placement,),
+    affinity=(args.affinity,),
     transforms=("O0", "O1", "O2"), tiebreaks=("pattern",),
     precisions=("float32" if args.f32 else "fixed8",), models=("lenet",),
     max_packets_per_layer=None if args.full else args.max_packets,
-    chunk=2048)
+    result_phase=args.results, chunk=2048)
 report = run_sweep(grid, lambda _name: layers)
+print(f"packet->MC affinity: {args.affinity} "
+      f"(mean {report.rows[0]['mean_hops']:.2f} hops per packet)")
 for row in report.rows:
     red = "" if row["transform"] == grid.baseline else \
         f"  ({row['reduction_pct']:+.1f}% vs O0," \
         f" {row['adjusted_reduction_pct']:+.1f}% after recovery index)"
     tpc = row["total_bt"] / row["cycles"]
     pw = link_power_mw(tpc)
+    res = "" if row["result_bt"] is None else \
+        f" + result phase {row['result_bt']} BT / {row['result_cycles']} cyc"
     print(f"{row['transform']}: {row['total_bt']:10d} BT over "
-          f"{row['cycles']} cycles -> link power {pw:7.2f} mW{red}")
+          f"{row['cycles']} cycles -> link power {pw:7.2f} mW{red}{res}")
 print(f"sweep engine: {report.stats['cycles_per_sec']:.0f} simulated "
       f"cycles/s across {report.stats['cells']} cells")
 print(f"ordering-unit overhead: O1 {ordering_overhead_mw(cfg.num_mcs):.2f} mW, "

@@ -1,22 +1,26 @@
-"""NoC substrate: topology, cycle-level simulator, DNN traffic, sweep
-engine, power model."""
-from .topology import (NocConfig, PAPER_NOCS, PLACEMENTS, xy_route,
-                       neighbor_table, make_noc, mc_placement, mesh_by_name)
+"""NoC substrate: topology, cycle-level simulator, DNN traffic (request
+and result phases), sweep engine, power model."""
+from .topology import (NocConfig, PAPER_NOCS, PLACEMENTS, AFFINITIES,
+                       xy_route, neighbor_table, make_noc, mc_placement,
+                       mesh_by_name, affinity_mc_table, packet_mean_hops)
 from .sim import (Traffic, Wire, SimResult, simulate, simulate_batch,
                   make_state, fuse_traffic, pack_sideband)
 from .traffic import (LayerTraffic, build_traffic, build_traffic_batch,
-                      build_traffic_streamed, conv_layer_traffic,
+                      build_traffic_streamed, build_result_traffic,
+                      layer_results, conv_layer_traffic,
                       linear_layer_traffic)
 from .sweep import SweepGrid, SweepReport, run_sweep, recovery_overhead_bits
 from . import power
 
 __all__ = [
-    "NocConfig", "PAPER_NOCS", "PLACEMENTS", "xy_route", "neighbor_table",
-    "make_noc", "mc_placement", "mesh_by_name",
+    "NocConfig", "PAPER_NOCS", "PLACEMENTS", "AFFINITIES", "xy_route",
+    "neighbor_table", "make_noc", "mc_placement", "mesh_by_name",
+    "affinity_mc_table", "packet_mean_hops",
     "Traffic", "Wire", "SimResult", "simulate", "simulate_batch",
     "make_state", "fuse_traffic", "pack_sideband",
     "LayerTraffic", "build_traffic", "build_traffic_batch",
-    "build_traffic_streamed", "conv_layer_traffic", "linear_layer_traffic",
+    "build_traffic_streamed", "build_result_traffic", "layer_results",
+    "conv_layer_traffic", "linear_layer_traffic",
     "SweepGrid", "SweepReport", "run_sweep", "recovery_overhead_bits",
     "power",
 ]

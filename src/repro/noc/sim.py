@@ -15,8 +15,12 @@ Simplifications (documented in DESIGN.md):
     different VCs/ports - the phenomenon the paper stresses - is preserved;
     only the VC-reallocation stage of an IQ router is elided.
   * single-cycle routers (route + arbitrate + traverse in one cycle).
-  * result traffic (PE->MC) is not modeled; the paper's figures measure the
-    distribution traffic (inputs/weights), which dominates volume.
+  * result traffic (PE->MC) is modeled as an *independent second drain*
+    (the paper's figures measure only the MC->PE distribution traffic):
+    ``repro.noc.traffic.build_result_traffic`` packetizes per-PE result
+    streams and this same simulator drains them - the injection-node
+    argument (``mc_nodes``) names the flit *sources*, which for the result
+    phase are the PE routers. See DESIGN.md "Result phase".
 
 Fused-state hot loop (see DESIGN.md "Fused router step"): the per-flit
 sideband (dest | META | VC) is packed into one uint32 word and stacked with
@@ -76,14 +80,19 @@ MAX_VCS = 1 << (16 - SIDE_VC_SHIFT)
 
 
 class Traffic(NamedTuple):
-    """Per-MC injection streams, padded to a common length T.
+    """Per-source injection streams, padded to a common length T.
+
+    M is the stream count: one stream per MC for the request phase
+    (``build_traffic*``), one per PE for the result phase
+    (``build_result_traffic``); the ``mc_nodes`` argument of the simulate
+    entry points names each stream's injection router.
 
     words:  (M, T, L) uint32 - flit payloads as they appear on the wire
     dest:   (M, T) int32     - destination router id
     meta:   (M, T) int32     - META_* bitfield
     vc:     (M, T) int32     - static VC assignment (round-robin per packet)
     pkt:    (M, T) int32     - packet id (checked by ``check_conservation``)
-    length: (M,) int32       - real stream length per MC
+    length: (M,) int32       - real stream length per source
     num_packets: int         - packet-id count, carried as metadata by the
         packetizer so the conservation path never has to pull the full
         ``pkt`` tensor to the host just to size its ledger. ``-1`` means
@@ -619,15 +628,30 @@ def _result(cfg: NocConfig, state_leaves, total: int) -> SimResult:
 
 def simulate(cfg: NocConfig, traffic: Traffic, *, count_headers: bool = True,
              max_cycles: int = 2_000_000, chunk: int = 4096,
-             check_conservation: bool = False) -> SimResult:
+             check_conservation: bool = False, mc_nodes=None) -> SimResult:
     """Run the NoC until all traffic drains; returns per-link BT counts.
 
     check_conservation: debug path - track tail ejections per packet id and
         raise if any injected packet id does not eject exactly once. Only
         then does the state carry the ledger (and the FIFOs a pkt lane).
+    mc_nodes: optional per-stream injection-node ids (one per traffic
+        stream). ``None`` injects at ``cfg.mc_nodes`` - the request phase.
+        The result phase passes ``cfg.pe_nodes``: streams then inject at
+        the PEs and eject at the MCs their ``dest`` fields name.
     """
     m = int(traffic.length.shape[0])
-    mc_nodes = _mc_array(cfg, traffic, m, batched=False)
+    if mc_nodes is None:
+        mc_nodes = _mc_array(cfg, traffic, m, batched=False)
+    else:
+        mc_nodes = np.asarray(mc_nodes, np.int32)
+        if mc_nodes.shape != (m,):
+            raise ValueError(f"mc_nodes must have shape ({m},), "
+                             f"got {mc_nodes.shape}")
+        if mc_nodes.size and (mc_nodes.min() < 0
+                              or mc_nodes.max() >= cfg.num_routers):
+            raise ValueError("mc_nodes out of range for a "
+                             f"{cfg.num_routers}-router config")
+        mc_nodes = jnp.asarray(mc_nodes)
     _validate_fields(cfg, traffic)
     npkt = _npkt(traffic) if check_conservation else 0
     track = npkt > 0
@@ -685,7 +709,11 @@ def simulate_batch(cfg: NocConfig, traffic: Traffic, *,
         a single device falls back to the plain vmapped runner.
     mc_nodes: optional (B, M) per-variant injection-node ids - this is how
         the sweep engine batches *different MC placements* of one mesh size
-        into a single drain. ``None`` broadcasts ``cfg.mc_nodes``.
+        into a single drain, and how the result phase injects its per-PE
+        streams (pass each lane's ``cfg.pe_nodes``, zero-padded; the
+        ``dest`` fields then name the MCs). ``None`` broadcasts
+        ``cfg.mc_nodes`` and requires streams beyond ``cfg.num_mcs`` to be
+        empty padding.
     retire: disable lane retirement/compaction (debug / parity testing);
         every lane then steps until the slowest variant drains.
     """
@@ -693,8 +721,8 @@ def simulate_batch(cfg: NocConfig, traffic: Traffic, *,
         raise ValueError("simulate_batch wants a leading variants axis; "
                          "use simulate() for a single Traffic")
     b, m = traffic.length.shape
-    default_nodes = np.asarray(_mc_array(cfg, traffic, m, batched=True))
     if mc_nodes is None:
+        default_nodes = np.asarray(_mc_array(cfg, traffic, m, batched=True))
         mc = np.broadcast_to(default_nodes, (b, m)).copy()
     else:
         mc = np.ascontiguousarray(np.asarray(mc_nodes, np.int32))

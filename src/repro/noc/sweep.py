@@ -34,10 +34,12 @@ import numpy as np
 
 from repro.core.wire import WireTransform, by_name
 from repro.quant import quantize_fixed8
-from .topology import (NocConfig, PLACEMENTS, mc_placement,
-                       mesh_by_name, xy_link_loads)
-from .traffic import (LayerTraffic, assemble_traffic, build_traffic_streamed,
-                      ordered_payloads, pad_traffic_length, payload_shapes,
+from .topology import (AFFINITIES, NocConfig, PLACEMENTS, affinity_mc_table,
+                       mc_placement, mesh_by_name, packet_mean_hops,
+                       xy_link_loads)
+from .traffic import (LayerTraffic, assemble_traffic, build_result_traffic,
+                      build_traffic_streamed, ordered_payloads,
+                      pad_traffic_length, payload_shapes, result_values,
                       stream_lengths)
 from .sim import SimResult, Traffic, simulate_batch
 
@@ -55,8 +57,9 @@ _QUANTIZERS = {
 
 @dataclasses.dataclass(frozen=True)
 class SweepGrid:
-    """One declarative sweep: mesh sizes x MC placements x transforms x
-    tiebreaks x precisions x models.
+    """One declarative sweep: mesh sizes x MC placements x packet->MC
+    affinities x transforms x tiebreaks x precisions x models, with an
+    optional PE->MC result phase.
 
     meshes: PAPER_NOCS names, ``RxC_mcN`` specs, or NocConfig instances.
     placements: MC placement strategies (``topology.PLACEMENTS``). The
@@ -65,6 +68,14 @@ class SweepGrid:
         other strategies re-place the same MC count via ``mc_placement``.
         Placements of one mesh size stay in one shape class and share the
         compiled simulator.
+    affinity: packet->MC assignment strategies (``topology.AFFINITIES``) -
+        the fourth ordering knob. ``"roundrobin"`` (the default) deals
+        packet g to MC ``g % M`` exactly as the seed packetizer did, and
+        its rows are bit-identical to a grid without the axis;
+        ``"nearest"`` serves each PE from its hop-minimizing MC
+        (``topology.affinity_mc_table``). Affinity lanes ride the same
+        batched drain as placements (same flit volume, different per-MC
+        stream split).
     transforms: WireTransform names (``repro.core.wire.by_name``); the
         ``baseline`` transform anchors the per-cell reduction percentages.
     max_packets_per_layer: deterministic-stride neuron subsampling budget;
@@ -72,10 +83,18 @@ class SweepGrid:
         chunked path (``build_traffic_streamed``) instead of the one-shot
         payload cache.
     stream_chunk_packets: packet-chunk size of the streamed path.
+    result_phase: also model the PE->MC result traffic: each cell's result
+        packets (``traffic.build_result_traffic``) drain in a second,
+        independent batched simulation and the row gains
+        ``result_bt``/``result_cycles``/``result_flits`` (``None`` when the
+        phase is off - the request-phase columns are untouched either way).
+    result_window: result values per result packet
+        (``traffic.DEFAULT_RESULT_WINDOW`` when ``None``).
     """
 
     meshes: Sequence[Mesh] = ("4x4_mc2",)
     placements: Sequence[str] = ("edge",)
+    affinity: Sequence[str] = ("roundrobin",)
     transforms: Sequence[str] = ("O0", "O1", "O2")
     tiebreaks: Sequence[str] = ("pattern",)
     precisions: Sequence[str] = ("float32", "fixed8")
@@ -86,6 +105,8 @@ class SweepGrid:
     chunk: int = 2048
     max_cycles: int = 2_000_000
     baseline: str = "O0"
+    result_phase: bool = False
+    result_window: Optional[int] = None
 
     def __post_init__(self):
         unknown = set(self.precisions) - set(_QUANTIZERS)
@@ -98,6 +119,12 @@ class SweepGrid:
                              f"supported: {sorted(PLACEMENTS)}")
         if not self.placements:
             raise ValueError("need at least one MC placement")
+        unknown = set(self.affinity) - set(AFFINITIES)
+        if unknown:
+            raise ValueError(f"unknown affinity {sorted(unknown)}; "
+                             f"supported: {sorted(AFFINITIES)}")
+        if not self.affinity:
+            raise ValueError("need at least one packet->MC affinity")
         if self.baseline not in self.transforms:
             raise ValueError(
                 f"baseline {self.baseline!r} not in transforms {self.transforms}")
@@ -205,9 +232,14 @@ def _concat_lanes(parts: Sequence[Traffic]) -> Traffic:
     if len(parts) == 1:
         return parts[0]
     cat = lambda f: jnp.concatenate([getattr(p, f) for p in parts])  # noqa: E731
+    # The conservation ledger is sized from num_packets and must cover every
+    # lane: result-phase parts legitimately differ in packet count (the
+    # (PE, MC) grouping depends on placement/affinity), so take the max -
+    # unknown (-1) in any part poisons the metadata.
+    counts = [int(p.num_packets) for p in parts]
     return Traffic(words=cat("words"), dest=cat("dest"), meta=cat("meta"),
                    vc=cat("vc"), pkt=cat("pkt"), length=cat("length"),
-                   num_packets=parts[0].num_packets)
+                   num_packets=-1 if min(counts) < 0 else max(counts))
 
 
 def _resolve_devices(devices):
@@ -226,11 +258,15 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
               check_conservation: bool = False,
               devices="auto") -> SweepReport:
     """Execute every cell of ``grid``; one packetization per (mesh,
-    placement, model) cell and ONE batched, drain-aware simulation per
-    (mesh, model): all placements ride the same call as extra variant
-    lanes (per-lane ``mc_nodes``), ordered by :func:`drain_estimate` so
-    device shards stay balanced, and lanes retire as they drain instead of
-    idle-stepping until the most congested placement finishes.
+    placement, affinity, model) cell and ONE batched, drain-aware request
+    simulation per (mesh, model): all placement x affinity combinations
+    ride the same call as extra variant lanes (per-lane ``mc_nodes``),
+    ordered by :func:`drain_estimate` so device shards stay balanced, and
+    lanes retire as they drain instead of idle-stepping until the most
+    congested placement finishes. With ``grid.result_phase`` the PE->MC
+    result traffic of every cell drains in one further batched simulation
+    per (mesh, model) - an independent second phase whose per-row stats
+    merge into the request row (see DESIGN.md "Result phase").
 
     layers_for_model: model name -> LayerTraffic sequence (the sweep engine
         stays decoupled from how weights are trained or loaded).
@@ -247,8 +283,12 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
     streamed = grid.max_packets_per_layer is None
     rows: List[dict] = []
     classes = []
-    pack_s = sim_s = 0.0
-    stepped_cycles = 0          # cycle-steps executed across all variants
+    pack_s = sim_s = res_pack_s = res_s = 0.0
+    stepped_cycles = 0          # request cycle-steps across all variants
+    result_cycles = 0           # result-phase cycle-steps
+    # Result values depend only on (model, variants) - computed once and
+    # reused across every mesh/placement/affinity cell.
+    rvalue_cache: Dict[str, list] = {}
     layer_cache: Dict[str, Sequence[LayerTraffic]] = {}
     # Ordered payload words are mesh-independent (the transform sees only
     # packet payloads and the flit width), so every mesh/MC-count cell of a
@@ -298,72 +338,158 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
                                  base_cfg.num_vcs, base_cfg.vc_depth,
                                  base_cfg.lanes)]
             shapes = shape_cache[pkey]
+            npackets = sum(n for n, _ in shapes)
             mc_pad = max(c.num_mcs for c in group)
-            t_pad = max(int(stream_lengths(shapes, c.num_mcs).max())
-                        for c in group)
 
-            # Every MC placement of this (mesh, model) drains in ONE
-            # batched call: placements share the traffic shapes (padded
-            # above) and differ only in their per-lane mc_nodes, so the
-            # drain scheduler can retire fast placements while congested
-            # ones keep stepping.
-            placed = [(pl, _place(base_cfg, pl)) for pl in grid.placements]
+            # Every (MC placement x packet->MC affinity) combination of
+            # this (mesh, model) drains in ONE batched call: combos share
+            # the traffic shapes (padded below) and differ only in their
+            # per-lane mc_nodes / per-MC stream split, so the drain
+            # scheduler can retire fast lanes while congested ones keep
+            # stepping.
+            placed = [(pl, aff, _place(base_cfg, pl))
+                      for pl in grid.placements for aff in grid.affinity]
+            tables = [affinity_mc_table(cfg) if aff == "nearest" else None
+                      for _, aff, cfg in placed]
+            lens = [stream_lengths(shapes, cfg.num_mcs, tbl)
+                    for (_, _, cfg), tbl in zip(placed, tables)]
+            # Affinity skews the per-MC split, so the common stream length
+            # covers every placement x affinity combo of every member of
+            # the size group - same-size meshes keep sharing one compiled
+            # drain under the new axis. The base config's combos are
+            # already in `lens`; only other group members recompute.
+            t_pad = max(
+                [int(ln.max()) for ln in lens]
+                + [int(stream_lengths(
+                    shapes, gcfg.num_mcs,
+                    affinity_mc_table(gcfg) if aff == "nearest" else None
+                   ).max())
+                   for c in group if c is not base_cfg
+                   for pl in grid.placements
+                   for aff in grid.affinity
+                   for gcfg in (_place(c, pl),)])
             parts = []
-            for _, cfg in placed:
+            for (_, _, cfg), tbl in zip(placed, tables):
                 if streamed:
                     traffic = build_traffic_streamed(
                         layers, cfg, variants,
                         chunk_packets=grid.stream_chunk_packets,
-                        num_streams=mc_pad, shapes=shapes)
+                        num_streams=mc_pad, shapes=shapes, mc_table=tbl)
                 else:
                     traffic = assemble_traffic(
                         payload_cache[pkey], cfg, num_streams=mc_pad,
-                        num_variants=nv)
+                        num_variants=nv, mc_table=tbl)
                 parts.append(pad_traffic_length(traffic, t_pad))
             traffic = _concat_lanes(parts)
             del parts
             mc_rows = np.stack(
                 [np.asarray(tuple(cfg.mc_nodes) + (0,) * (mc_pad - cfg.num_mcs),
                             np.int32)
-                 for _, cfg in placed for _ in range(nv)])
+                 for _, _, cfg in placed for _ in range(nv)])
             # Drain-aware lane order: deal estimate-sorted lanes across the
             # device shards so no device ends up with only congested lanes.
-            ests = np.asarray([drain_estimate(cfg, stream_lengths(
-                shapes, cfg.num_mcs)) for _, cfg in placed
-                for _ in range(nv)])
+            ests = np.asarray([drain_estimate(cfg, ln)
+                               for (_, _, cfg), ln in zip(placed, lens)
+                               for _ in range(nv)])
             order = _deal_order(ests, ndev)
             inv = np.empty_like(order)
             inv[order] = np.arange(order.size)
             t1 = time.perf_counter()
             res_perm: List[SimResult] = simulate_batch(
-                placed[0][1], _take_lanes(traffic, order),
+                placed[0][2], _take_lanes(traffic, order),
                 mc_nodes=mc_rows[order],
                 count_headers=grid.count_headers,
                 chunk=grid.chunk, max_cycles=grid.max_cycles,
                 check_conservation=check_conservation, devices=devs)
             results = [res_perm[inv[i]] for i in range(len(order))]
             t2 = time.perf_counter()
+
+            # Result phase: one independent PE->MC drain per (mesh, model)
+            # covering every combo's lanes. Streams inject at the PEs
+            # (per-lane mc_nodes = pe_nodes) and eject at the MCs. Stream
+            # *counts* are padded across the size group; the stream-length
+            # axis is padded only across this cell's combos (other group
+            # members' result lengths aren't known without building their
+            # traffic), so result drains compile once per (mesh, model)
+            # rather than once per size group.
+            rres: Optional[List[SimResult]] = None
+            t2b = t2
+            if grid.result_phase:
+                if model not in rvalue_cache:
+                    rvalue_cache[model] = result_values(
+                        layers, variants,
+                        max_packets_per_layer=grid.max_packets_per_layer)
+                pe_pad = max(c.num_routers - c.num_mcs for c in group)
+                rparts = []
+                for (_, _, cfg), tbl in zip(placed, tables):
+                    rparts.append(build_result_traffic(
+                        layers, cfg, variants,
+                        max_packets_per_layer=grid.max_packets_per_layer,
+                        mc_table=tbl, result_window=grid.result_window,
+                        num_streams=pe_pad, values=rvalue_cache[model]))
+                rt_pad = max(int(p.words.shape[-2]) for p in rparts)
+                # Injection-bound estimate per combo (the longest PE
+                # stream floors the drain), dealt across device shards
+                # like the request lanes so no shard holds only the
+                # congested combos.
+                rests = np.asarray([int(np.asarray(p.length).max())
+                                    if p.length.size else 0
+                                    for p in rparts for _ in range(nv)])
+                rtraffic = _concat_lanes(
+                    [pad_traffic_length(p, rt_pad) for p in rparts])
+                del rparts
+                pe_rows = np.stack(
+                    [np.asarray(tuple(cfg.pe_nodes)
+                                + (0,) * (pe_pad - len(cfg.pe_nodes)),
+                                np.int32)
+                     for _, _, cfg in placed for _ in range(nv)])
+                rorder = _deal_order(rests, ndev)
+                rinv = np.empty_like(rorder)
+                rinv[rorder] = np.arange(rorder.size)
+                t2b = time.perf_counter()
+                rres_perm = simulate_batch(
+                    placed[0][2], _take_lanes(rtraffic, rorder),
+                    mc_nodes=pe_rows[rorder],
+                    count_headers=grid.count_headers,
+                    chunk=grid.chunk, max_cycles=grid.max_cycles,
+                    check_conservation=check_conservation, devices=devs)
+                rres = [rres_perm[rinv[i]] for i in range(len(rorder))]
+            t3 = time.perf_counter()
+
             pack_s += t1 - t0
             sim_s += t2 - t1
+            res_pack_s += t2b - t2
+            res_s += t3 - t2b
             class_cycles = sum(r.cycles for r in results)
             stepped_cycles += class_cycles
-            classes.append({
+            entry = {
                 "mesh": mesh_name, "placements": list(grid.placements),
+                "affinity": list(grid.affinity),
                 "model": model, "variants": len(results),
                 "packetize_s": round(t1 - t0, 4),
                 "simulate_s": round(t2 - t1, 4),
                 "cycles_per_sec": round(class_cycles / (t2 - t1), 1)
                 if t2 > t1 else None,
-            })
+            }
+            if rres is not None:
+                rc = sum(r.cycles for r in rres)
+                result_cycles += rc
+                entry["result_packetize_s"] = round(t2b - t2, 4)
+                entry["result_simulate_s"] = round(t3 - t2b, 4)
+                entry["result_cycles_per_sec"] = (
+                    round(rc / (t3 - t2b), 1) if t3 > t2b else None)
+            classes.append(entry)
 
-            for pi, (placement, cfg) in enumerate(placed):
+            for pi, (placement, aff, cfg) in enumerate(placed):
                 cell = results[pi * nv:(pi + 1) * nv]
+                rcell = rres[pi * nv:(pi + 1) * nv] if rres else [None] * nv
+                mean_hops = packet_mean_hops(cfg, npackets, tables[pi])
                 base_bt = {}
                 for (prec, tb, tr), res in zip(axes, cell):
                     if tr == grid.baseline:
                         base_bt[(prec, tb)] = res.total_bt
-                for (prec, tb, tr), (transform, _), res in zip(axes, variants,
-                                                               cell):
+                for (prec, tb, tr), (transform, _), res, rr in zip(
+                        axes, variants, cell, rcell):
                     overhead = recovery_overhead_bits(
                         layers, transform,
                         max_packets_per_layer=grid.max_packets_per_layer)
@@ -375,7 +501,7 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
                     base = base_bt[(prec, tb)]
                     rows.append({
                         "mesh": mesh_name, "placement": placement,
-                        "model": model, "precision": prec,
+                        "affinity": aff, "model": model, "precision": prec,
                         "transform": tr, "tiebreak": tb,
                         "total_bt": res.total_bt,
                         "adjusted_bt": adjusted_bt,
@@ -383,11 +509,15 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
                         "cycles": res.drain_cycle,
                         "flits": res.injected,
                         "bt_per_flit": res.bt_per_flit,
+                        "mean_hops": mean_hops,
                         "reduction_pct": (1 - res.total_bt / base) * 100,
                         "adjusted_reduction_pct": (1 - adjusted_bt / base) * 100,
+                        "result_bt": rr.total_bt if rr else None,
+                        "result_cycles": rr.drain_cycle if rr else None,
+                        "result_flits": rr.injected if rr else None,
                     })
 
-    wall = pack_s + sim_s
+    wall = pack_s + sim_s + res_pack_s + res_s
     stats = {
         "cells": len(rows),
         "shape_classes": classes,
@@ -398,7 +528,14 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
         "cycles_per_sec": round(stepped_cycles / sim_s, 1) if sim_s else None,
         "streamed": streamed,
         "devices": len(devs) if devs else 1,
+        "result_phase": grid.result_phase,
     }
+    if grid.result_phase:
+        stats["result_packetize_s"] = round(res_pack_s, 4)
+        stats["result_simulate_s"] = round(res_s, 4)
+        stats["result_cycles"] = result_cycles
+        stats["result_cycles_per_sec"] = (
+            round(result_cycles / res_s, 1) if res_s else None)
     report = SweepReport(rows=rows, stats=stats)
     if out_path:
         os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
@@ -411,7 +548,7 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
 def _grid_json(grid: SweepGrid) -> dict:
     out = dataclasses.asdict(grid)
     out["meshes"] = [_resolve_mesh(m)[0] for m in grid.meshes]
-    for key in ("placements", "transforms", "tiebreaks", "precisions",
-                "models"):
+    for key in ("placements", "affinity", "transforms", "tiebreaks",
+                "precisions", "models"):
         out[key] = list(out[key])
     return out

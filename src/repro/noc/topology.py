@@ -13,15 +13,16 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["NocConfig", "PORT_N", "PORT_E", "PORT_S", "PORT_W", "PORT_LOCAL",
            "NUM_PORTS", "OPPOSITE", "xy_route", "neighbor_table", "PAPER_NOCS",
-           "PLACEMENTS", "mc_placement", "make_noc", "mesh_by_name",
-           "mean_hop_counts", "xy_link_loads"]
+           "PLACEMENTS", "AFFINITIES", "mc_placement", "make_noc",
+           "mesh_by_name", "mean_hop_counts", "xy_link_loads",
+           "affinity_mc_table", "packet_mean_hops"]
 
 PORT_N, PORT_E, PORT_S, PORT_W, PORT_LOCAL = 0, 1, 2, 3, 4
 NUM_PORTS = 5
@@ -205,6 +206,70 @@ def mean_hop_counts(cfg: NocConfig) -> np.ndarray:
         r, c = divmod(mc, cfg.cols)
         out[i] = (np.abs(pr - r) + np.abs(pc - c)).mean() if pes.size else 0.0
     return out
+
+
+# Packet->MC affinity strategies for the sweep engine's fourth ordering
+# knob: "roundrobin" is the paper's dealing (packet g rides MC g % M),
+# "nearest" assigns each PE's packets to the hop-minimizing MC.
+AFFINITIES = ("roundrobin", "nearest")
+
+
+def affinity_mc_table(cfg: NocConfig) -> np.ndarray:
+    """Per-PE serving-MC choice minimizing the X-Y hop count: ``table[i]``
+    is the MC *stream index* (position in ``cfg.mc_nodes``) that serves
+    every packet destined for ``cfg.pe_nodes[i]``.
+
+    Each PE picks the MC with the fewest Manhattan hops; ties break toward
+    the MC with the fewest PEs assigned so far (greedy over PEs in node
+    order), then toward the lower stream index - fully deterministic. The
+    result is the period-``num_pes`` packet->MC table the packetizer
+    consumes (packet g is destined for PE ``g % num_pes``, so its serving
+    MC is ``table[g % num_pes]``); :func:`xy_link_loads` scores the
+    resulting per-MC stream lengths statically for the drain scheduler.
+    """
+    pes = np.asarray(cfg.pe_nodes, np.int64)
+    mcs = np.asarray(cfg.mc_nodes, np.int64)
+    if not mcs.size:
+        raise ValueError("config has no memory controllers")
+    pr, pc = pes // cfg.cols, pes % cfg.cols
+    mr, mc = mcs // cfg.cols, mcs % cfg.cols
+    hops = (np.abs(pr[:, None] - mr[None, :])
+            + np.abs(pc[:, None] - mc[None, :]))        # (num_pes, M)
+    table = np.zeros(len(pes), np.int64)
+    load = np.zeros(len(mcs), np.int64)
+    for i in range(len(pes)):
+        best = np.flatnonzero(hops[i] == hops[i].min())
+        table[i] = best[np.argmin(load[best])]          # argmin: first tie
+        load[table[i]] += 1
+    return table
+
+
+def packet_mean_hops(cfg: NocConfig, num_packets: int,
+                     mc_table: Optional[np.ndarray] = None) -> float:
+    """Exact mean MC<->PE Manhattan hop count over the first ``num_packets``
+    packets of the round-robin PE deal.
+
+    Packet g computes at PE ``g % num_pes``; its serving MC is
+    ``mc_table[g % len(mc_table)]`` (any periodic table - the affinity
+    tables from :func:`affinity_mc_table` have period ``num_pes``) or
+    ``g % num_mcs`` (round-robin, the default). Both the request (MC->PE)
+    and result (PE->MC) phases traverse this distance, so the affinity
+    knob's hop-count objective is scored by exactly this number.
+    """
+    if num_packets <= 0:
+        return 0.0
+    pes = np.asarray(cfg.pe_nodes, np.int64)
+    mcs = np.asarray(cfg.mc_nodes, np.int64)
+    g = np.arange(num_packets, dtype=np.int64)
+    pe = pes[g % len(pes)]
+    if mc_table is not None:
+        tbl = np.asarray(mc_table, np.int64)
+        mc = mcs[tbl[g % len(tbl)]]
+    else:
+        mc = mcs[g % len(mcs)]
+    hops = (np.abs(pe // cfg.cols - mc // cfg.cols)
+            + np.abs(pe % cfg.cols - mc % cfg.cols))
+    return float(hops.mean())
 
 
 def xy_link_loads(cfg: NocConfig, lengths) -> np.ndarray:

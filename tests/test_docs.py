@@ -1,0 +1,79 @@
+"""Docs must not rot: every relative markdown link in the repo's top-level
+docs (README/DESIGN/ROADMAP/PAPER/CHANGES and docs/) must resolve to a
+file or directory that exists, and the README quickstart must reference
+real entry points. External (http/mailto) links are not fetched - CI has
+no network guarantee - but their syntax is validated."""
+import os
+import re
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOCS = ["README.md", "DESIGN.md", "ROADMAP.md", "PAPER.md", "CHANGES.md"]
+DOCS += [os.path.join("docs", f) for f in
+         (os.listdir(os.path.join(REPO, "docs"))
+          if os.path.isdir(os.path.join(REPO, "docs")) else [])
+         if f.endswith(".md")]
+
+# [text](target) - excluding images' leading ! is irrelevant for existence
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_EXTERNAL = re.compile(r"^[a-z][a-z0-9+.-]*:")  # http:, https:, mailto:, ...
+
+
+def _links(md_path):
+    with open(os.path.join(REPO, md_path)) as f:
+        text = f.read()
+    # drop fenced code blocks: shell snippets legitimately contain ")" etc.
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    return _LINK.findall(text)
+
+
+@pytest.mark.parametrize("doc", [d for d in DOCS
+                                 if os.path.exists(os.path.join(REPO, d))])
+def test_relative_links_resolve(doc):
+    base = os.path.dirname(os.path.join(REPO, doc))
+    missing = []
+    for target in _links(doc):
+        if _EXTERNAL.match(target) or target.startswith("#"):
+            continue
+        path = os.path.normpath(os.path.join(base, target.split("#")[0]))
+        if not os.path.exists(path):
+            missing.append(target)
+    assert not missing, f"{doc} links to missing files: {missing}"
+
+
+def test_front_door_docs_exist():
+    for doc in ("README.md", "DESIGN.md", "ROADMAP.md",
+                os.path.join("docs", "bench_schema.md")):
+        assert os.path.exists(os.path.join(REPO, doc)), doc
+
+
+def test_readme_references_real_entry_points():
+    """The quickstart commands name files that must exist, and the docs the
+    README points at must be linked (so the link-resolution test covers
+    them)."""
+    with open(os.path.join(REPO, "README.md")) as f:
+        readme = f.read()
+    for ref in ("examples/noc_inference.py", "benchmarks.run",
+                "docs/bench_schema.md", "DESIGN.md", "ROADMAP.md",
+                "BENCH_noc.json", "python -m pytest"):
+        assert ref in readme, f"README no longer mentions {ref}"
+    assert os.path.exists(os.path.join(REPO, "examples", "noc_inference.py"))
+    assert os.path.exists(os.path.join(REPO, "benchmarks", "run.py"))
+
+
+def test_bench_schema_covers_recorded_suites():
+    """Every suite key currently recorded in BENCH_noc.json must appear in
+    docs/bench_schema.md - the schema doc cannot silently lag the file."""
+    import json
+    bench_path = os.path.join(REPO, "BENCH_noc.json")
+    if not os.path.exists(bench_path):
+        pytest.skip("no BENCH_noc.json recorded yet")
+    with open(bench_path) as f:
+        bench = json.load(f)
+    with open(os.path.join(REPO, "docs", "bench_schema.md")) as f:
+        schema = f.read()
+    missing = [k for k in bench.get("suites", {}) if k not in schema]
+    missing += [k for k in bench if k != "suites" and k not in schema]
+    assert not missing, f"bench_schema.md does not document: {missing}"

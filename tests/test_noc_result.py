@@ -1,0 +1,194 @@
+"""Result-phase (PE->MC) and packet->MC-affinity regression suite.
+
+Pins the bidirectional-sweep contract added in PR 5: result traffic
+conserves every packet (positive and negative), the affinity knob is
+bit-identical to round-robin when disabled, `nearest` strictly lowers the
+static mean hop count while conserving flit volume, and `run_sweep`
+surfaces both axes as row columns.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.wire import by_name
+from repro.noc import (LayerTraffic, NocConfig, SweepGrid, affinity_mc_table,
+                       build_result_traffic, build_traffic_batch,
+                       layer_results, make_noc, packet_mean_hops, run_sweep,
+                       simulate, simulate_batch)
+from repro.quant import quantize_fixed8
+
+CHUNK = 256
+
+
+@pytest.fixture(scope="module")
+def layers():
+    """Deterministic two-layer workload (uneven packet counts and operand
+    widths exercise ragged result windows)."""
+    key = jax.random.PRNGKey(2)
+    return [
+        LayerTraffic(jax.random.normal(key, (37, 20)),
+                     jax.random.normal(jax.random.fold_in(key, 1),
+                                       (37, 20)) * 0.3),
+        LayerTraffic(jax.random.normal(jax.random.fold_in(key, 2), (11, 9)),
+                     jax.random.normal(jax.random.fold_in(key, 3), (11, 9))),
+    ]
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return NocConfig(rows=4, cols=4, mc_nodes=(0, 15), num_vcs=3, lanes=8)
+
+
+VARIANTS = [(by_name(o), q) for o in ("O0", "O1", "O2")
+            for q in (None, lambda t: quantize_fixed8(t).values)]
+
+
+def test_result_conservation_positive(layers, cfg):
+    """Every result packet injected at a PE ejects exactly once at its MC,
+    under every ordering/precision variant (batched and single drains)."""
+    rt = build_result_traffic(layers, cfg, VARIANTS, result_window=6)
+    assert rt.num_packets > 0
+    pe_rows = np.broadcast_to(np.asarray(cfg.pe_nodes, np.int32),
+                              (len(VARIANTS), len(cfg.pe_nodes))).copy()
+    batch = simulate_batch(cfg, rt, chunk=CHUNK, check_conservation=True,
+                           mc_nodes=pe_rows)
+    single = simulate(cfg, rt.variant(0), chunk=CHUNK,
+                      check_conservation=True,
+                      mc_nodes=np.asarray(cfg.pe_nodes))
+    assert single.total_bt == batch[0].total_bt
+    assert single.drain_cycle == batch[0].drain_cycle
+    for r in batch:
+        assert r.ejected == r.injected > 0
+
+
+def test_result_conservation_negative(layers, cfg):
+    """Corrupted result packet ids must trip the ledger: collapsing them to
+    zero makes id 0 look multiply injected."""
+    rt = build_result_traffic(layers, cfg, [(by_name("O0"), None)],
+                              result_window=6).variant(0)
+    bad = rt._replace(pkt=jnp.zeros_like(rt.pkt))
+    with pytest.raises(RuntimeError, match="conservation"):
+        simulate(cfg, bad, chunk=CHUNK, check_conservation=True,
+                 mc_nodes=np.asarray(cfg.pe_nodes))
+
+
+def test_result_value_volume(layers, cfg):
+    """The result phase carries exactly one value per request packet: total
+    payload capacity across result packets covers every neuron, and header
+    word 2 of each packet states its payload flit count."""
+    rt = build_result_traffic(layers, cfg, [(by_name("O0"), None)],
+                              result_window=6)
+    n_neurons = sum(int(l.inputs.shape[0]) for l in layers)
+    meta = np.asarray(rt.meta[0])
+    length = np.asarray(rt.length[0])
+    valid = np.arange(meta.shape[1])[None, :] < length[:, None]
+    headers = valid & (meta == 0)
+    payloads = valid & ((meta & 1) > 0)
+    assert headers.sum() == rt.num_packets
+    # every payload flit carries <= lanes values, at least one is real
+    assert payloads.sum() * cfg.lanes >= n_neurons
+    assert payloads.sum() <= rt.num_packets * (6 // cfg.lanes + 1)
+
+
+def test_result_dest_follows_affinity(layers, cfg):
+    """Under `nearest` affinity every result packet ejects at the MC its
+    source PE is affined to - request and result phases traverse the same
+    MC<->PE pairs in opposite directions."""
+    tbl = affinity_mc_table(cfg)
+    rt = build_result_traffic(layers, cfg, [(by_name("O0"), None)],
+                              mc_table=tbl)
+    dest = np.asarray(rt.dest[0])
+    length = np.asarray(rt.length[0])
+    mcs = np.asarray(cfg.mc_nodes)
+    for s in range(len(cfg.pe_nodes)):
+        if length[s]:
+            want = mcs[tbl[s]]
+            assert np.all(dest[s, :length[s]] == want)
+
+
+def test_affinity_disabled_is_bit_identical(layers, cfg):
+    """The affinity knob off (`roundrobin`) must be a no-op: Traffic equals
+    the table-free build field by field."""
+    m = cfg.num_mcs
+    rr = build_traffic_batch(layers, cfg, VARIANTS[:2])
+    via_table = build_traffic_batch(layers, cfg, VARIANTS[:2],
+                                    mc_table=np.arange(m))
+    for name in ("words", "dest", "meta", "vc", "pkt", "length"):
+        assert np.array_equal(np.asarray(getattr(rr, name)),
+                              np.asarray(getattr(via_table, name))), name
+
+
+def test_affinity_lowers_hops_conserves_volume(layers):
+    """`nearest` strictly lowers the static mean hop count on an 8x8/MC4
+    mesh and redistributes - never creates or drops - flits."""
+    cfg = make_noc(8, 8, 4, lanes=8)
+    tbl = affinity_mc_table(cfg)
+    n = sum(int(l.inputs.shape[0]) for l in layers)
+    assert packet_mean_hops(cfg, n, tbl) < packet_mean_hops(cfg, n)
+    rr = build_traffic_batch(layers, cfg, VARIANTS[:1])
+    aff = build_traffic_batch(layers, cfg, VARIANTS[:1], mc_table=tbl)
+    assert int(np.asarray(rr.length).sum()) == int(np.asarray(aff.length).sum())
+    res = simulate_batch(cfg, aff, chunk=CHUNK, check_conservation=True)
+    assert res[0].ejected == res[0].injected > 0
+
+
+def test_affinity_streamed_matches_oneshot(layers, cfg):
+    """The affinity schedule stays elementwise in the global packet id, so
+    chunked streaming under a mc_table must be bit-identical to the
+    one-shot build - including ragged final chunks."""
+    from repro.noc.traffic import build_traffic_streamed
+    tbl = affinity_mc_table(cfg)
+    oneshot = build_traffic_batch(layers, cfg, VARIANTS[:2], mc_table=tbl)
+    for chunk in (1, 5, 4096):
+        streamed = build_traffic_streamed(layers, cfg, VARIANTS[:2],
+                                          chunk_packets=chunk, mc_table=tbl)
+        for name in ("words", "dest", "meta", "vc", "pkt", "length"):
+            assert np.array_equal(np.asarray(getattr(oneshot, name)),
+                                  np.asarray(getattr(streamed, name))), \
+                (name, chunk)
+
+
+def test_affinity_table_shape_and_range():
+    cfg = make_noc(8, 8, 8)
+    tbl = affinity_mc_table(cfg)
+    assert tbl.shape == (len(cfg.pe_nodes),)
+    assert tbl.min() >= 0 and tbl.max() < cfg.num_mcs
+    # deterministic
+    assert np.array_equal(tbl, affinity_mc_table(cfg))
+
+
+def test_sweep_affinity_and_result_rows(layers):
+    """End-to-end: both new axes through run_sweep. Round-robin rows match
+    a grid without the axis bit for bit; nearest rows lower mean_hops; the
+    result phase populates per-direction columns for every cell."""
+    kw = dict(meshes=("4x4_mc2",), transforms=("O0", "O1"),
+              precisions=("fixed8",), models=("toy",),
+              max_packets_per_layer=20, chunk=CHUNK)
+    plain = run_sweep(SweepGrid(**kw), lambda _n: layers)
+    both = run_sweep(SweepGrid(affinity=("roundrobin", "nearest"),
+                               result_phase=True, result_window=6, **kw),
+                     lambda _n: layers, check_conservation=True)
+    assert both.stats["cells"] == 2 * plain.stats["cells"]
+    assert both.stats["result_phase"] is True
+    for row in plain.rows:
+        rr = both.row(affinity="roundrobin", transform=row["transform"])
+        near = both.row(affinity="nearest", transform=row["transform"])
+        for k in ("total_bt", "cycles", "flits", "adjusted_bt"):
+            assert rr[k] == row[k], k
+        assert near["mean_hops"] < rr["mean_hops"]
+        assert near["flits"] == rr["flits"]
+        for r in (rr, near):
+            assert r["result_bt"] > 0
+            assert 0 < r["result_cycles"]
+            assert r["result_flits"] > 0
+    # request-phase columns of the result-enabled sweep stay untouched
+    for row in plain.rows:
+        assert row["result_bt"] is None and row["result_cycles"] is None
+
+
+def test_sweep_grid_affinity_validation():
+    with pytest.raises(ValueError, match="affinity"):
+        SweepGrid(affinity=("diagonal",))
+    with pytest.raises(ValueError, match="affinity"):
+        SweepGrid(affinity=())

@@ -269,19 +269,27 @@ def test_streamed_sweep_matches_oneshot_sweep(lenet_layers):
 # Pinned by running the engine at PR-3 time; any schema or numeric drift in
 # the sweep output is a deliberate, reviewed change, not an accident. The
 # workload is fully deterministic (threefry PRNG, integer BT counters).
+# PR 5 extended every row with the affinity knob and the (optional) result
+# phase: "affinity"/"mean_hops" are always present, the "result_*" columns
+# are None unless SweepGrid.result_phase is on. The PR-3 numerics are
+# untouched - default grids must keep producing exactly these rows.
 GOLDEN_GRID = dict(meshes=("2x2_mc1",), placements=("edge", "interleaved"),
                    transforms=("O0", "O1"), tiebreaks=("pattern",),
                    precisions=("fixed8",), models=("toy",),
                    max_packets_per_layer=None, chunk=256)
 GOLDEN_ROWS = [
-    {"mesh": "2x2_mc1", "placement": "edge", "transform": "O0",
-     "total_bt": 4499, "cycles": 30, "flits": 27},
-    {"mesh": "2x2_mc1", "placement": "edge", "transform": "O1",
-     "total_bt": 4687, "cycles": 30, "flits": 27},
-    {"mesh": "2x2_mc1", "placement": "interleaved", "transform": "O0",
-     "total_bt": 4499, "cycles": 30, "flits": 27},
-    {"mesh": "2x2_mc1", "placement": "interleaved", "transform": "O1",
-     "total_bt": 4687, "cycles": 30, "flits": 27},
+    {"mesh": "2x2_mc1", "placement": "edge", "affinity": "roundrobin",
+     "transform": "O0", "total_bt": 4499, "cycles": 30, "flits": 27,
+     "result_bt": None, "result_cycles": None},
+    {"mesh": "2x2_mc1", "placement": "edge", "affinity": "roundrobin",
+     "transform": "O1", "total_bt": 4687, "cycles": 30, "flits": 27,
+     "result_bt": None, "result_cycles": None},
+    {"mesh": "2x2_mc1", "placement": "interleaved", "affinity": "roundrobin",
+     "transform": "O0", "total_bt": 4499, "cycles": 30, "flits": 27,
+     "result_bt": None, "result_cycles": None},
+    {"mesh": "2x2_mc1", "placement": "interleaved", "affinity": "roundrobin",
+     "transform": "O1", "total_bt": 4687, "cycles": 30, "flits": 27,
+     "result_bt": None, "result_cycles": None},
 ]
 
 
@@ -291,11 +299,13 @@ def test_sweep_golden_rows():
         jax.random.normal(key, (9, 12)),
         jax.random.normal(jax.random.fold_in(key, 1), (9, 12)) * 0.5)]
     report = run_sweep(SweepGrid(**GOLDEN_GRID), lambda _n: layers)
-    schema = {"mesh", "placement", "model", "precision", "transform",
-              "tiebreak", "total_bt", "adjusted_bt", "overhead_bits",
-              "cycles", "flits", "bt_per_flit", "reduction_pct",
-              "adjusted_reduction_pct"}
+    schema = {"mesh", "placement", "affinity", "model", "precision",
+              "transform", "tiebreak", "total_bt", "adjusted_bt",
+              "overhead_bits", "cycles", "flits", "bt_per_flit", "mean_hops",
+              "reduction_pct", "adjusted_reduction_pct", "result_bt",
+              "result_cycles", "result_flits"}
     assert all(set(r) == schema for r in report.rows)
-    got = [{k: r[k] for k in ("mesh", "placement", "transform", "total_bt",
-                              "cycles", "flits")} for r in report.rows]
+    got = [{k: r[k] for k in ("mesh", "placement", "affinity", "transform",
+                              "total_bt", "cycles", "flits", "result_bt",
+                              "result_cycles")} for r in report.rows]
     assert got == GOLDEN_ROWS
