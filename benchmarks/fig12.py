@@ -58,17 +58,20 @@ def lenet_layers(glyph_seed: int = 7, trained: bool = True):
 
 
 def run(max_packets=40, tiebreak="pattern", count_headers=True, meshes=None,
-        placements=("edge",), affinity=("roundrobin",), result_phase=False):
+        placements=("edge",), affinity=("roundrobin",), result_phase=False,
+        transforms=("O0", "O1", "O2")):
     """The Fig. 12 sweep. ``placements``/``affinity`` widen the grid beyond
     the paper's axes (single-strategy runs keep the seed-stable key format);
-    ``result_phase`` adds the PE->MC drain columns to every row."""
+    ``result_phase`` adds the PE->MC drain columns to every row;
+    ``transforms`` widens the ordering axis (e.g. the beyond-paper ``O3``
+    min-Hamming lane)."""
     if meshes is None:
         meshes = ("2x2_mc1",) if SMOKE else tuple(PAPER_NOCS)
     if SMOKE:
         max_packets = min(max_packets, 4)
     grid = SweepGrid(
         meshes=meshes, placements=placements, affinity=affinity,
-        transforms=("O0", "O1", "O2"),
+        transforms=transforms,
         tiebreaks=(tiebreak,), precisions=("float32", "fixed8"),
         models=("lenet",), max_packets_per_layer=max_packets,
         count_headers=count_headers, result_phase=result_phase, chunk=2048)
@@ -187,8 +190,47 @@ def placement_smoke():
           f"edge==corner pinned, interleaved diverges")
 
 
-def main(print_csv=True):
-    results, stats = run()
+def o3_vs_o2(results):
+    """Per (mesh, precision) O3-vs-O2 adjusted-reduction gaps, plus the
+    acceptance verdict: O3 must beat O2's honest number on fixed8 and stay
+    >= O2 on float32 on every mesh."""
+    gaps = {}
+    ok = True
+    for key, r in results.items():
+        if not key.endswith("/O3"):
+            continue
+        cell = key.rsplit("/", 1)[0]
+        o2 = results[cell + "/O2"]
+        d = r["adjusted_reduction_pct"] - o2["adjusted_reduction_pct"]
+        gaps[cell] = {
+            "o2_adjusted_reduction_pct": round(o2["adjusted_reduction_pct"], 3),
+            "o3_adjusted_reduction_pct": round(r["adjusted_reduction_pct"], 3),
+            "delta_pct": round(d, 3),
+        }
+        strict = cell.endswith("/fixed8")
+        if (d <= 0) if strict else (d < 0):
+            ok = False
+    return {"cells": gaps, "o3_beats_o2": ok}
+
+
+def o3_smoke():
+    """CI gate for the O3 lane: the fig12 grid widened with O3/O3a must
+    produce O3 rows that beat O2's adjusted reduction on fixed8 and stay
+    >= O2 on float32."""
+    results, stats = run(max_packets=4,
+                         transforms=("O0", "O1", "O2", "O3", "O3a"))
+    comp = o3_vs_o2(results)
+    assert comp["cells"], "no O3 cells produced"
+    assert comp["o3_beats_o2"], comp
+    print(f"o3 smoke ok: {len(comp['cells'])} cells, all beat O2 adjusted")
+    for key, g in comp["cells"].items():
+        print(f"  {key}: O2 {g['o2_adjusted_reduction_pct']}% -> "
+              f"O3 {g['o3_adjusted_reduction_pct']}% (+{g['delta_pct']})")
+    return comp
+
+
+def main(print_csv=True, transforms=("O0", "O1", "O2")):
+    results, stats = run(transforms=transforms)
     os.makedirs(OUT, exist_ok=True)
     with open(os.path.join(OUT, "fig12.json"), "w") as f:
         json.dump(results, f, indent=1)
@@ -200,8 +242,17 @@ def main(print_csv=True):
                 f" adj={r['adjusted_reduction_pct']:.2f}%"
             print(f"fig12/{key},{per_cell_us:.0f},"
                   f"bt={r['total_bt']}{red} cycles={r['cycles']}")
-    return {"results": results, "bench": stats}
+    out = {"results": results, "bench": stats}
+    if "O3" in transforms and "O2" in transforms:
+        out["bench"]["o3_vs_o2"] = o3_vs_o2(results)
+    return out
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser(description="Fig. 12 BT sweep")
+    ap.add_argument("--transforms", default="O0,O1,O2",
+                    help="comma-separated WireTransform names "
+                         "(e.g. O0,O1,O2,O3)")
+    ns = ap.parse_args()
+    main(transforms=tuple(ns.transforms.split(",")))

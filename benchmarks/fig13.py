@@ -36,13 +36,14 @@ def _layers(name: str):
 
 
 def run(max_packets=40, tiebreak="pattern", affinity=("roundrobin",),
-        result_phase=False):
+        result_phase=False, transforms=("O0", "O1", "O2")):
     """The Fig. 13 sweep; ``affinity``/``result_phase`` surface the PR-5
-    axes (defaults keep the paper grid and the seed-stable key format)."""
+    axes, ``transforms`` the beyond-paper O3 lane (defaults keep the paper
+    grid and the seed-stable key format)."""
     grid = SweepGrid(
         meshes=("2x2_mc1",) if SMOKE else ("4x4_mc2",),
         affinity=affinity,
-        transforms=("O0", "O1", "O2"), tiebreaks=(tiebreak,),
+        transforms=transforms, tiebreaks=(tiebreak,),
         precisions=("float32", "fixed8"),
         models=("lenet",) if SMOKE else ("lenet", "darknet"),
         max_packets_per_layer=min(max_packets, 4) if SMOKE else max_packets,
@@ -68,8 +69,8 @@ def run(max_packets=40, tiebreak="pattern", affinity=("roundrobin",),
     return results, report.stats
 
 
-def main(print_csv=True):
-    results, stats = run()
+def main(print_csv=True, transforms=("O0", "O1", "O2")):
+    results, stats = run(transforms=transforms)
     os.makedirs(OUT, exist_ok=True)
     with open(os.path.join(OUT, "fig13.json"), "w") as f:
         json.dump(results, f, indent=1)
@@ -84,4 +85,10 @@ def main(print_csv=True):
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser(description="Fig. 13 model sweep")
+    ap.add_argument("--transforms", default="O0,O1,O2",
+                    help="comma-separated WireTransform names "
+                         "(e.g. O0,O1,O2,O3)")
+    ns = ap.parse_args()
+    main(transforms=tuple(ns.transforms.split(",")))

@@ -3,6 +3,7 @@ framework-level analyses. Prints ``name,us_per_call,derived`` CSV lines.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run table1 fig12
+    PYTHONPATH=src python -m benchmarks.run fig12 --transforms O0,O1,O2,O3
 
 After each invocation the NoC-relevant trajectory numbers (per-suite
 wall-clock, sweep-engine cycles/sec and packetizer time, result-phase and
@@ -43,7 +44,13 @@ BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_noc.json")
 
 
 def main() -> None:
-    picks = sys.argv[1:] or list(SUITES)
+    argv = sys.argv[1:]
+    transforms = None
+    if "--transforms" in argv:
+        i = argv.index("--transforms")
+        transforms = tuple(t.strip() for t in argv[i + 1].split(",") if t.strip())
+        argv = argv[:i] + argv[i + 2:]
+    picks = argv or list(SUITES)
     failed = []
     bench = {"suites": {}}
     # The pinned speedup comparison runs first, while the process is cold:
@@ -61,7 +68,13 @@ def main() -> None:
     for name in picks:
         try:
             t0 = time.perf_counter()
-            out = SUITES[name]()
+            # `--transforms O0,O1,O2,O3` widens the ordering axis of the
+            # sweep-driven figure suites (e.g. to include the O3 lanes and
+            # record the o3_vs_o2 verdict); others keep their defaults.
+            if transforms and name in ("fig12", "fig13"):
+                out = SUITES[name](transforms=transforms)
+            else:
+                out = SUITES[name]()
             entry = {"wall_s": round(time.perf_counter() - t0, 3)}
             # Sweep-driven suites return {"results", "bench"}; record the
             # engine stats (cycles/sec simulated, packetizer wall-clock, ...)

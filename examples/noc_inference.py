@@ -4,7 +4,8 @@ pipeline end to end (train -> quantize -> packetize -> order -> simulate),
 driven by the declarative sweep engine: all three orderings are packetized
 once and drained in a single batched, compile-cached simulation.
 ``--results`` also drains the PE->MC result phase; ``--affinity nearest``
-serves each PE from its hop-minimizing MC instead of round-robin.
+serves each PE from its hop-minimizing MC instead of round-robin; ``--o3``
+adds the beyond-paper O3/O3a min-Hamming ordering lanes.
 
     PYTHONPATH=src python examples/noc_inference.py [--noc 8x8_mc4] [--f32]
 """
@@ -35,6 +36,9 @@ ap.add_argument("--affinity", default="roundrobin", choices=sorted(AFFINITIES),
 ap.add_argument("--results", action="store_true",
                 help="also drain the PE->MC result phase and report its "
                      "per-direction BT and drain cycles")
+ap.add_argument("--o3", action="store_true",
+                help="add the beyond-paper O3/O3a min-Hamming orderings "
+                     "to the transform axis")
 ap.add_argument("--train-steps", type=int, default=60)
 ap.add_argument("--max-packets", type=int, default=30)
 args = ap.parse_args()
@@ -60,7 +64,9 @@ print(f"\nNoC {args.noc}: {cfg.rows}x{cfg.cols}, {cfg.num_mcs} MCs "
 grid = SweepGrid(
     meshes=(args.noc,), placements=(args.placement,),
     affinity=(args.affinity,),
-    transforms=("O0", "O1", "O2"), tiebreaks=("pattern",),
+    transforms=("O0", "O1", "O2", "O3", "O3a") if args.o3
+    else ("O0", "O1", "O2"),
+    tiebreaks=("pattern",),
     precisions=("float32" if args.f32 else "fixed8",), models=("lenet",),
     max_packets_per_layer=None if args.full else args.max_packets,
     result_phase=args.results, chunk=2048)

@@ -13,6 +13,13 @@ Three orderings are provided:
 * :func:`separated_order` (O2) - weights and inputs each sorted by their own
   popcount. Larger BT win, at the cost of a minimal-bit-width permutation
   index for recovery.
+* :func:`min_hamming_order` / :func:`separated_min_hamming_order` (O3) and
+  :func:`affiliated_min_hamming_order` (O3a) - chain values by greedy
+  multi-start nearest-neighbor *Hamming distance* with beam lookahead
+  (``repro.kernels.min_hamming``), then deal the chain column-major across
+  the window's flits so chain neighbors share a wire lane on consecutive
+  flits. Popcount sorting is a proxy for the consecutive-flit Hamming
+  objective; O3 optimizes it directly.
 
 All orderings accept a ``window`` size: the ordering unit at a memory
 controller only holds a packet's worth of data, so sorting happens inside
@@ -35,6 +42,10 @@ __all__ = [
     "descending_order",
     "affiliated_order",
     "separated_order",
+    "min_hamming_perm",
+    "min_hamming_order",
+    "affiliated_min_hamming_order",
+    "separated_min_hamming_order",
     "inverse_permutation",
     "apply_permutation",
     "index_overhead_bits",
@@ -200,6 +211,150 @@ def separated_order(
     wperm = descending_perm(wflat, window, tiebreak)
     iperm = descending_perm(iflat, window, tiebreak)
     return PairedOrdered(iflat[iperm], wflat[wperm], iperm, wperm)
+
+
+# --- O3: minimum-Hamming-distance chaining --------------------------------
+
+DEFAULT_BEAM = 2
+DEFAULT_STARTS = 8
+
+
+def min_hamming_perm(values: jax.Array, window: Optional[int] = None,
+                     beam: int = DEFAULT_BEAM,
+                     starts: int = DEFAULT_STARTS) -> jax.Array:
+    """Chain permutation minimizing consecutive Hamming distance per window.
+
+    The windowed analog of :func:`descending_perm` for O3: each window of
+    the (zero-padded) stream is chained by the multi-start greedy
+    beam-lookahead kernel (``repro.kernels.min_hamming``); exact-zero
+    values always land at the window tail in original order, and the chain
+    never costs more than that zeros-to-tail identity order. Returns flat
+    indices into the padded stream; this is the *logical* chain order - the
+    flit-deal layout is applied by :func:`min_hamming_order`.
+    """
+    from repro.kernels.min_hamming import min_hamming_chain
+
+    flat = pad_to_window(values, window)
+    n = flat.shape[0]
+    nw, w = _windowed(n, window)
+    res = min_hamming_chain(flat.reshape(nw, w), beam=beam, starts=starts)
+    offset = (jnp.arange(nw, dtype=res.perm.dtype) * w)[:, None]
+    return (res.perm + offset).reshape(-1)
+
+
+def _deal_chain(perm: jax.Array, z: jax.Array, lanes: int) -> jax.Array:
+    """Deal per-window chain perms (nw, Wp) column-major over the flits.
+
+    Chained (non-zero) value ``i`` goes to flit ``i % F`` lane ``i // F``
+    with ``F = ceil(z / lanes)`` - consecutive chain elements share a wire
+    lane on consecutive flits, which converts the chain objective into the
+    wire's actual per-lane toggle cost. Restricting the deal to the first
+    ``F`` flits (not the window's full flit count) keeps every flit beyond
+    ``ceil(z / lanes)`` all-zero, preserving the result-phase packet-slicing
+    contract for partially filled windows. Padding zeros fill the free slots
+    in ascending order. Wp must be a multiple of ``lanes``.
+    """
+    wp = perm.shape[1]
+    idx = jnp.arange(wp, dtype=jnp.int32)
+
+    def one(p, zr):
+        fr = jnp.maximum(-(-zr // lanes), 1)
+        nzslot = (idx % fr) * lanes + idx // fr
+        used = jnp.zeros((wp,), jnp.bool_).at[
+            jnp.where(idx < zr, nzslot, wp)].set(True, mode="drop")
+        free = jnp.argsort(used).astype(jnp.int32)     # unused slots, ascending
+        slot = jnp.where(idx < zr, nzslot, free[jnp.maximum(idx - zr, 0)])
+        return jnp.zeros((wp,), p.dtype).at[slot].set(p)
+
+    return jax.vmap(one)(perm, z)
+
+
+def min_hamming_order(
+    values: jax.Array,
+    window: Optional[int] = None,
+    lanes: Optional[int] = None,
+    beam: int = DEFAULT_BEAM,
+    starts: int = DEFAULT_STARTS,
+) -> Ordered:
+    """O3 single-stream ordering: chain each window by Hamming distance and
+    deal the chain across the window's flits (see :func:`_deal_chain`).
+
+    Each window is zero-padded up to a ``lanes`` multiple before chaining,
+    so the returned values/perm cover ``ceil(w / lanes) * lanes`` slots per
+    window (``pack`` then pads nothing). The perm indexes the flit-padded
+    stream; invert with :func:`inverse_permutation` and slice windows back
+    to ``w`` to recover the input bit-exactly.
+    """
+    from repro.kernels.min_hamming import min_hamming_chain
+
+    if lanes is None:
+        raise ValueError("min-Hamming ordering needs the flit lane count")
+    flat = pad_to_window(values, window)
+    n = flat.shape[0]
+    nw, w = _windowed(n, window)
+    wp = -(-w // lanes) * lanes
+    padded = jnp.pad(flat.reshape(nw, w), ((0, 0), (0, wp - w)))
+    res = min_hamming_chain(padded, beam=beam, starts=starts)
+    dealt = _deal_chain(res.perm, res.nonzeros, lanes)
+    offset = (jnp.arange(nw, dtype=dealt.dtype) * wp)[:, None]
+    perm = (dealt + offset).reshape(-1)
+    return Ordered(padded.reshape(-1)[perm], perm)
+
+
+def affiliated_min_hamming_order(
+    inputs: jax.Array,
+    weights: jax.Array,
+    window: Optional[int] = None,
+    lanes: Optional[int] = None,
+    beam: int = DEFAULT_BEAM,
+    starts: int = DEFAULT_STARTS,
+) -> PairedOrdered:
+    """O3a: chain (input, weight) pairs by their *combined* Hamming distance.
+
+    One permutation moves both streams, so pairing survives with zero
+    recovery cost (like O1). The distance summed over both planes is
+    exactly the per-lane-pair wire cost of the paired flit layout (input in
+    the left half-flit, weight in the right). ``lanes`` is the per-half
+    lane count the deal targets (``flit lanes // 2`` for paired packing).
+    """
+    from repro.kernels.min_hamming import min_hamming_chain
+
+    if lanes is None:
+        raise ValueError("min-Hamming ordering needs the flit lane count")
+    if weights.size != inputs.size:
+        raise ValueError(
+            "affiliated ordering needs paired streams of equal length")
+    wflat = pad_to_window(weights, window)
+    iflat = pad_to_window(inputs, window)
+    n = wflat.shape[0]
+    nw, w = _windowed(n, window)
+    wp = -(-w // lanes) * lanes
+    pad = ((0, 0), (0, wp - w))
+    wpad = jnp.pad(wflat.reshape(nw, w), pad)
+    ipad = jnp.pad(iflat.reshape(nw, w), pad)
+    res = min_hamming_chain((ipad, wpad), beam=beam, starts=starts)
+    dealt = _deal_chain(res.perm, res.nonzeros, lanes)
+    offset = (jnp.arange(nw, dtype=dealt.dtype) * wp)[:, None]
+    perm = (dealt + offset).reshape(-1)
+    return PairedOrdered(ipad.reshape(-1)[perm], wpad.reshape(-1)[perm],
+                         perm, perm)
+
+
+def separated_min_hamming_order(
+    inputs: jax.Array,
+    weights: jax.Array,
+    window: Optional[int] = None,
+    lanes: Optional[int] = None,
+    beam: int = DEFAULT_BEAM,
+    starts: int = DEFAULT_STARTS,
+) -> PairedOrdered:
+    """O3: chain inputs and weights independently, each by its own Hamming
+    distance - the larger win, needing the O2-style recovery index."""
+    oi = min_hamming_order(inputs, window=window, lanes=lanes, beam=beam,
+                           starts=starts)
+    ow = min_hamming_order(weights, window=window, lanes=lanes, beam=beam,
+                           starts=starts)
+    return PairedOrdered(oi.values, ow.values, oi.perm, ow.perm)
 
 
 def index_overhead_bits(window: int) -> int:

@@ -9,9 +9,19 @@ configurations:
     O1 (affiliated)-> AffiliatedTransform   (keyed on the weight stream)
     O2 (separated) -> SeparatedTransform
 
-plus the interleaved optimal variant used in the beyond-paper study. All
-transforms are pure functions of the payload (jit-safe) and report their
+plus the interleaved optimal variant used in the beyond-paper study and the
+beyond-paper min-Hamming orderings:
+
+    O3  (separated min-Hamming)  -> MinHammingTransform
+    O3a (affiliated min-Hamming) -> MinHammingAffiliatedTransform
+
+All transforms are pure functions of the payload (jit-safe) and report their
 recovery overhead so benchmarks can charge it honestly.
+``overhead_bits_per_value(window, paired=...)`` distinguishes the paired
+request phase (order-invariant contraction: only *re-pairing* needs bits,
+so O1/O3a are free) from single-stream phases (results, lone weight
+streams: any non-identity reorder needs a recovery index to restore
+element order).
 """
 from __future__ import annotations
 
@@ -30,6 +40,8 @@ __all__ = [
     "DescendingTransform",
     "AffiliatedTransform",
     "SeparatedTransform",
+    "MinHammingTransform",
+    "MinHammingAffiliatedTransform",
     "TRANSFORMS",
     "by_name",
     "measure",
@@ -44,7 +56,15 @@ class WireTransform:
     window: Optional[int] = None
     tiebreak: str = "stable"   # "pattern" clusters equal-count values
 
-    def overhead_bits_per_value(self, window: int) -> int:
+    def overhead_bits_per_value(self, window: int, paired: bool = True) -> int:
+        """Recovery bits the receiver needs per transmitted value.
+
+        ``paired=True`` is the request phase: (input, weight) pairs feed an
+        order-invariant contraction, so only *re-pairing* information is
+        chargeable. ``paired=False`` is a single stream (result phase, lone
+        weight stream) whose element order itself must be restored, so any
+        non-identity reorder costs a window-index per value.
+        """
         return 0
 
     def apply(self, inputs: jax.Array, weights: jax.Array, lanes: int) -> FlitStream:
@@ -68,6 +88,11 @@ class DescendingTransform(WireTransform):
 
     name: str = "desc"
     fill: str = "rowmajor"
+
+    def overhead_bits_per_value(self, window: int, paired: bool = True) -> int:
+        # Halves are sorted independently (paired) and element order is not
+        # preserved (single): a recovery index is owed either way.
+        return ordering.index_overhead_bits(window)
 
     def apply_single(self, values: jax.Array, lanes: int) -> FlitStream:
         ordered = ordering.descending_order(
@@ -95,6 +120,11 @@ class AffiliatedTransform(WireTransform):
 
     name: str = "O1"
 
+    def overhead_bits_per_value(self, window: int, paired: bool = True) -> int:
+        # Pairs travel together, so re-pairing is free -- but a *single*
+        # popcount-sorted stream still owes the index that restores order.
+        return 0 if paired else ordering.index_overhead_bits(window)
+
     def apply(self, inputs: jax.Array, weights: jax.Array, lanes: int) -> FlitStream:
         po = ordering.affiliated_order(inputs, weights, window=self.window,
                                        tiebreak=self.tiebreak)
@@ -113,7 +143,7 @@ class SeparatedTransform(WireTransform):
 
     name: str = "O2"
 
-    def overhead_bits_per_value(self, window: int) -> int:
+    def overhead_bits_per_value(self, window: int, paired: bool = True) -> int:
         return ordering.index_overhead_bits(window)
 
     def apply(self, inputs: jax.Array, weights: jax.Array, lanes: int) -> FlitStream:
@@ -127,10 +157,65 @@ class SeparatedTransform(WireTransform):
         return pack(ordered.values, lanes)
 
 
+@dataclasses.dataclass(frozen=True)
+class MinHammingTransform(WireTransform):
+    """O3: chain each stream by consecutive Hamming distance (separated).
+
+    Popcount sorting (O1/O2) is a proxy for the wire objective; O3 minimizes
+    consecutive-flit Hamming distance directly via multi-start greedy
+    nearest-neighbor chaining with beam lookahead, then deals each chain
+    column-major so chain neighbors occupy the same lane on consecutive
+    flits. Streams are chained independently, so re-pairing needs an
+    O2-style index -- and so does a single stream's order recovery.
+    """
+
+    name: str = "O3"
+    beam: int = ordering.DEFAULT_BEAM
+    starts: int = ordering.DEFAULT_STARTS
+
+    def overhead_bits_per_value(self, window: int, paired: bool = True) -> int:
+        return ordering.index_overhead_bits(window)
+
+    def apply(self, inputs: jax.Array, weights: jax.Array, lanes: int) -> FlitStream:
+        po = ordering.separated_min_hamming_order(
+            inputs, weights, window=self.window, lanes=lanes // 2,
+            beam=self.beam, starts=self.starts)
+        return pack_paired(po.inputs, po.weights, lanes)
+
+    def apply_single(self, values: jax.Array, lanes: int) -> FlitStream:
+        ordered = ordering.min_hamming_order(
+            values, window=self.window, lanes=lanes,
+            beam=self.beam, starts=self.starts)
+        return pack(ordered.values, lanes)
+
+
+@dataclasses.dataclass(frozen=True)
+class MinHammingAffiliatedTransform(MinHammingTransform):
+    """O3a: one min-Hamming chain over the *combined* pair distance.
+
+    The summed two-plane distance is exactly the paired flit's per-lane-pair
+    toggle cost, and one shared permutation keeps pairs matched -- zero
+    recovery cost on the request phase, like O1.
+    """
+
+    name: str = "O3a"
+
+    def overhead_bits_per_value(self, window: int, paired: bool = True) -> int:
+        return 0 if paired else ordering.index_overhead_bits(window)
+
+    def apply(self, inputs: jax.Array, weights: jax.Array, lanes: int) -> FlitStream:
+        po = ordering.affiliated_min_hamming_order(
+            inputs, weights, window=self.window, lanes=lanes // 2,
+            beam=self.beam, starts=self.starts)
+        return pack_paired(po.inputs, po.weights, lanes)
+
+
 TRANSFORMS = {
     "O0": IdentityTransform,
     "O1": AffiliatedTransform,
     "O2": SeparatedTransform,
+    "O3": MinHammingTransform,
+    "O3a": MinHammingAffiliatedTransform,
     "desc": DescendingTransform,
 }
 

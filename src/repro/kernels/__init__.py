@@ -6,7 +6,10 @@ in ref.py and a shape-adapting public wrapper in ops.py.
 """
 from .ops import (popcount, bt_boundaries, sort_windows_desc,
                   order_unit, on_tpu)
+from .min_hamming import (min_hamming_chain, min_hamming_chain_reference,
+                          chain_cost)
 from . import ref
 
 __all__ = ["popcount", "bt_boundaries", "sort_windows_desc",
-           "order_unit", "on_tpu", "ref"]
+           "order_unit", "on_tpu", "ref",
+           "min_hamming_chain", "min_hamming_chain_reference", "chain_cost"]

@@ -1,0 +1,281 @@
+"""Batched minimum-Hamming-distance chaining - the O3 ordering kernel.
+
+O1/O2 sort by popcount, a *proxy* for the link-power objective: what the
+wires actually pay is the Hamming distance between consecutive values on a
+lane (operands Hamming distance optimization; see PAPERS.md). O3 optimizes
+that objective directly: within each ordering window it chains values so
+each value is followed by a near-nearest neighbor in Hamming space.
+
+The chain is greedy nearest-neighbor with two quality refinements, both
+pinned against a brute-force optimal-path oracle on exhaustive small
+windows (tests/test_ordering_o3.py):
+
+* **multi-start**: a greedy chain is only as good as its first element, and
+  the best start is not always the max-popcount value (e.g. the window
+  ``{1, 2, 3}`` is optimally chained ``1 -> 3 -> 2``). The kernel runs the
+  chain from ``starts`` positions spread evenly over the descending-popcount
+  ranks and keeps the cheapest; windows with at most ``starts`` distinct
+  positions are covered exhaustively, which is what makes the oracle
+  equality on <= 6-value windows hold by construction.
+* **beam lookahead**: each step scores the ``beam`` nearest candidates by
+  ``d(cur, c) + min_r d(c, r)`` (one step of lookahead) instead of by
+  ``d(cur, c)`` alone, breaking ties toward the smaller immediate hop and
+  then the smaller index (fully deterministic).
+
+A third guard makes the chain *never worse than not reordering*: the
+zeros-to-tail identity order is always evaluated as a candidate and wins
+ties, so ``chain cost <= identity cost`` for every window.
+
+Zero values (exact-zero payload, i.e. window padding) are excluded from the
+chain and appended at the tail in original order: the result-phase
+packetizer slices packets to their real flit count and relies on padding
+zeros occupying the tail flits (the same contract O1/O2 satisfy because
+popcount 0 sorts last).
+
+Implementation notes: this is a pure-jnp batched kernel (vmappable over
+windows, like the transform vmaps in ``repro.noc.traffic``), not a Pallas
+body - the chain is a data-dependent ``lax.scan`` whose per-step work is a
+masked-argmin over pairwise XOR-popcount distances computed on the fly
+(never a (W, W) matrix, so streamed chunks stay memory-bounded). The greedy
+selection is encoded in one int32 key per candidate,
+``(d + lookahead) * K1 + d * K2 + index`` plus large penalties for visited /
+zero-region entries, so lexicographic tie-breaking is a single argmin.
+``min_hamming_chain_reference`` is the per-window numpy mirror (same
+arithmetic, python loops) used as the equivalence oracle by the property
+suite.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bits import popcount32, unsigned_view
+
+__all__ = ["ChainResult", "min_hamming_chain", "min_hamming_chain_reference",
+           "chain_cost", "DEFAULT_BEAM", "DEFAULT_STARTS"]
+
+DEFAULT_BEAM = 2
+DEFAULT_STARTS = 8
+
+# Penalty encoding (int32): a visited candidate must lose to any zero-region
+# one, and a zero-region candidate to any live one. Legit scores are bounded
+# by (2*64) * K1 + 64 * K2 + W with K1 = 130*W, K2 = W, i.e. ~16705*W, so
+# windows up to ~16k values fit under _ZONE with room to spare.
+_VISITED = np.int32(1 << 30)
+_ZONE = np.int32(1 << 28)
+_INF = np.int32(1 << 20)
+_MAX_WINDOW = 16000
+
+
+class ChainResult(NamedTuple):
+    perm: jax.Array   # (R, W) int32 - chained order, window-local indices
+    cost: jax.Array   # (R,) int32 - sum of consecutive Hamming distances
+    nonzeros: jax.Array  # (R,) int32 - chained (non-padding) values per window
+
+
+def _as_planes(streams) -> Tuple[jax.Array, ...]:
+    if isinstance(streams, (jax.Array, np.ndarray)):
+        streams = (streams,)
+    planes = tuple(unsigned_view(jnp.asarray(s)).astype(jnp.uint32)
+                   for s in streams)
+    if not planes:
+        raise ValueError("need at least one value stream")
+    if len({p.shape for p in planes}) != 1:
+        raise ValueError("all streams must share a (R, W) shape")
+    if planes[0].ndim != 2:
+        raise ValueError(f"streams must be (R, W), got {planes[0].shape}")
+    return planes
+
+
+def _dist(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Summed XOR-popcount distance; ``a``/``b`` broadcast over a leading
+    plane axis (affiliated chains sum the input- and weight-half toggles,
+    which is exactly the per-lane-pair wire cost)."""
+    return jnp.sum(popcount32(a ^ b), axis=0).astype(jnp.int32)
+
+
+def _greedy_from(q: jax.Array, z: jax.Array, start: jax.Array,
+                 beam: int) -> Tuple[jax.Array, jax.Array]:
+    """One greedy beam-lookahead chain over a partitioned (P, W) window."""
+    w = q.shape[1]
+    idx = jnp.arange(w, dtype=jnp.int32)
+    zone = jnp.where(idx >= z, _ZONE, 0)
+    k1, k2 = np.int32(130 * w), np.int32(w)
+
+    visited0 = jnp.zeros((w,), jnp.bool_).at[start].set(True)
+    order0 = jnp.zeros((w,), jnp.int32).at[0].set(start)
+
+    def step(carry, i):
+        visited, cur, cost, order = carry
+        vis = jnp.where(visited, _VISITED, 0)
+        dvec = _dist(q[:, cur][:, None], q)                      # (W,)
+        _, cand = jax.lax.top_k(-(dvec * k2 + idx + vis + zone), beam)
+        d_b = dvec[cand]                                         # (B,)
+        d2 = _dist(q[:, cand][:, :, None], q[:, None, :])        # (B, W)
+        lamask = (visited | (idx >= z))[None, :] | (idx[None, :] == cand[:, None])
+        la = jnp.min(jnp.where(lamask, _INF, d2), axis=1)
+        la = jnp.where(la >= _INF, 0, la)
+        score = ((d_b + la) * k1 + d_b * k2 + cand
+                 + vis[cand] + zone[cand])
+        nxt = cand[jnp.argmin(score)]
+        carry = (visited.at[nxt].set(True), nxt, cost + dvec[nxt],
+                 order.at[i].set(nxt))
+        return carry, None
+
+    init = (visited0, start.astype(jnp.int32), jnp.int32(0), order0)
+    (_, _, cost, order), _ = jax.lax.scan(step, init,
+                                          jnp.arange(1, w, dtype=jnp.int32))
+    return order, cost
+
+
+def _chain_window(u: jax.Array, beam: int, starts: int):
+    """Chain one (P, W) window: partition zeros to the tail, run ``starts``
+    greedy chains, fall back to the partitioned identity when cheaper."""
+    w = u.shape[1]
+    idx = jnp.arange(w, dtype=jnp.int32)
+    pops = jnp.sum(popcount32(u), axis=0).astype(jnp.int32)      # (W,)
+    nz = pops > 0
+    z = nz.sum().astype(jnp.int32)
+    part = jnp.argsort(jnp.where(nz, 0, 1)).astype(jnp.int32)    # stable
+    q = u[:, part]
+    cid = (_dist(q[:, :-1], q[:, 1:]).sum().astype(jnp.int32)
+           if w > 1 else jnp.int32(0))
+
+    # Start positions: descending-popcount ranks 0, z/S, 2z/S, ... - all of
+    # 0..z-1 when z <= starts (the exhaustive small-window regime).
+    dperm = jnp.argsort(-pops[part]).astype(jnp.int32)           # stable
+    ranks = (jnp.arange(starts, dtype=jnp.int32) * z) // starts
+    start_pos = dperm[ranks]                                     # (S,)
+
+    orders, costs = jax.vmap(_greedy_from, in_axes=(None, None, 0, None))(
+        q, z, start_pos, beam)
+    sbest = jnp.argmin(costs)
+    use_greedy = costs[sbest] < cid
+    chain = jnp.where(use_greedy, orders[sbest], idx)
+    cost = jnp.minimum(costs[sbest], cid)
+    return part[chain], cost, z
+
+
+def min_hamming_chain(streams, *, beam: int = DEFAULT_BEAM,
+                      starts: int = DEFAULT_STARTS) -> ChainResult:
+    """Chain each window (row) of one or more (R, W) value streams.
+
+    streams: a single (R, W) array, or a sequence of them sharing a shape
+        (the affiliated variant chains (input, weight) pairs on the summed
+        distance of both planes). Any unsigned-viewable dtype.
+    beam: lookahead beam width (>= 1).
+    starts: number of greedy start positions (>= 1); windows with at most
+        this many chained values are searched from every start.
+
+    Returns window-local permutations: ``values[r, perm[r]]`` is the chained
+    sequence, padding zeros at the tail, cost minimal over the evaluated
+    candidates and never above the zeros-to-tail identity order.
+    """
+    planes = _as_planes(streams)
+    w = planes[0].shape[1]
+    if beam < 1:
+        raise ValueError(f"beam must be >= 1, got {beam}")
+    if starts < 1:
+        raise ValueError(f"starts must be >= 1, got {starts}")
+    if w > _MAX_WINDOW:
+        raise ValueError(
+            f"window {w} exceeds the int32 score encoding bound "
+            f"({_MAX_WINDOW}); chain smaller windows")
+    u = jnp.stack(planes)                                        # (P, R, W)
+    if w == 0:
+        r = planes[0].shape[0]
+        zeros = jnp.zeros((r, 0), jnp.int32)
+        return ChainResult(zeros, jnp.zeros((r,), jnp.int32),
+                           jnp.zeros((r,), jnp.int32))
+    beam = min(beam, w)
+    perm, cost, z = jax.vmap(_chain_window, in_axes=(1, None, None))(
+        u, beam, starts)
+    return ChainResult(perm, cost, z)
+
+
+def chain_cost(streams, perm) -> jax.Array:
+    """Sum of consecutive summed-plane Hamming distances of each window of
+    ``streams`` reordered by ``perm`` - the objective O3 minimizes."""
+    planes = _as_planes(streams)
+    perm = jnp.asarray(perm)
+    seq = jnp.stack([jnp.take_along_axis(p, perm, axis=1) for p in planes])
+    if seq.shape[-1] < 2:
+        return jnp.zeros((seq.shape[1],), jnp.int32)
+    return jnp.sum(popcount32(seq[..., :-1] ^ seq[..., 1:]),
+                   axis=(0, 2)).astype(jnp.int32)
+
+
+def min_hamming_chain_reference(streams, *, beam: int = DEFAULT_BEAM,
+                                starts: int = DEFAULT_STARTS):
+    """Per-window numpy mirror of :func:`min_hamming_chain` - the oracle the
+    property suite compares the batched kernel against bit for bit."""
+    planes = [np.asarray(unsigned_view(jnp.asarray(s)), np.uint32)
+              for s in ((streams,) if isinstance(streams, (jax.Array,
+                                                           np.ndarray))
+                        else streams)]
+    r, w = planes[0].shape
+    beam_w = min(max(beam, 1), max(w, 1))
+
+    def popc(x):
+        return bin(int(x)).count("1")
+
+    def dist(i, j, q):
+        return sum(popc(int(p[i]) ^ int(p[j])) for p in q)
+
+    perms = np.zeros((r, w), np.int32)
+    costs = np.zeros((r,), np.int32)
+    zs = np.zeros((r,), np.int32)
+    if w == 0:
+        return perms, costs, zs
+    for row in range(r):
+        q0 = [p[row] for p in planes]
+        pops = [sum(popc(int(p[i])) for p in q0) for i in range(w)]
+        nzidx = [i for i in range(w) if pops[i] > 0]
+        zidx = [i for i in range(w) if pops[i] == 0]
+        part = nzidx + zidx
+        q = [p[part] for p in q0]
+        z = len(nzidx)
+        cid = sum(dist(i, i + 1, q) for i in range(w - 1))
+
+        dperm = sorted(range(w), key=lambda i: (-sum(
+            popc(int(p[i])) for p in q), i))
+        start_pos = [dperm[(s * z) // starts] for s in range(starts)]
+
+        best_cost, best_order = None, None
+        for start in start_pos:
+            visited = [False] * w
+            visited[start] = True
+            order = [start]
+            cur, cost = start, 0
+            for _ in range(w - 1):
+                def selkey(j):
+                    d = dist(cur, j, q)
+                    pen = (int(_VISITED) if visited[j] else 0) + \
+                        (int(_ZONE) if j >= z else 0)
+                    return d * w + j + pen
+                cands = sorted(range(w), key=selkey)[:beam_w]
+
+                def score(c):
+                    d = dist(cur, c, q)
+                    rest = [j for j in range(w)
+                            if not visited[j] and j < z and j != c]
+                    la = min((dist(c, j, q) for j in rest), default=0)
+                    pen = (int(_VISITED) if visited[c] else 0) + \
+                        (int(_ZONE) if c >= z else 0)
+                    return (d + la) * (130 * w) + d * w + c + pen
+                nxt = min(cands, key=score)
+                visited[nxt] = True
+                order.append(nxt)
+                cost += dist(cur, nxt, q)
+                cur = nxt
+            if best_cost is None or cost < best_cost:
+                best_cost, best_order = cost, order
+        if best_cost is None or not (best_cost < cid):
+            best_cost, best_order = cid, list(range(w))
+        perms[row] = np.asarray(part, np.int32)[best_order] if w else []
+        costs[row] = best_cost
+        zs[row] = z
+    return perms, costs, zs

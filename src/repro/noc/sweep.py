@@ -37,10 +37,10 @@ from repro.quant import quantize_fixed8
 from .topology import (AFFINITIES, NocConfig, PLACEMENTS, affinity_mc_table,
                        mc_placement, mesh_by_name, packet_mean_hops,
                        xy_link_loads)
-from .traffic import (LayerTraffic, assemble_traffic, build_result_traffic,
-                      build_traffic_streamed, ordered_payloads,
-                      pad_traffic_length, payload_shapes, result_values,
-                      stream_lengths)
+from .traffic import (DEFAULT_RESULT_WINDOW, LayerTraffic, assemble_traffic,
+                      build_result_traffic, build_traffic_streamed,
+                      ordered_payloads, pad_traffic_length, payload_shapes,
+                      result_values, stream_lengths)
 from .sim import SimResult, Traffic, simulate_batch
 
 __all__ = ["SweepGrid", "SweepReport", "run_sweep", "recovery_overhead_bits",
@@ -86,8 +86,11 @@ class SweepGrid:
     result_phase: also model the PE->MC result traffic: each cell's result
         packets (``traffic.build_result_traffic``) drain in a second,
         independent batched simulation and the row gains
-        ``result_bt``/``result_cycles``/``result_flits`` (``None`` when the
-        phase is off - the request-phase columns are untouched either way).
+        ``result_bt``/``result_cycles``/``result_flits`` plus the honest
+        single-stream accounting columns ``result_overhead_bits``/
+        ``result_adjusted_bt``/``result_adjusted_reduction_pct`` (all
+        ``None`` when the phase is off - the request-phase columns are
+        untouched either way).
     result_window: result values per result packet
         (``traffic.DEFAULT_RESULT_WINDOW`` when ``None``).
     """
@@ -150,13 +153,17 @@ class SweepReport:
 
 def recovery_overhead_bits(layers: Sequence[LayerTraffic],
                            transform: WireTransform,
-                           max_packets_per_layer: Optional[int] = None) -> int:
+                           max_packets_per_layer: Optional[int] = None,
+                           paired: bool = True) -> int:
     """Total recovery-index bits a transform must transmit for ``layers``.
 
-    Separated ordering (O2) needs a minimal-bit-width index per (input,
+    Separated ordering (O2/O3) needs a minimal-bit-width index per (input,
     weight) pair to re-affiliate the streams (paper Sec. IV-C1); the
     ordering window is the packet payload, so the index addresses one of
-    ``k`` in-packet positions. O0/O1 report zero.
+    ``k`` in-packet positions. O0 and (on the paired request phase) O1
+    report zero. ``paired=False`` charges the *single-stream* contract
+    instead - element order itself must be restorable, so every
+    non-identity reorder (O1 included) owes the index.
     """
     total = 0
     for layer in layers:
@@ -164,7 +171,8 @@ def recovery_overhead_bits(layers: Sequence[LayerTraffic],
         if max_packets_per_layer is not None and n > max_packets_per_layer:
             n = max_packets_per_layer
         window = transform.window if transform.window is not None else k
-        total += n * k * transform.overhead_bits_per_value(min(window, k))
+        total += n * k * transform.overhead_bits_per_value(min(window, k),
+                                                           paired=paired)
     return total
 
 
@@ -485,9 +493,13 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
                 rcell = rres[pi * nv:(pi + 1) * nv] if rres else [None] * nv
                 mean_hops = packet_mean_hops(cfg, npackets, tables[pi])
                 base_bt = {}
-                for (prec, tb, tr), res in zip(axes, cell):
+                base_rbt = {}
+                for (prec, tb, tr), res, rr in zip(axes, cell, rcell):
                     if tr == grid.baseline:
                         base_bt[(prec, tb)] = res.total_bt
+                        base_rbt[(prec, tb)] = rr.total_bt if rr else None
+                rw = (grid.result_window if grid.result_window is not None
+                      else DEFAULT_RESULT_WINDOW)
                 for (prec, tb, tr), (transform, _), res, rr in zip(
                         axes, variants, cell, rcell):
                     overhead = recovery_overhead_bits(
@@ -499,6 +511,15 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
                     # reduction figure must pay for it (paper Sec. IV-C1).
                     adjusted_bt = res.total_bt + overhead // 2
                     base = base_bt[(prec, tb)]
+                    if rr:
+                        # The result phase is a *single* stream: any
+                        # non-identity reorder (O1 included) owes a window
+                        # index per value to restore element order. One
+                        # result value per request packet.
+                        roverhead = npackets * transform.overhead_bits_per_value(
+                            min(rw, npackets), paired=False)
+                        radj = rr.total_bt + roverhead // 2
+                        rbase = base_rbt[(prec, tb)]
                     rows.append({
                         "mesh": mesh_name, "placement": placement,
                         "affinity": aff, "model": model, "precision": prec,
@@ -515,6 +536,10 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
                         "result_bt": rr.total_bt if rr else None,
                         "result_cycles": rr.drain_cycle if rr else None,
                         "result_flits": rr.injected if rr else None,
+                        "result_overhead_bits": roverhead if rr else None,
+                        "result_adjusted_bt": radj if rr else None,
+                        "result_adjusted_reduction_pct": (
+                            (1 - radj / rbase) * 100 if rr else None),
                     })
 
     wall = pack_s + sim_s + res_pack_s + res_s

@@ -777,9 +777,11 @@ def build_result_traffic(
         col = rank % w
         npkt = int(pkt_base[-1])
 
-        # One uniform-window transform vmap per variant; padding zeros sort
-        # to the tail under every transform (popcount 0 is minimal), so
-        # slicing each packet to its real flit count is exact.
+        # One uniform-window transform vmap per variant; padding zeros end
+        # up in the tail flits under every transform (popcount 0 sorts last
+        # for O1/O2; the O3 deal confines the chained non-zeros to the
+        # first ceil(z / lanes) flits), so slicing each packet to its real
+        # flit count is exact.
         mats = []
         for v in vals:
             mat = np.zeros((npkt, w), np.asarray(v).dtype)

@@ -139,10 +139,18 @@ def test_recovery_overhead_bits():
     layers = [LayerTraffic(jnp.zeros((10, 16)), jnp.zeros((10, 16)))]
     assert recovery_overhead_bits(layers, by_name("O0")) == 0
     assert recovery_overhead_bits(layers, by_name("O1")) == 0
-    # O2: 4 index bits per value for a 16-value window, 10 packets x 16
+    # O2/O3: 4 index bits per value for a 16-value window, 10 packets x 16
     assert recovery_overhead_bits(layers, by_name("O2")) == 10 * 16 * 4
+    assert recovery_overhead_bits(layers, by_name("O3")) == 10 * 16 * 4
     assert recovery_overhead_bits(layers, by_name("O2"),
                                   max_packets_per_layer=5) == 5 * 16 * 4
+    # single-stream accounting: any non-identity reorder owes the index
+    assert recovery_overhead_bits(layers, by_name("O0"), paired=False) == 0
+    assert recovery_overhead_bits(layers, by_name("O1"),
+                                  paired=False) == 10 * 16 * 4
+    assert recovery_overhead_bits(layers, by_name("O3a")) == 0
+    assert recovery_overhead_bits(layers, by_name("O3a"),
+                                  paired=False) == 10 * 16 * 4
 
 
 def test_sweep_grid_end_to_end(tmp_path):
@@ -271,8 +279,11 @@ def test_streamed_sweep_matches_oneshot_sweep(lenet_layers):
 # workload is fully deterministic (threefry PRNG, integer BT counters).
 # PR 5 extended every row with the affinity knob and the (optional) result
 # phase: "affinity"/"mean_hops" are always present, the "result_*" columns
-# are None unless SweepGrid.result_phase is on. The PR-3 numerics are
-# untouched - default grids must keep producing exactly these rows.
+# are None unless SweepGrid.result_phase is on. PR 6 added the honest
+# single-stream result accounting ("result_overhead_bits"/
+# "result_adjusted_bt"/"result_adjusted_reduction_pct", also None when the
+# phase is off). The PR-3 numerics are untouched - default grids must keep
+# producing exactly these rows.
 GOLDEN_GRID = dict(meshes=("2x2_mc1",), placements=("edge", "interleaved"),
                    transforms=("O0", "O1"), tiebreaks=("pattern",),
                    precisions=("fixed8",), models=("toy",),
@@ -303,9 +314,105 @@ def test_sweep_golden_rows():
               "transform", "tiebreak", "total_bt", "adjusted_bt",
               "overhead_bits", "cycles", "flits", "bt_per_flit", "mean_hops",
               "reduction_pct", "adjusted_reduction_pct", "result_bt",
-              "result_cycles", "result_flits"}
+              "result_cycles", "result_flits", "result_overhead_bits",
+              "result_adjusted_bt", "result_adjusted_reduction_pct"}
     assert all(set(r) == schema for r in report.rows)
     got = [{k: r[k] for k in ("mesh", "placement", "affinity", "transform",
                               "total_bt", "cycles", "flits", "result_bt",
                               "result_cycles")} for r in report.rows]
     assert got == GOLDEN_ROWS
+
+
+# The fig12 pinned reference grid (PAPER_NOCS x 2 precisions x 2 tiebreaks,
+# benchmarks/fig12.PINNED: random-init LeNet seed 1, glyph seed 7,
+# max_packets=8, chunk=128), extended with the PR-6 O3 lane: 48 cells. The
+# 36 O0/O1/O2 cells are bit-identical to PR-5 - the sweep engine on this
+# exact config is equivalence-pinned against the seed driver by
+# benchmarks/fig12.reference_compare, so any drift here is a real numeric
+# change, not noise. O3 cells are tiebreak-independent (the chain ignores
+# the popcount tiebreak) and must beat O2 on raw AND adjusted BT.
+# (mesh, precision, tiebreak, transform) -> (total_bt, cycles, flits)
+REFERENCE_GOLDEN = {
+    ('4x4_mc2', 'float32', 'stable', 'O0'): (919679, 422, 832),
+    ('4x4_mc2', 'float32', 'stable', 'O1'): (905763, 422, 832),
+    ('4x4_mc2', 'float32', 'stable', 'O2'): (897483, 422, 832),
+    ('4x4_mc2', 'float32', 'stable', 'O3'): (544169, 422, 832),
+    ('4x4_mc2', 'float32', 'pattern', 'O0'): (919679, 422, 832),
+    ('4x4_mc2', 'float32', 'pattern', 'O1'): (910023, 422, 832),
+    ('4x4_mc2', 'float32', 'pattern', 'O2'): (904063, 422, 832),
+    ('4x4_mc2', 'float32', 'pattern', 'O3'): (544169, 422, 832),
+    ('4x4_mc2', 'fixed8', 'stable', 'O0'): (254514, 422, 832),
+    ('4x4_mc2', 'fixed8', 'stable', 'O1'): (198800, 422, 832),
+    ('4x4_mc2', 'fixed8', 'stable', 'O2'): (182389, 422, 832),
+    ('4x4_mc2', 'fixed8', 'stable', 'O3'): (49438, 422, 832),
+    ('4x4_mc2', 'fixed8', 'pattern', 'O0'): (254514, 422, 832),
+    ('4x4_mc2', 'fixed8', 'pattern', 'O1'): (194442, 422, 832),
+    ('4x4_mc2', 'fixed8', 'pattern', 'O2'): (174521, 422, 832),
+    ('4x4_mc2', 'fixed8', 'pattern', 'O3'): (49438, 422, 832),
+    ('8x8_mc4', 'float32', 'stable', 'O0'): (1545642, 219, 832),
+    ('8x8_mc4', 'float32', 'stable', 'O1'): (1524068, 219, 832),
+    ('8x8_mc4', 'float32', 'stable', 'O2'): (1511093, 219, 832),
+    ('8x8_mc4', 'float32', 'stable', 'O3'): (908462, 219, 832),
+    ('8x8_mc4', 'float32', 'pattern', 'O0'): (1545642, 219, 832),
+    ('8x8_mc4', 'float32', 'pattern', 'O1'): (1531356, 219, 832),
+    ('8x8_mc4', 'float32', 'pattern', 'O2'): (1523261, 219, 832),
+    ('8x8_mc4', 'float32', 'pattern', 'O3'): (908462, 219, 832),
+    ('8x8_mc4', 'fixed8', 'stable', 'O0'): (429567, 219, 832),
+    ('8x8_mc4', 'fixed8', 'stable', 'O1'): (335531, 219, 832),
+    ('8x8_mc4', 'fixed8', 'stable', 'O2'): (308273, 219, 832),
+    ('8x8_mc4', 'fixed8', 'stable', 'O3'): (81477, 219, 832),
+    ('8x8_mc4', 'fixed8', 'pattern', 'O0'): (429567, 219, 832),
+    ('8x8_mc4', 'fixed8', 'pattern', 'O1'): (327806, 219, 832),
+    ('8x8_mc4', 'fixed8', 'pattern', 'O2'): (294771, 219, 832),
+    ('8x8_mc4', 'fixed8', 'pattern', 'O3'): (81477, 219, 832),
+    ('8x8_mc8', 'float32', 'stable', 'O0'): (1189749, 137, 832),
+    ('8x8_mc8', 'float32', 'stable', 'O1'): (1175949, 137, 832),
+    ('8x8_mc8', 'float32', 'stable', 'O2'): (1168986, 137, 832),
+    ('8x8_mc8', 'float32', 'stable', 'O3'): (717055, 137, 832),
+    ('8x8_mc8', 'float32', 'pattern', 'O0'): (1189749, 137, 832),
+    ('8x8_mc8', 'float32', 'pattern', 'O1'): (1180762, 137, 832),
+    ('8x8_mc8', 'float32', 'pattern', 'O2'): (1176960, 137, 832),
+    ('8x8_mc8', 'float32', 'pattern', 'O3'): (717055, 137, 832),
+    ('8x8_mc8', 'fixed8', 'stable', 'O0'): (331382, 137, 832),
+    ('8x8_mc8', 'fixed8', 'stable', 'O1'): (264011, 137, 832),
+    ('8x8_mc8', 'fixed8', 'stable', 'O2'): (245286, 137, 832),
+    ('8x8_mc8', 'fixed8', 'stable', 'O3'): (73837, 137, 832),
+    ('8x8_mc8', 'fixed8', 'pattern', 'O0'): (331382, 137, 832),
+    ('8x8_mc8', 'fixed8', 'pattern', 'O1'): (258230, 137, 832),
+    ('8x8_mc8', 'fixed8', 'pattern', 'O2'): (235562, 137, 832),
+    ('8x8_mc8', 'fixed8', 'pattern', 'O3'): (73837, 137, 832),
+}
+
+
+@pytest.mark.slow
+def test_reference_grid_golden_with_o3():
+    """The 48-cell pinned reference grid: O0/O1/O2 bit-identical to PR-5,
+    O3 rows pinned at PR-6, tiebreak="pattern" AND "stable" both covered.
+    Also asserts the PR-6 acceptance ordering: O3 beats O2's adjusted
+    reduction on fixed8 and stays >= O2 on float32, on every mesh."""
+    from benchmarks._trained import random_params
+    from repro.data import glyph_batch
+
+    model, params = random_params("lenet", seed=1)
+    x, _ = glyph_batch(jax.random.PRNGKey(7), 1)
+    layers = model.layer_traffic(params, x[0])
+    grid = SweepGrid(meshes=("4x4_mc2", "8x8_mc4", "8x8_mc8"),
+                     transforms=("O0", "O1", "O2", "O3"),
+                     tiebreaks=("stable", "pattern"),
+                     precisions=("float32", "fixed8"),
+                     models=("lenet",), max_packets_per_layer=8, chunk=128)
+    report = run_sweep(grid, lambda _n: layers)
+    assert len(report.rows) == len(REFERENCE_GOLDEN) == 48
+    got = {(r["mesh"], r["precision"], r["tiebreak"], r["transform"]):
+           (r["total_bt"], r["cycles"], r["flits"]) for r in report.rows}
+    assert got == REFERENCE_GOLDEN
+    for r in report.rows:
+        if r["transform"] != "O3":
+            continue
+        o2 = report.row(mesh=r["mesh"], precision=r["precision"],
+                        tiebreak=r["tiebreak"], transform="O2")
+        gap = r["adjusted_reduction_pct"] - o2["adjusted_reduction_pct"]
+        if r["precision"] == "fixed8":
+            assert gap > 0, (r["mesh"], r["tiebreak"], gap)
+        else:
+            assert gap >= 0, (r["mesh"], r["tiebreak"], gap)
