@@ -21,8 +21,9 @@ import time
 import traceback
 
 from . import (table1, fig1_expectation, fig10_11, fig12, fig13,
-               table2_power, darknet_full, ordered_collectives,
-               ordering_throughput, roofline, static_layout, step_overhaul)
+               table2_power, darknet_full, kernel_backend,
+               ordered_collectives, ordering_throughput, roofline,
+               static_layout, step_overhaul)
 
 SUITES = {
     "table1": table1.main,                    # Tab. I: BT reduction w/o NoC
@@ -34,6 +35,8 @@ SUITES = {
     "darknet_full": darknet_full.main,        # beyond-paper: full traffic,
                                               # 16x16, placements, sharding
     "step_overhaul": step_overhaul.main,      # fused-step before/after cps
+    "kernel_backend": kernel_backend.main,    # Pallas step + batched-O3
+                                              # ordering before/after
     "ordered_collectives": ordered_collectives.main,  # beyond-paper: ICI
     "ordering_throughput": ordering_throughput.main,
     "roofline": roofline.main,                # from dry-run artifacts
@@ -97,22 +100,18 @@ def main() -> None:
     merged.setdefault("suites", {}).update(bench["suites"])
     if "reference_compare" in bench:
         merged["reference_compare"] = bench["reference_compare"]
-    # The step_overhaul trajectory entry: the pinned 8x8 before/after chunk
-    # comparison plus the end-to-end full-DarkNet speedup vs the PR-3
-    # recording (416.9 cycles/sec), refreshed whenever either suite runs.
-    so = merged["suites"].get("step_overhaul")
+    # The cross-PR step trajectory: *derived* numbers only - the raw
+    # pinned-chunk record lives solely under suites/step_overhaul (it used
+    # to be duplicated wholesale at top level; see docs/bench_schema.md).
     dk = merged["suites"].get("darknet_full", {})
-    if so:
-        entry = {"pinned_8x8": {k: so[k] for k in
-                                ("before_cps", "after_cps", "step_speedup",
-                                 "bt_identical")},
-                 "retirement_drain_parity": so.get("retirement_drain_parity"),
-                 "darknet_full_cps_pr3": step_overhaul.PR3_DARKNET_CPS}
-        if dk.get("cycles_per_sec"):
-            entry["darknet_full_cps"] = dk["cycles_per_sec"]
-            entry["darknet_full_speedup"] = round(
-                dk["cycles_per_sec"] / step_overhaul.PR3_DARKNET_CPS, 2)
-        merged["step_overhaul"] = entry
+    if dk.get("cycles_per_sec"):
+        merged["step_trajectory"] = {
+            "darknet_full_cps_pr3": step_overhaul.PR3_DARKNET_CPS,
+            "darknet_full_cps": dk["cycles_per_sec"],
+            "darknet_full_speedup": round(
+                dk["cycles_per_sec"] / step_overhaul.PR3_DARKNET_CPS, 2),
+        }
+    merged.pop("step_overhaul", None)   # drop the pre-PR-7 duplicate block
     # Atomic write: a crash mid-dump must not truncate the trajectory file
     # (the merge above would then silently drop every prior suite's stats).
     tmp = BENCH_PATH + ".tmp"

@@ -65,11 +65,12 @@ def _time_chunks(step_fn, n_chunks):
     return best
 
 
-def _fused_cps(cfg, batch):
+def _fused_cps(cfg, batch, backend: str = "fused"):
     b, m = batch.length.shape
     wire = fuse_traffic(batch, False)
     mc = jnp.broadcast_to(jnp.asarray(cfg.mc_nodes, jnp.int32), (b, m))
-    run = _chunk_runner(_mesh_key(cfg), True, PIN["chunk"], True, False)
+    run = _chunk_runner(_mesh_key(cfg), True, PIN["chunk"], True, False,
+                        backend)
     state0 = jax.tree.map(lambda x: jnp.broadcast_to(x, (b,) + x.shape),
                           make_state(cfg, m))
     state, ej = run(state0, wire, mc)       # compile + warm

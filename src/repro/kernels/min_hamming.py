@@ -43,19 +43,35 @@ zero-region entries, so lexicographic tie-breaking is a single argmin.
 ``min_hamming_chain_reference`` is the per-window numpy mirror (same
 arithmetic, python loops) used as the equivalence oracle by the property
 suite.
+
+Dispatch layout (the fig12 packetizer hot path): the scan runs ONCE per
+chain call with every window of the batch in flight - windows stacked on
+the outer vmap axis, the multi-start fan vmapped inside - and the whole
+stack dispatches through one jitted entry (``_chain_stack``), so ordering a
+layer costs one executable launch regardless of its packet count. Beam
+candidates are picked by ``beam`` iterated argmins over the selection key
+instead of ``lax.top_k``: the key embeds the candidate index, so keys are
+distinct and the two are bit-identical - but XLA:CPU lowers top-k to a full
+sort that was ~95% of the per-step cost. ``chain_select_pallas`` is the
+TPU-resident variant of that distance+select body (SWAR popcount keys +
+the bitonic network from ``bitonic_sort``), parity-pinned in interpret
+mode and slotted in on Mosaic where iterated argmins serialize badly.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import pallas as pl
 
 from repro.core.bits import popcount32, unsigned_view
 
 __all__ = ["ChainResult", "min_hamming_chain", "min_hamming_chain_reference",
-           "chain_cost", "DEFAULT_BEAM", "DEFAULT_STARTS"]
+           "chain_cost", "chain_select_pallas", "DEFAULT_BEAM",
+           "DEFAULT_STARTS"]
 
 DEFAULT_BEAM = 2
 DEFAULT_STARTS = 8
@@ -97,6 +113,25 @@ def _dist(a: jax.Array, b: jax.Array) -> jax.Array:
     return jnp.sum(popcount32(a ^ b), axis=0).astype(jnp.int32)
 
 
+def _select_beam(key: jax.Array, beam: int) -> jax.Array:
+    """Indices of the ``beam`` smallest entries of ``key``, ascending.
+
+    Bit-identical to ``lax.top_k`` on the negated key: every selection key
+    embeds the candidate index (``... + idx``), so keys are pairwise
+    distinct and both formulations pick the same set in the same order
+    (argmin's first-occurrence rule only matters on ties, which cannot
+    occur). Iterated argmin+mask beats top_k because XLA:CPU lowers top-k
+    to a full O(W log W) sort per scan step - ~95% of the chain's runtime
+    at W=400 - while ``beam`` argmin passes are O(beam * W)."""
+    masked = key
+    cands = []
+    for _ in range(beam):
+        c = jnp.argmin(masked).astype(jnp.int32)
+        cands.append(c)
+        masked = masked.at[c].set(jnp.int32(np.iinfo(np.int32).max))
+    return jnp.stack(cands)
+
+
 def _greedy_from(q: jax.Array, z: jax.Array, start: jax.Array,
                  beam: int) -> Tuple[jax.Array, jax.Array]:
     """One greedy beam-lookahead chain over a partitioned (P, W) window."""
@@ -112,7 +147,7 @@ def _greedy_from(q: jax.Array, z: jax.Array, start: jax.Array,
         visited, cur, cost, order = carry
         vis = jnp.where(visited, _VISITED, 0)
         dvec = _dist(q[:, cur][:, None], q)                      # (W,)
-        _, cand = jax.lax.top_k(-(dvec * k2 + idx + vis + zone), beam)
+        cand = _select_beam(dvec * k2 + idx + vis + zone, beam)
         d_b = dvec[cand]                                         # (B,)
         d2 = _dist(q[:, cand][:, :, None], q[:, None, :])        # (B, W)
         lamask = (visited | (idx >= z))[None, :] | (idx[None, :] == cand[:, None])
@@ -159,6 +194,15 @@ def _chain_window(u: jax.Array, beam: int, starts: int):
     return part[chain], cost, z
 
 
+@functools.partial(jax.jit, static_argnames=("beam", "starts"))
+def _chain_stack(u: jax.Array, beam: int, starts: int):
+    """One compiled dispatch chaining every window of a (P, R, W) stack: the
+    data-dependent scan executes once with the full (R, starts) batch in
+    flight, so a layer's ordering cost is one executable launch rather than
+    one per window (the fig12 packetizer regime)."""
+    return jax.vmap(_chain_window, in_axes=(1, None, None))(u, beam, starts)
+
+
 def min_hamming_chain(streams, *, beam: int = DEFAULT_BEAM,
                       starts: int = DEFAULT_STARTS) -> ChainResult:
     """Chain each window (row) of one or more (R, W) value streams.
@@ -191,9 +235,100 @@ def min_hamming_chain(streams, *, beam: int = DEFAULT_BEAM,
         return ChainResult(zeros, jnp.zeros((r,), jnp.int32),
                            jnp.zeros((r,), jnp.int32))
     beam = min(beam, w)
-    perm, cost, z = jax.vmap(_chain_window, in_axes=(1, None, None))(
-        u, beam, starts)
+    perm, cost, z = _chain_stack(u, beam, starts)
     return ChainResult(perm, cost, z)
+
+
+# -- Pallas variant of the chain step's distance+select body ----------------
+#
+# One chain-scan step is: XOR the current value against the window, popcount
+# the toggles, form the selection key ``dvec * k2 + idx + penalty`` and take
+# the ``beam`` smallest keys. On CPU the iterated-argmin form above is
+# optimal; on TPU the serial argmin chain under a scan lowers poorly, so
+# this kernel fuses the SWAR popcount (popcount.py's body) with the full
+# bitonic network from bitonic_sort.py carrying the lane index as payload -
+# the caller slices the first ``beam`` columns of the returned order. Keys
+# are negated going into the descending network, so the output is ascending
+# in the original key, matching ``_select_beam`` / ``lax.top_k`` exactly
+# (keys embed the index, hence are distinct and the order is total).
+
+_SELECT_ROW_TILE = 8
+# Padding-lane penalty: above any legitimate key (bounded by _VISITED +
+# _ZONE + ~2^21, see the score-encoding note at the top) yet far enough
+# from int32 max that negation cannot overflow.
+_PAD_PENALTY = np.int32((1 << 30) + (1 << 29))
+
+
+def _make_select_kernel(w: int, n_planes: int, k2: int):
+    from repro.kernels.bitonic_sort import _compare_exchange
+
+    stages = w.bit_length() - 1
+
+    def kernel(*refs):
+        dvec = jnp.zeros((_SELECT_ROW_TILE, w), jnp.int32)
+        for p in range(n_planes):
+            x = refs[p][...].astype(jnp.uint32)
+            x = x - ((x >> 1) & jnp.uint32(0x55555555))
+            x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+            x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+            dvec = dvec + ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+        pen = refs[n_planes][...]
+        idx = jax.lax.broadcasted_iota(jnp.int32, dvec.shape, 1)
+        keys = -(dvec * jnp.int32(k2) + idx + pen)
+        order = idx
+        for k in range(stages):
+            for j in range(k, -1, -1):
+                keys, (order,) = _compare_exchange(keys, (order,), k, j, w)
+        refs[n_planes + 1][...] = dvec
+        refs[n_planes + 2][...] = order
+
+    return kernel
+
+
+def chain_select_pallas(xors, penalty, *, k2: int | None = None,
+                        interpret: bool = True):
+    """Distance + beam-select body of one chain step, as a Pallas kernel.
+
+    xors: a (R, W) uint32 array (or sequence of them for multi-plane
+        affiliated chains) holding ``window ^ current`` toggle words.
+    penalty: (R, W) int32 - the step's visited/zone penalties.
+    k2: distance multiplier in the selection key (defaults to W, the
+        chain's ``k2 = w`` encoding).
+
+    Returns ``(dvec, order)``: per-lane summed popcount distances (R, W)
+    int32, and lane indices sorted ascending by ``dvec * k2 + idx +
+    penalty`` (R, W) int32 - slice ``order[:, :beam]`` for the beam
+    candidates, bit-identical to ``_select_beam`` on the same key.
+    """
+    if isinstance(xors, (jax.Array, np.ndarray)):
+        xors = (xors,)
+    planes = tuple(jnp.asarray(x).astype(jnp.uint32) for x in xors)
+    if len({p.shape for p in planes}) != 1 or planes[0].ndim != 2:
+        raise ValueError("xor planes must share a (R, W) shape")
+    r, w = planes[0].shape
+    if penalty.shape != (r, w):
+        raise ValueError(f"penalty must be {(r, w)}, got {penalty.shape}")
+    if k2 is None:
+        k2 = w
+    wp = max(128, 1 << (w - 1).bit_length())
+    rp = -(-r // _SELECT_ROW_TILE) * _SELECT_ROW_TILE
+    planes = tuple(jnp.pad(p, ((0, rp - r), (0, wp - w))) for p in planes)
+    pen = jnp.pad(penalty.astype(jnp.int32), ((0, rp - r), (0, wp - w)),
+                  constant_values=_PAD_PENALTY)
+    kernel = _make_select_kernel(wp, len(planes), int(k2))
+    spec = pl.BlockSpec((_SELECT_ROW_TILE, wp), lambda i: (i, 0))
+    dvec, order = pl.pallas_call(
+        kernel,
+        grid=(rp // _SELECT_ROW_TILE,),
+        in_specs=[spec] * (len(planes) + 1),
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct((rp, wp), jnp.int32),
+                   jax.ShapeDtypeStruct((rp, wp), jnp.int32)],
+        interpret=interpret,
+    )(*planes, pen)
+    # Padding lanes carry _PAD_PENALTY and sort behind every real lane, so
+    # the first W order columns are exactly the real candidates.
+    return dvec[:r, :w], order[:r, :w]
 
 
 def chain_cost(streams, perm) -> jax.Array:

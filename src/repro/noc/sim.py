@@ -60,7 +60,8 @@ from .topology import (NocConfig, NUM_PORTS, OPPOSITE, PORT_E, PORT_LOCAL,
                        PORT_N, PORT_S, PORT_W)
 
 __all__ = ["Traffic", "Wire", "SimState", "SimResult", "simulate",
-           "simulate_batch", "make_state", "fuse_traffic", "pack_sideband"]
+           "simulate_batch", "make_state", "fuse_traffic", "pack_sideband",
+           "BACKENDS"]
 
 # Flit meta bitfield
 META_PAYLOAD = 1
@@ -482,9 +483,83 @@ def _make_step(mesh_key, count_headers: bool, track: bool):
     return step
 
 
+BACKENDS = ("auto", "fused", "pallas")
+
+
+def _resolve_backend(backend: str, track: bool) -> str:
+    """Resolve the ``backend=`` knob to a concrete step implementation.
+
+    ``auto`` follows the kernels/ops.py selector contract: the Pallas
+    router-step kernel compiles through Mosaic on TPU and would only
+    *interpret* on CPU, so auto picks ``pallas`` exactly when a TPU backs
+    the default device and the proven fused step otherwise. The
+    conservation ledger is a debug path the kernel does not carry, so
+    tracked drains always ride the fused step (both are pinned
+    bit-identical, making the substitution unobservable).
+    """
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if backend == "auto":
+        from repro.kernels.ops import on_tpu
+        backend = "pallas" if on_tpu() else "fused"
+    if track:
+        backend = "fused"
+    return backend
+
+
+def _make_step_pallas(mesh_key, count_headers: bool, track: bool):
+    """The per-cycle step routed through the Pallas router kernel.
+
+    Same (state, wire, mc_nodes) signature and bit-identical results as
+    :func:`_make_step` (pinned by tests/test_kernel_parity.py): the kernel
+    body copies the fused step's arithmetic op for op. Only the injection
+    row gather stays outside - the (M, T, LF) wire tensor cannot live in
+    VMEM at DarkNet scale, and a one-row-per-stream dynamic slice is
+    exactly what XLA already does well.
+    """
+    from repro.kernels.ops import on_tpu
+    from repro.kernels.router_step import router_step_pallas
+
+    if track:
+        raise ValueError("the Pallas step does not carry the conservation "
+                         "ledger; tracked drains use the fused step")
+    rows, cols, num_vcs, vc_depth, lanes = mesh_key
+    lf = lanes + 1
+    interp = not on_tpu()
+
+    def step(state: SimState, wire: Wire, mc_nodes: jax.Array):
+        m = wire.length.shape[0]
+        t_cap = wire.wire.shape[1]
+        ptr = state.inj_ptr
+        active = (ptr < wire.length).astype(jnp.int32)
+        safe_ptr = jnp.minimum(ptr, t_cap - 1)
+        iw = wire.wire[jnp.arange(m), safe_ptr]
+        total = jnp.sum(wire.length).astype(jnp.int32)[None]
+        leaves = (state.fifo.reshape(-1, lf), state.head, state.count,
+                  state.rr, state.link_last, state.link_bt,
+                  state.link_flits, state.inj_ptr, state.inj_last,
+                  state.inj_bt, state.ejected[None], state.cycle[None],
+                  state.drained_at[None])
+        (fifo, head, count, rr, link_last, link_bt, link_flits, inj_ptr,
+         inj_last, inj_bt, ejected, cycle, drained) = router_step_pallas(
+            mesh_key, count_headers, lf, leaves, iw, active,
+            mc_nodes.astype(jnp.int32), total, interpret=interp)
+        return SimState(fifo.reshape(state.fifo.shape), head, count, rr,
+                        link_last, link_bt, link_flits, inj_ptr, inj_last,
+                        inj_bt, ejected[0], cycle[0], None, drained[0])
+
+    return step
+
+
+def _step_for(mesh_key, count_headers: bool, track: bool, backend: str):
+    if backend == "pallas":
+        return _make_step_pallas(mesh_key, count_headers, track)
+    return _make_step(mesh_key, count_headers, track)
+
+
 @functools.lru_cache(maxsize=None)
 def _chunk_runner(mesh_key, count_headers: bool, chunk: int, batched: bool,
-                  track: bool):
+                  track: bool, backend: str = "fused"):
     """Compiled ``chunk``-cycle driver for one (mesh size, recorder) pair.
 
     Returned once per static key and cached; jax.jit then caches one
@@ -494,7 +569,7 @@ def _chunk_runner(mesh_key, count_headers: bool, chunk: int, batched: bool,
     separate small output so the pipelined driver can dispatch chunk k+1
     and only then read chunk k's drain bookkeeping.
     """
-    step = _make_step(mesh_key, count_headers, track)
+    step = _step_for(mesh_key, count_headers, track, backend)
 
     def run(state: SimState, wire: Wire, mc_nodes: jax.Array):
         def body(s, _):
@@ -509,7 +584,7 @@ def _chunk_runner(mesh_key, count_headers: bool, chunk: int, batched: bool,
 
 @functools.lru_cache(maxsize=None)
 def _sharded_chunk_runner(mesh_key, count_headers: bool, chunk: int,
-                          dev_mesh, track: bool):
+                          dev_mesh, track: bool, backend: str = "fused"):
     """``_chunk_runner(batched=True)`` with the variants axis split across
     the devices of ``dev_mesh`` via shard_map.
 
@@ -521,7 +596,7 @@ def _sharded_chunk_runner(mesh_key, count_headers: bool, chunk: int,
     """
     from jax.experimental.shard_map import shard_map
 
-    step = _make_step(mesh_key, count_headers, track)
+    step = _step_for(mesh_key, count_headers, track, backend)
 
     def run(state: SimState, wire: Wire, mc_nodes: jax.Array):
         def body(s, _):
@@ -530,7 +605,7 @@ def _sharded_chunk_runner(mesh_key, count_headers: bool, chunk: int,
         return out, out.ejected
 
     run = jax.vmap(run, in_axes=(0, 0, 0))
-    spec_b = jax.sharding.PartitionSpec("variants")
+    spec_b = jax.sharding.PartitionSpec(dev_mesh.axis_names[0])
     run = shard_map(run, mesh=dev_mesh,
                     in_specs=(spec_b, spec_b, spec_b),
                     out_specs=(spec_b, spec_b), check_rep=False)
@@ -628,7 +703,8 @@ def _result(cfg: NocConfig, state_leaves, total: int) -> SimResult:
 
 def simulate(cfg: NocConfig, traffic: Traffic, *, count_headers: bool = True,
              max_cycles: int = 2_000_000, chunk: int = 4096,
-             check_conservation: bool = False, mc_nodes=None) -> SimResult:
+             check_conservation: bool = False, mc_nodes=None,
+             backend: str = "auto") -> SimResult:
     """Run the NoC until all traffic drains; returns per-link BT counts.
 
     check_conservation: debug path - track tail ejections per packet id and
@@ -638,6 +714,11 @@ def simulate(cfg: NocConfig, traffic: Traffic, *, count_headers: bool = True,
         stream). ``None`` injects at ``cfg.mc_nodes`` - the request phase.
         The result phase passes ``cfg.pe_nodes``: streams then inject at
         the PEs and eject at the MCs their ``dest`` fields name.
+    backend: step implementation - ``"fused"`` (the pure-jnp fused step),
+        ``"pallas"`` (the ``kernels/router_step.py`` kernel: Mosaic on
+        TPU, interpret-mode on CPU), or ``"auto"`` (pallas on TPU, fused
+        otherwise; see :func:`_resolve_backend`). All backends are pinned
+        bit-identical.
     """
     m = int(traffic.length.shape[0])
     if mc_nodes is None:
@@ -658,7 +739,7 @@ def simulate(cfg: NocConfig, traffic: Traffic, *, count_headers: bool = True,
     state = make_state(cfg, m, npkt=npkt)
     wire = fuse_traffic(traffic, track)
     run_chunk = _chunk_runner(_mesh_key(cfg), count_headers, chunk, False,
-                              track)
+                              track, _resolve_backend(backend, track))
 
     total = int(np.sum(np.asarray(traffic.length)))
     while total:    # empty traffic: nothing to drain (and T may be 0)
@@ -688,8 +769,9 @@ def _next_pow2(n: int) -> int:
 def simulate_batch(cfg: NocConfig, traffic: Traffic, *,
                    count_headers: bool = True, max_cycles: int = 2_000_000,
                    chunk: int = 4096, check_conservation: bool = False,
-                   devices=None, mc_nodes=None,
-                   retire: bool = True) -> List[SimResult]:
+                   devices=None, mc_nodes=None, retire: bool = True,
+                   backend: str = "auto",
+                   compact_ratio: float = 0.5) -> List[SimResult]:
     """Drain B traffic variants (leading axis) in one vmapped program.
 
     All variants must share shapes - which O0/O1/O2 x precision variants of
@@ -706,7 +788,10 @@ def simulate_batch(cfg: NocConfig, traffic: Traffic, *,
         1-D device mesh; the batch is padded with empty traffic rows up to
         a device multiple). Per-variant results are bit-identical to the
         single-device drain - variant lanes never communicate. ``None`` or
-        a single device falls back to the plain vmapped runner.
+        a single device falls back to the plain vmapped runner. A 1-D
+        ``jax.sharding.Mesh`` is accepted directly, so a multi-host mesh
+        built elsewhere (``dist.sharding`` specs) is a config change: the
+        batch placement still goes through ``batch_shardings``.
     mc_nodes: optional (B, M) per-variant injection-node ids - this is how
         the sweep engine batches *different MC placements* of one mesh size
         into a single drain, and how the result phase injects its per-PE
@@ -716,7 +801,18 @@ def simulate_batch(cfg: NocConfig, traffic: Traffic, *,
         empty padding.
     retire: disable lane retirement/compaction (debug / parity testing);
         every lane then steps until the slowest variant drains.
+    backend: step implementation (``"auto"``/``"fused"``/``"pallas"``,
+        see :func:`simulate`); applies to the sharded runner too.
+    compact_ratio: compaction trigger - survivors are compacted into a
+        narrower batch once ``live <= ratio * rows``. The default 0.5
+        keeps the pow2-halving schedule; ``noc.tune`` measures
+        alternatives per shape class. 0.0 disables compaction (lanes
+        still retire their bookkeeping). Pure scheduling: results are
+        bit-identical across ratios.
     """
+    if not 0.0 <= compact_ratio <= 1.0:
+        raise ValueError(f"compact_ratio must be in [0, 1], "
+                         f"got {compact_ratio!r}")
     if traffic.length.ndim != 2:
         raise ValueError("simulate_batch wants a leading variants axis; "
                          "use simulate() for a single Traffic")
@@ -738,14 +834,25 @@ def simulate_batch(cfg: NocConfig, traffic: Traffic, *,
                   np.asarray(traffic.pkt)) if track else None)
     totals = np.asarray(traffic.length).sum(axis=1).astype(np.int64)
     wire = fuse_traffic(traffic, track)
+    bk = _resolve_backend(backend, track)
 
-    devs = list(devices) if devices is not None else []
-    sharded = len(devs) > 1
+    if isinstance(devices, jax.sharding.Mesh):
+        if len(devices.axis_names) != 1:
+            raise ValueError("simulate_batch wants a 1-D device mesh, got "
+                             f"axes {devices.axis_names}")
+        dev_mesh, ndev = devices, int(devices.devices.size)
+    elif devices is not None:
+        devs = list(devices)
+        ndev = len(devs)
+        dev_mesh = (jax.sharding.Mesh(np.asarray(devs), ("variants",))
+                    if ndev > 1 else None)
+    else:
+        dev_mesh, ndev = None, 0
+    sharded = ndev > 1
     if sharded:
         # Lazy import: repro.dist pulls in repro.models, which imports this
         # package back for its layer_traffic helpers.
         from repro.dist.sharding import batch_shardings, compact_batch
-        ndev = len(devs)
         bp = -(-b // ndev) * ndev
         if bp != b:
             zpad = lambda x: jnp.concatenate(   # noqa: E731
@@ -753,13 +860,13 @@ def simulate_batch(cfg: NocConfig, traffic: Traffic, *,
             wire = Wire(zpad(wire.wire), zpad(wire.length))
             mc = np.concatenate([mc, np.zeros((bp - b, m), np.int32)])
             totals = np.concatenate([totals, np.zeros(bp - b, np.int64)])
-        dev_mesh = jax.sharding.Mesh(np.asarray(devs), ("variants",))
+        axis = dev_mesh.axis_names[0]
         place = lambda tree: jax.device_put(  # noqa: E731
-            tree, batch_shardings(dev_mesh, tree, "variants"))
+            tree, batch_shardings(dev_mesh, tree, axis))
         compact = lambda tree, idx: compact_batch(  # noqa: E731
-            dev_mesh, tree, idx, "variants")
+            dev_mesh, tree, idx, axis)
         run_chunk = _sharded_chunk_runner(_mesh_key(cfg), count_headers,
-                                          chunk, dev_mesh, track)
+                                          chunk, dev_mesh, track, bk)
         min_rows = ndev
     else:
         bp = b
@@ -767,7 +874,7 @@ def simulate_batch(cfg: NocConfig, traffic: Traffic, *,
         compact = lambda tree, idx: jax.tree.map(  # noqa: E731
             lambda x: x[idx], tree)
         run_chunk = _chunk_runner(_mesh_key(cfg), count_headers, chunk, True,
-                                  track)
+                                  track, bk)
         min_rows = 1
 
     # Broadcast the zeroed base state instead of stacking B host copies;
@@ -822,7 +929,7 @@ def simulate_batch(cfg: NocConfig, traffic: Traffic, *,
                 target = max(_next_pow2(len(live)), min_rows)
                 if target % min_rows:
                     target = -(-target // min_rows) * min_rows
-                if len(live) <= cur // 2 and target < cur:
+                if len(live) <= int(cur * compact_ratio) and target < cur:
                     keep = [prim[lane] for lane in live]
                     rows = keep + [keep[0]] * (target - len(keep))
                     idx = jnp.asarray(rows, jnp.int32)

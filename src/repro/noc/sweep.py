@@ -38,7 +38,7 @@ from .topology import (AFFINITIES, NocConfig, PLACEMENTS, affinity_mc_table,
                        mc_placement, mesh_by_name, packet_mean_hops,
                        xy_link_loads)
 from .traffic import (DEFAULT_RESULT_WINDOW, LayerTraffic, assemble_traffic,
-                      build_result_traffic, build_traffic_streamed,
+                      build_result_traffic, build_traffic_streamed_multi,
                       ordered_payloads, pad_traffic_length, payload_shapes,
                       result_values, stream_lengths)
 from .sim import SimResult, Traffic, simulate_batch
@@ -110,8 +110,24 @@ class SweepGrid:
     baseline: str = "O0"
     result_phase: bool = False
     result_window: Optional[int] = None
+    # Simulator step implementation ("auto"/"fused"/"pallas"): "auto"
+    # follows the kernels/ops.py selector - the Pallas router kernel on
+    # TPU, the fused jnp step elsewhere. Forwarded to every
+    # ``simulate_batch`` call the sweep makes; all backends are pinned
+    # bit-identical, so this is purely a speed knob.
+    backend: str = "auto"
+    # Autotuned drain scheduling: path to a ``noc.tune`` winners table
+    # (JSON, see ``repro.noc.tune``). When set, each mesh looks up its
+    # shape class and the measured winner overrides ``chunk`` and the
+    # compaction ratio for that drain; classes absent from the table fall
+    # back to ``chunk``. Scheduling only - results stay bit-identical.
+    tune_path: Optional[str] = None
 
     def __post_init__(self):
+        from .sim import BACKENDS
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, "
+                             f"got {self.backend!r}")
         unknown = set(self.precisions) - set(_QUANTIZERS)
         if unknown:
             raise ValueError(f"unknown precisions {sorted(unknown)}; "
@@ -174,6 +190,45 @@ def recovery_overhead_bits(layers: Sequence[LayerTraffic],
         total += n * k * transform.overhead_bits_per_value(min(window, k),
                                                            paired=paired)
     return total
+
+
+def cached_ordered_payloads(cache: Dict[tuple, list], model: str,
+                            layers: Sequence[LayerTraffic], lanes: int,
+                            variants, axes,
+                            max_packets_per_layer: Optional[int],
+                            timings: Optional[Dict[str, float]] = None
+                            ) -> list:
+    """Ordered payloads for ``variants``, cached per (model, lanes,
+    transform, precision).
+
+    The transform value is the frozen ``WireTransform`` dataclass, so the
+    key carries the ordering name, window, tiebreak, and beam/starts
+    settings - distinct tiebreaks or precisions can never collide on an
+    entry, while every sweep cell that shares a variant (all meshes, MC
+    placements, and packet->MC affinities of one model) reuses one ordering
+    pass. Returns the per-layer ``(B, n, F, L)`` stacks in variant order,
+    bit-identical to an uncached :func:`repro.noc.traffic.ordered_payloads`
+    call over the full variant list.
+
+    ``timings`` (transform name -> seconds, accumulated in place) charges
+    each cache *miss* to its ordering - the per-transform packetization
+    breakdown the bench trajectory records, so an O3 chain regression is
+    attributable against the cheap O0-O2 permutes.
+    """
+    stacks = []
+    for (tr, q), (prec, _, _) in zip(variants, axes):
+        key = (model, lanes, tr, prec)
+        if key not in cache:
+            t0 = time.perf_counter()
+            cache[key] = ordered_payloads(
+                layers, lanes, [(tr, q)],
+                max_packets_per_layer=max_packets_per_layer)
+            if timings is not None:
+                timings[tr.name] = (timings.get(tr.name, 0.0)
+                                    + time.perf_counter() - t0)
+        stacks.append(cache[key])
+    return [np.concatenate([s[li] for s in stacks])
+            for li in range(len(stacks[0]))]
 
 
 def _resolve_mesh(mesh: Mesh) -> tuple:
@@ -292,6 +347,7 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
     rows: List[dict] = []
     classes = []
     pack_s = sim_s = res_pack_s = res_s = 0.0
+    pack_by_tr: Dict[str, float] = {}   # ordering seconds per transform
     stepped_cycles = 0          # request cycle-steps across all variants
     result_cycles = 0           # result-phase cycle-steps
     # Result values depend only on (model, variants) - computed once and
@@ -300,12 +356,27 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
     layer_cache: Dict[str, Sequence[LayerTraffic]] = {}
     # Ordered payload words are mesh-independent (the transform sees only
     # packet payloads and the flit width), so every mesh/MC-count cell of a
-    # model reuses one ordering pass; only the per-MC assembly is per-mesh.
+    # model reuses one ordering pass; entries are keyed per (model, lanes,
+    # transform, precision) - see :func:`cached_ordered_payloads` - so
+    # grids whose variant lists overlap (and the result phase below) share
+    # orderings at variant granularity, not just whole-list granularity.
     # The streamed path deliberately skips this cache - holding every
-    # layer's full payload tensor is exactly what it exists to avoid - and
-    # re-streams per (mesh, placement) cell instead.
+    # layer's full payload tensor is exactly what it exists to avoid - but
+    # still orders once per (mesh, model): one streamed pass feeds every
+    # placement x affinity assembler (``build_traffic_streamed_multi``).
+    ordered_cache: Dict[tuple, list] = {}
     payload_cache: Dict[tuple, list] = {}
     shape_cache: Dict[tuple, list] = {}
+    # Autotuned drain schedule per shape class (``noc.tune`` winners);
+    # meshes missing from the table keep the grid's pinned constants.
+    if grid.tune_path:
+        from .tune import load_tuned, schedule_for
+        tuned = load_tuned(grid.tune_path)
+        drain_sched = lambda cfg: (  # noqa: E731
+            (s.chunk, s.compact_ratio)
+            if (s := schedule_for(cfg, tuned)) else (grid.chunk, 0.5))
+    else:
+        drain_sched = lambda cfg: (grid.chunk, 0.5)  # noqa: E731
     # MC placements of one mesh size share a compiled simulator when their
     # traffic shapes match; pad every member of a size group to the group's
     # max MC-stream count and max stream length. Placement never changes
@@ -337,9 +408,11 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
                     # The one-shot path reads the geometry off the
                     # payload arrays it needs anyway - probing all
                     # variants again would double the transform work.
-                    payload_cache[pkey] = ordered_payloads(
-                        layers, base_cfg.lanes, variants,
-                        max_packets_per_layer=grid.max_packets_per_layer)
+                    payload_cache[pkey] = cached_ordered_payloads(
+                        ordered_cache, model, layers, base_cfg.lanes,
+                        variants, axes,
+                        max_packets_per_layer=grid.max_packets_per_layer,
+                        timings=pack_by_tr)
                     shape_cache[pkey] = [(w.shape[1], w.shape[2])
                                          for w in payload_cache[pkey]]
             group = size_groups[(base_cfg.rows, base_cfg.cols,
@@ -376,18 +449,22 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
                    for pl in grid.placements
                    for aff in grid.affinity
                    for gcfg in (_place(c, pl),)])
-            parts = []
-            for (_, _, cfg), tbl in zip(placed, tables):
-                if streamed:
-                    traffic = build_traffic_streamed(
-                        layers, cfg, variants,
-                        chunk_packets=grid.stream_chunk_packets,
-                        num_streams=mc_pad, shapes=shapes, mc_table=tbl)
-                else:
-                    traffic = assemble_traffic(
-                        payload_cache[pkey], cfg, num_streams=mc_pad,
-                        num_variants=nv, mc_table=tbl)
-                parts.append(pad_traffic_length(traffic, t_pad))
+            if streamed:
+                # ONE ordering pass for every placement x affinity combo:
+                # the transform output is mesh-independent, so each chunk
+                # is ordered once and scattered into all combo layouts.
+                combo_traffics = build_traffic_streamed_multi(
+                    layers, [cfg for _, _, cfg in placed], variants,
+                    chunk_packets=grid.stream_chunk_packets,
+                    num_streams=mc_pad, shapes=shapes, mc_tables=tables)
+            else:
+                combo_traffics = [
+                    assemble_traffic(payload_cache[pkey], cfg,
+                                     num_streams=mc_pad, num_variants=nv,
+                                     mc_table=tbl)
+                    for (_, _, cfg), tbl in zip(placed, tables)]
+            parts = [pad_traffic_length(t, t_pad) for t in combo_traffics]
+            del combo_traffics
             traffic = _concat_lanes(parts)
             del parts
             mc_rows = np.stack(
@@ -403,12 +480,14 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
             inv = np.empty_like(order)
             inv[order] = np.arange(order.size)
             t1 = time.perf_counter()
+            d_chunk, d_ratio = drain_sched(placed[0][2])
             res_perm: List[SimResult] = simulate_batch(
                 placed[0][2], _take_lanes(traffic, order),
                 mc_nodes=mc_rows[order],
                 count_headers=grid.count_headers,
-                chunk=grid.chunk, max_cycles=grid.max_cycles,
-                check_conservation=check_conservation, devices=devs)
+                chunk=d_chunk, max_cycles=grid.max_cycles,
+                check_conservation=check_conservation, devices=devs,
+                backend=grid.backend, compact_ratio=d_ratio)
             results = [res_perm[inv[i]] for i in range(len(order))]
             t2 = time.perf_counter()
 
@@ -459,8 +538,9 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
                     placed[0][2], _take_lanes(rtraffic, rorder),
                     mc_nodes=pe_rows[rorder],
                     count_headers=grid.count_headers,
-                    chunk=grid.chunk, max_cycles=grid.max_cycles,
-                    check_conservation=check_conservation, devices=devs)
+                    chunk=d_chunk, max_cycles=grid.max_cycles,
+                    check_conservation=check_conservation, devices=devs,
+                    backend=grid.backend, compact_ratio=d_ratio)
                 rres = [rres_perm[rinv[i]] for i in range(len(rorder))]
             t3 = time.perf_counter()
 
@@ -547,6 +627,11 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
         "cells": len(rows),
         "shape_classes": classes,
         "packetize_s": round(pack_s, 4),
+        # Ordering seconds attributed per transform (one-shot payload-cache
+        # misses only; assembler/simulated time excluded) - lets an O3
+        # chain regression show up against the cheap O0-O2 permutes.
+        "packetize_by_transform": {k: round(v, 4)
+                                   for k, v in sorted(pack_by_tr.items())},
         "simulate_s": round(sim_s, 4),
         "wall_s": round(wall, 4),
         "stepped_cycles": stepped_cycles,

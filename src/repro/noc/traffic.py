@@ -41,7 +41,8 @@ from .topology import NocConfig
 from .sim import Traffic, META_PAYLOAD, META_TAIL
 
 __all__ = ["LayerTraffic", "build_traffic", "build_traffic_batch",
-           "build_traffic_streamed", "build_result_traffic", "layer_results",
+           "build_traffic_streamed", "build_traffic_streamed_multi",
+           "build_result_traffic", "layer_results",
            "result_values", "ordered_payloads", "ordered_payloads_streamed",
            "payload_shapes", "assemble_traffic", "TrafficAssembler",
            "stream_lengths", "pad_traffic_length", "stack_traffics",
@@ -577,16 +578,55 @@ def build_traffic_streamed(
         skeleton quantity stays elementwise in the global packet id, so
         the streamed path supports affinity unchanged).
     """
+    return build_traffic_streamed_multi(
+        layers, [cfg], variants, chunk_packets=chunk_packets,
+        num_streams=num_streams, max_packets_per_layer=max_packets_per_layer,
+        shapes=shapes, mc_tables=[mc_table])[0]
+
+
+def build_traffic_streamed_multi(
+    layers: Sequence[LayerTraffic],
+    cfgs: Sequence[NocConfig],
+    variants: Sequence[Variant],
+    *,
+    chunk_packets: int = 4096,
+    num_streams: Optional[int] = None,
+    max_packets_per_layer: Optional[int] = None,
+    shapes: Optional[Sequence[Tuple[int, int]]] = None,
+    mc_tables: Optional[Sequence] = None,
+) -> List[Traffic]:
+    """Streamed packetization for SEVERAL (config, mc_table) combos at once.
+
+    Ordering dominates streamed packetization and is mesh-independent (the
+    transform sees only packet payloads and the flit width), so one
+    :func:`ordered_payloads_streamed` pass feeds every combo's assembler -
+    each chunk is ordered once and scattered into all N stream layouts,
+    instead of the N full re-ordering passes N separate
+    :func:`build_traffic_streamed` calls would pay. All configs must share
+    the flit lane width (they are placement/affinity variants of one mesh
+    size in the sweep engine). Element i of the result is bit-identical to
+    ``build_traffic_streamed(layers, cfgs[i], ..., mc_table=mc_tables[i])``.
+    """
+    if not cfgs:
+        raise ValueError("need at least one config")
+    if len({c.lanes for c in cfgs}) != 1:
+        raise ValueError("streamed combos must share the flit lane width")
+    if mc_tables is None:
+        mc_tables = [None] * len(cfgs)
+    if len(mc_tables) != len(cfgs):
+        raise ValueError("mc_tables must match cfgs")
     if shapes is None:
-        shapes = payload_shapes(layers, cfg.lanes, variants,
+        shapes = payload_shapes(layers, cfgs[0].lanes, variants,
                                 max_packets_per_layer=max_packets_per_layer)
-    asm = TrafficAssembler(shapes, cfg, num_streams=num_streams,
-                           num_variants=len(variants), mc_table=mc_table)
+    asms = [TrafficAssembler(shapes, cfg, num_streams=num_streams,
+                             num_variants=len(variants), mc_table=tbl)
+            for cfg, tbl in zip(cfgs, mc_tables)]
     for li, start, words in ordered_payloads_streamed(
-            layers, cfg.lanes, variants, chunk_packets=chunk_packets,
+            layers, cfgs[0].lanes, variants, chunk_packets=chunk_packets,
             max_packets_per_layer=max_packets_per_layer):
-        asm.add_chunk(li, start, words)
-    return asm.finish()
+        for asm in asms:
+            asm.add_chunk(li, start, words)
+    return [asm.finish() for asm in asms]
 
 
 def build_traffic_batch(

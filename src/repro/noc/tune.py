@@ -1,0 +1,184 @@
+"""Autotuned drain scheduling: measure candidate chunk/compaction settings
+on a short pinned drain and persist the winner per shape class.
+
+``simulate_batch`` has two pure scheduling knobs - the compiled chunk length
+and the lane-compaction trigger ``compact_ratio`` - that trade dispatch
+round-trips against wasted cycles on retired lanes. The right point depends
+on the shape class (mesh size x stream count decide both the step cost and
+how spread-out the per-variant drain cycles are), so instead of hand-pinned
+constants the sweep can consult a measured table.
+
+The candidate set follows the ``launch/hillclimb.py`` idiom: a small dict of
+*named* variants, each encoding one scheduling hypothesis, run against the
+same pinned drain. Every candidate is bit-identity-pinned against the first
+(``total_bt``/``drain_cycle`` must match exactly - these knobs may only move
+wall clock), so a tuning run doubles as a scheduling-invariance test.
+
+Winners persist as JSON (:data:`DEFAULT_PATH`) keyed by
+:func:`shape_class`; ``SweepGrid(tune_path=...)`` makes ``run_sweep`` apply
+them per mesh. Run directly::
+
+    PYTHONPATH=src python -m repro.noc.tune [mesh ...]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Dict, Optional, Sequence
+
+from .topology import NocConfig, mesh_by_name
+
+__all__ = ["DrainSchedule", "CANDIDATES", "DEFAULT_PATH", "shape_class",
+           "autotune_drain", "load_tuned", "save_tuned", "schedule_for"]
+
+DEFAULT_PATH = "experiments/tune/drain.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class DrainSchedule:
+    """One named scheduling candidate: pure wall-clock knobs, no effect on
+    any simulated quantity."""
+    name: str
+    chunk: int
+    compact_ratio: float
+
+
+# (name -> schedule) - names match the tuning-log hypotheses:
+# H1 fine:    shorter chunks read drain bookkeeping sooner, so early-drained
+#             lanes stop burning steps; wins when drain cycles are spread.
+# H2 pinned:  the hand-pinned sweep constants (control).
+# H3 coarse:  longer chunks amortize dispatch/readback round-trips and skip
+#             most compactions; wins when lanes drain close together.
+CANDIDATES: Dict[str, DrainSchedule] = {
+    "fine": DrainSchedule("fine", chunk=512, compact_ratio=0.5),
+    "pinned": DrainSchedule("pinned", chunk=2048, compact_ratio=0.5),
+    "coarse": DrainSchedule("coarse", chunk=8192, compact_ratio=0.25),
+}
+
+
+def shape_class(cfg: NocConfig) -> str:
+    """Shape-class key for the tuned table - one compiled simulator (and
+    one batched drain) per mesh geometry, matching the sweep's grouping."""
+    return f"{cfg.rows}x{cfg.cols}_mc{cfg.num_mcs}"
+
+
+def autotune_drain(cfg: NocConfig, traffic, *,
+                   candidates: Optional[Dict[str, DrainSchedule]] = None,
+                   backend: str = "auto", max_cycles: int = 2_000_000,
+                   repeats: int = 2) -> dict:
+    """Time every candidate schedule on one pinned batched drain.
+
+    ``traffic`` must carry a leading variants axis (a short
+    ``build_traffic_batch`` drain is enough - the schedule only depends on
+    step cost and drain spread, not on total volume). Each candidate runs
+    ``repeats`` times after a warm-up pass that also pins bit-identity
+    against the first candidate; the best wall time wins.
+
+    Returns ``{"shape_class", "timings": {name: seconds}, "winner",
+    "chunk", "compact_ratio"}`` - the exact record :func:`save_tuned`
+    persists.
+    """
+    from .sim import simulate_batch
+
+    cands = dict(candidates if candidates is not None else CANDIDATES)
+    if not cands:
+        raise ValueError("need at least one candidate schedule")
+    timings: Dict[str, float] = {}
+    pin = None
+    for name, sched in cands.items():
+        run = lambda: simulate_batch(  # noqa: E731
+            cfg, traffic, chunk=sched.chunk,
+            compact_ratio=sched.compact_ratio, backend=backend,
+            max_cycles=max_cycles)
+        res = run()                     # warm-up; compiles this chunk size
+        got = [(r.total_bt, r.drain_cycle) for r in res]
+        if pin is None:
+            pin = got
+        elif got != pin:
+            raise RuntimeError(
+                f"candidate {name!r} changed simulated results: {got} "
+                f"vs {pin} - drain scheduling must be bit-identical")
+        best = float("inf")
+        for _ in range(max(1, repeats)):
+            t0 = time.perf_counter()
+            run()
+            best = min(best, time.perf_counter() - t0)
+        timings[name] = best
+    winner = min(timings, key=timings.get)
+    return {"shape_class": shape_class(cfg),
+            "timings": {k: round(v, 4) for k, v in timings.items()},
+            "winner": winner,
+            "chunk": cands[winner].chunk,
+            "compact_ratio": cands[winner].compact_ratio}
+
+
+def load_tuned(path: str = DEFAULT_PATH) -> Dict[str, dict]:
+    """Tuned table (shape class -> record); empty when no file yet."""
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        return json.load(f)
+
+
+def save_tuned(record: dict, path: str = DEFAULT_PATH) -> Dict[str, dict]:
+    """Merge one :func:`autotune_drain` record into the persisted table."""
+    table = load_tuned(path)
+    table[record["shape_class"]] = {
+        k: record[k] for k in ("winner", "chunk", "compact_ratio", "timings")}
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(table, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return table
+
+
+def schedule_for(cfg: NocConfig,
+                 table: Dict[str, dict]) -> Optional[DrainSchedule]:
+    """The persisted winner for ``cfg``'s shape class, or None."""
+    rec = table.get(shape_class(cfg))
+    if rec is None:
+        return None
+    return DrainSchedule(rec["winner"], int(rec["chunk"]),
+                         float(rec["compact_ratio"]))
+
+
+def _pinned_drain(cfg: NocConfig, max_packets: int):
+    """Short deterministic drain: LeNet O0/O1/O2 float32 variants."""
+    from benchmarks.fig12 import lenet_layers
+    from repro.core.wire import by_name
+    from .traffic import build_traffic_batch
+
+    layers = lenet_layers(glyph_seed=7, trained=True)
+    variants = [(by_name(n, tiebreak="pattern"), None)
+                for n in ("O0", "O1", "O2")]
+    return build_traffic_batch(layers, cfg, variants,
+                               max_packets_per_layer=max_packets)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("meshes", nargs="*", default=["4x4_mc2", "8x8_mc4"],
+                    help="PAPER_NOCS names / RxC_mcN specs to tune")
+    ap.add_argument("--out", default=DEFAULT_PATH)
+    ap.add_argument("--max-packets", type=int, default=8,
+                    help="per-layer packet budget of the pinned drain")
+    ap.add_argument("--backend", default="auto")
+    args = ap.parse_args(argv)
+
+    for name in args.meshes:
+        cfg = mesh_by_name(name)
+        rec = autotune_drain(cfg, _pinned_drain(cfg, args.max_packets),
+                             backend=args.backend)
+        save_tuned(rec, args.out)
+        times = " ".join(f"{k}={v}s" for k, v in rec["timings"].items())
+        print(f"[ok] {rec['shape_class']}: winner={rec['winner']} "
+              f"(chunk={rec['chunk']} ratio={rec['compact_ratio']}) {times}",
+              flush=True)
+
+
+if __name__ == "__main__":
+    main()

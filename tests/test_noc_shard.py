@@ -67,6 +67,30 @@ def test_sharded_sweep_matches_unsharded(workload):
     assert strip(auto.rows) == strip(single.rows)
 
 
+@multi_device
+def test_mesh_spec_devices_bit_identical(workload):
+    """devices= also accepts a 1-D jax.sharding.Mesh directly (the
+    dist.sharding mesh-spec contract); results match the device-list path
+    exactly, and a 2-D mesh is rejected."""
+    from jax.sharding import Mesh
+
+    _, cfg, batch = workload
+    mesh = Mesh(np.asarray(jax.local_devices()), ("lanes",))
+    shard = simulate_batch(cfg, batch, chunk=128, devices=mesh)
+    plain = simulate_batch(cfg, batch, chunk=128,
+                           devices=jax.local_devices())
+    for s, p in zip(shard, plain):
+        assert s.total_bt == p.total_bt
+        assert s.drain_cycle == p.drain_cycle
+        assert np.array_equal(s.link_bt, p.link_bt)
+
+    ndev = jax.local_device_count()
+    bad = Mesh(np.asarray(jax.local_devices()).reshape(ndev // 2, 2),
+               ("a", "b"))
+    with pytest.raises(ValueError, match="1-D device mesh"):
+        simulate_batch(cfg, batch, chunk=128, devices=bad)
+
+
 def test_single_device_fallback(workload):
     """devices=None and a 1-device list take the plain vmapped runner."""
     _, cfg, batch = workload

@@ -182,6 +182,53 @@ def test_sweep_grid_end_to_end(tmp_path):
     assert blob["grid"]["meshes"] == ["2x2_mc1"]
 
 
+def test_ordered_payload_cache_hit_bit_identical(lenet_layers):
+    """Cache-hit path through run_sweep == cold path: a two-mesh grid (the
+    second mesh reuses the first's cached orderings, as do every placement
+    x affinity lane) produces rows identical to per-mesh cold sweeps."""
+    kw = dict(transforms=("O0", "O2"), tiebreaks=("pattern",),
+              precisions=("fixed8",), placements=("edge", "interleaved"),
+              affinity=("roundrobin", "nearest"),
+              max_packets_per_layer=6, chunk=CHUNK)
+    fn = lambda _name: lenet_layers  # noqa: E731
+    warm = run_sweep(SweepGrid(meshes=("4x4_mc2", "4x4_mc4"), **kw), fn)
+    cold = (run_sweep(SweepGrid(meshes=("4x4_mc2",), **kw), fn).rows
+            + run_sweep(SweepGrid(meshes=("4x4_mc4",), **kw), fn).rows)
+    skip = {"result_bt", "result_cycles", "result_flits"}
+    for w, c in zip(warm.rows, cold):
+        for k in w:
+            if k not in skip:
+                assert w[k] == c[k], (w["mesh"], w["transform"], k)
+
+
+def test_ordered_payload_cache_distinct_keys(lenet_layers):
+    """Negative: distinct precisions/tiebreaks never share a cache entry,
+    and every entry equals the uncached ordering pass bit for bit."""
+    from repro.noc.sweep import _QUANTIZERS, cached_ordered_payloads
+    from repro.noc.traffic import ordered_payloads
+
+    layers = [lenet_layers[-1]]
+    axes = [("float32", "stable", "O2"), ("float32", "pattern", "O2"),
+            ("fixed8", "stable", "O2"), ("fixed8", "stable", "O1")]
+    variants = [(by_name(tr, tiebreak=tb), _QUANTIZERS[prec])
+                for prec, tb, tr in axes]
+    cache = {}
+    stacks = cached_ordered_payloads(cache, "lenet", layers, 8, variants,
+                                     axes, max_packets_per_layer=4)
+    # 4 distinct (transform, precision) combos -> 4 distinct entries, even
+    # though every variant shares the O-family and most share "O2".
+    assert len(cache) == 4
+    want = ordered_payloads(layers, 8, variants, max_packets_per_layer=4)
+    for got, exp in zip(stacks, want):
+        np.testing.assert_array_equal(got, exp)
+    # A repeat call is pure cache hits: no new entries, identical bits.
+    again = cached_ordered_payloads(cache, "lenet", layers, 8, variants,
+                                    axes, max_packets_per_layer=4)
+    assert len(cache) == 4
+    for got, exp in zip(again, want):
+        np.testing.assert_array_equal(got, exp)
+
+
 def test_sweep_grid_validation():
     with pytest.raises(ValueError, match="baseline"):
         SweepGrid(transforms=("O1",), baseline="O0")
