@@ -23,7 +23,7 @@ import traceback
 from . import (table1, fig1_expectation, fig10_11, fig12, fig13,
                table2_power, darknet_full, kernel_backend,
                ordered_collectives, ordering_throughput, roofline,
-               static_layout, step_overhaul)
+               serving, static_layout, step_overhaul)
 
 SUITES = {
     "table1": table1.main,                    # Tab. I: BT reduction w/o NoC
@@ -41,6 +41,7 @@ SUITES = {
     "ordering_throughput": ordering_throughput.main,
     "roofline": roofline.main,                # from dry-run artifacts
     "static_layout": static_layout.main,      # trained-vs-random layouts
+    "serving": serving.main,                  # closed-loop: latency vs load
 }
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_noc.json")

@@ -1,0 +1,108 @@
+"""Closed-loop serving suite: steady-state latency/throughput under load.
+
+The offline figures price a transform by its BT; this suite prices the
+*service*: back-to-back inferences stream through the mesh under an
+offered-load arrival process, each PE's result injection gated on its own
+request delivery plus a compute latency (``repro.noc.online``). Per
+offered-load point the suite records p50/p99/mean inference latency and
+measured throughput; per combo it records the back-to-back saturation
+throughput and joins the per-transform BT (O0..O3a) from the offline sweep
+rows - by the gating contract the timing axis is transform-independent, so
+one gated drain per load point prices the whole transform family.
+
+Hard assertions (the suite fails rather than record nonsense): every gated
+drain conserves its packets, and p50 latency is monotonically
+non-decreasing along the offered-load axis of every combo.
+
+``REPRO_BENCH_SMOKE=1`` shrinks to random-init LeNet on 4x4/MC2 with two
+load points - the CI gate for the closed-loop path.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.data import glyph_batch
+from repro.noc import SweepGrid, run_serving
+
+from ._trained import get_trained, random_params
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments")
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+def _layers(name: str):
+    if SMOKE:
+        model, params = random_params(name)
+    else:
+        model, params, _ = get_trained(name)
+    hw, ch = model.input_shape[0], model.input_shape[-1]
+    x, _ = glyph_batch(jax.random.PRNGKey(11), 1, hw=hw, channels=ch)
+    return model.layer_traffic(params, x[0])
+
+
+def _grid() -> SweepGrid:
+    return SweepGrid(
+        meshes=("4x4_mc2",) if SMOKE else ("4x4_mc2", "8x8_mc4"),
+        transforms=("O0", "O1", "O2") if SMOKE
+        else ("O0", "O1", "O2", "O3", "O3a"),
+        tiebreaks=("pattern",),
+        precisions=("fixed8",),
+        models=("lenet",),
+        max_packets_per_layer=12 if SMOKE else 40,
+        result_phase=True,
+        offered_loads=(2.0, 8.0) if SMOKE else (1.0, 2.0, 4.0, 8.0, 16.0),
+        serving_inferences=4 if SMOKE else 16,
+        compute_latency=32,
+        arrival="uniform",
+        chunk=1024)
+
+
+def main() -> dict:
+    grid = _grid()
+    layers = _layers(grid.models[0])
+    layers_fn = lambda _name: layers         # noqa: E731 - one shared load
+
+    out_path = os.path.join(OUT, "serving.json")
+    report = run_serving(grid, layers_fn, out_path=out_path,
+                         check_conservation=True)
+    srv = report.stats["serving"]
+
+    bad = [c for c in srv["combos"] if not c["latency_monotone"]]
+    if bad:
+        raise AssertionError(
+            "p50 latency not monotone in offered load for combos: "
+            + ", ".join(f"{c['mesh']}/{c['model']}" for c in bad))
+
+    for p in srv["points"]:
+        print(f"serving/{p['mesh']}/{p['model']}/load{p['offered_load']:g},"
+              f"{p['p50_latency']},p99={p['p99_latency']} "
+              f"tput={p['throughput']:.2f}")
+    for c in srv["combos"]:
+        print(f"serving/{c['mesh']}/{c['model']}/saturation,"
+              f"{c['saturation_tput']:.2f},"
+              f"monotone={c['latency_monotone']}")
+
+    bench = {
+        "offered_loads": srv["offered_loads"],
+        "inferences": srv["inferences"],
+        "compute_latency": srv["compute_latency"],
+        "arrival": srv["arrival"],
+        "conservation_checked": srv["conservation_checked"],
+        "points": [
+            {k: p[k] for k in ("mesh", "model", "offered_load",
+                               "throughput", "p50_latency", "p99_latency",
+                               "completed", "truncated")}
+            for p in srv["points"]],
+        "combos": [
+            {k: c[k] for k in ("mesh", "model", "saturation_tput",
+                               "latency_monotone", "transforms")}
+            for c in srv["combos"]],
+        "serving_s": srv["serving_s"],
+    }
+    return {"results": srv, "bench": bench}
+
+
+if __name__ == "__main__":
+    main()

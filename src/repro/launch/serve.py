@@ -2,6 +2,16 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m --reduced \
         --batch 4 --prompt-len 32 --max-new 16
+
+With ``--offered-load`` the driver switches from one batched call to an
+arrival-driven serving loop: requests arrive per the same
+:class:`repro.noc.online.ArrivalProcess` the NoC closed-loop simulator
+uses (one "cycle" = one millisecond, so the load unit is requests per
+second), each is generated on arrival, and the run reports p50/p99/mean
+request latency plus measured throughput:
+
+    PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m --reduced \
+        --offered-load 4 --num-requests 16 --arrival poisson
 """
 from __future__ import annotations
 
@@ -10,10 +20,60 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get
 from repro.models.spec import init_params
 from repro.serve import Engine, GenerationConfig
+
+
+def serve_offered_load(engine: Engine, prompts: jax.Array,
+                       gen: GenerationConfig, *, load: float,
+                       arrival: str = "uniform", seed: int = 0,
+                       pace: bool = True):
+    """Arrival-driven serving loop: request ``k`` (row ``k`` of
+    ``prompts``) arrives at its :class:`~repro.noc.online.ArrivalProcess`
+    time (milliseconds; ``load`` is requests/second) and is generated on
+    arrival. Returns ``(outputs, stats)`` where stats carries the p50/p99
+    latency summary (:func:`repro.noc.online.latency_percentiles`, in ms)
+    and the measured throughput in requests/second.
+
+    ``pace=False`` skips the wall-clock sleeps and instead replays the
+    arrival schedule analytically (start = max(arrival, previous finish)),
+    which keeps tests fast and deterministic in shape.
+    """
+    from repro.noc.online import ArrivalProcess, latency_percentiles
+
+    n = int(prompts.shape[0])
+    arrivals = ArrivalProcess(arrival, load, seed).times(n)
+    outputs = []
+    latencies = []
+    t0 = time.perf_counter()
+    clock = 0.0                      # analytic clock (ms) when not pacing
+    for k in range(n):
+        arr_ms = float(arrivals[k])
+        if pace:
+            lag = arr_ms / 1000.0 - (time.perf_counter() - t0)
+            if lag > 0:
+                time.sleep(lag)
+        tic = time.perf_counter()
+        out = engine.generate(prompts[k:k + 1], gen,
+                              key=jax.random.PRNGKey(seed + k))
+        jax.block_until_ready(out)
+        outputs.append(out)
+        service_ms = (time.perf_counter() - tic) * 1000.0
+        if pace:
+            end_ms = (time.perf_counter() - t0) * 1000.0
+        else:
+            clock = max(clock, arr_ms) + service_ms
+            end_ms = clock
+        latencies.append(int(round(end_ms - arr_ms)))
+    stats = latency_percentiles(np.asarray(latencies, np.int64))
+    span_ms = max(1e-9, (time.perf_counter() - t0) * 1000.0)
+    stats["throughput_rps"] = n * 1000.0 / span_ms
+    stats["offered_load"] = load
+    stats["arrival"] = arrival
+    return outputs, stats
 
 
 def main():
@@ -26,6 +86,15 @@ def main():
     ap.add_argument("--context", type=int, default=128)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sync-every", type=int, default=8,
+                    help="decode steps between host done-checks")
+    ap.add_argument("--offered-load", type=float, default=None,
+                    help="requests/second; enables the arrival-driven loop")
+    ap.add_argument("--num-requests", type=int, default=8,
+                    help="requests in the arrival-driven loop")
+    ap.add_argument("--arrival", default="uniform",
+                    choices=("uniform", "poisson", "backtoback"))
+    ap.add_argument("--arrival-seed", type=int, default=0)
     args = ap.parse_args()
 
     arch = get(args.arch)
@@ -35,15 +104,34 @@ def main():
         raise SystemExit("use the transcription example for enc-dec archs")
 
     params = init_params(model.specs(), jax.random.PRNGKey(args.seed))
-    prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
-                                 (args.batch, args.prompt_len), 0, cfg.vocab)
     if getattr(cfg, "vlm_prefix", 0):
         raise SystemExit("use the VLM example for vision archs")
 
     engine = Engine(model, params, context=args.context)
+    gen = GenerationConfig(max_new_tokens=args.max_new,
+                           temperature=args.temperature,
+                           sync_every=args.sync_every)
+
+    if args.offered_load is not None:
+        prompts = jax.random.randint(
+            jax.random.PRNGKey(args.seed + 1),
+            (args.num_requests, args.prompt_len), 0, cfg.vocab)
+        # warm the compile cache so the first arrival isn't charged for it
+        jax.block_until_ready(engine.generate(prompts[:1], gen))
+        outs, stats = serve_offered_load(
+            engine, prompts, gen, load=args.offered_load,
+            arrival=args.arrival, seed=args.arrival_seed)
+        print(f"served {len(outs)} requests at offered load "
+              f"{args.offered_load}/s ({args.arrival}): "
+              f"p50={stats['p50']}ms p99={stats['p99']}ms "
+              f"mean={stats['mean']:.1f}ms "
+              f"tput={stats['throughput_rps']:.2f} req/s")
+        return
+
+    prompts = jax.random.randint(jax.random.PRNGKey(args.seed + 1),
+                                 (args.batch, args.prompt_len), 0, cfg.vocab)
     t0 = time.time()
-    out = engine.generate(prompts, GenerationConfig(
-        max_new_tokens=args.max_new, temperature=args.temperature))
+    out = engine.generate(prompts, gen)
     dt = time.time() - t0
     toks = out.size
     print(f"generated {out.shape} tokens in {dt:.2f}s "

@@ -9,7 +9,10 @@ from .traffic import (LayerTraffic, build_traffic, build_traffic_batch,
                       build_traffic_streamed, build_result_traffic,
                       layer_results, conv_layer_traffic,
                       linear_layer_traffic)
-from .sweep import SweepGrid, SweepReport, run_sweep, recovery_overhead_bits
+from .sweep import (SweepGrid, SweepReport, run_sweep, run_serving,
+                    recovery_overhead_bits)
+from .online import (ArrivalProcess, OnlineResult, simulate_online,
+                     latency_percentiles, percentile)
 from . import power
 
 __all__ = [
@@ -21,6 +24,9 @@ __all__ = [
     "LayerTraffic", "build_traffic", "build_traffic_batch",
     "build_traffic_streamed", "build_result_traffic", "layer_results",
     "conv_layer_traffic", "linear_layer_traffic",
-    "SweepGrid", "SweepReport", "run_sweep", "recovery_overhead_bits",
+    "SweepGrid", "SweepReport", "run_sweep", "run_serving",
+    "recovery_overhead_bits",
+    "ArrivalProcess", "OnlineResult", "simulate_online",
+    "latency_percentiles", "percentile",
     "power",
 ]

@@ -1,0 +1,467 @@
+"""Closed-loop (online) serving model: overlapped phases under load.
+
+The offline simulator drains one inference's request (MC->PE) and result
+(PE->MC) traffic as two independent one-shot phases and leaves the overlap
+question open (the old DESIGN.md "Result phase" caveat). This module closes
+the loop:
+
+* **Per-PE gating.** A PE may start injecting inference k's results only
+  after the request phase delivered *that PE's* last request packet of
+  inference k, plus a per-PE compute latency - the compute/communication
+  interaction the offline model elides.
+* **Back-to-back inferences.** An arrival process (:class:`ArrivalProcess`,
+  the offered-load axis) releases inference k's request flits at
+  ``arrival[k]``; inference k+1's distribution overlaps inference k's
+  results in the mesh.
+* **Per-packet timestamps.** The gated drains run with the simulator's
+  timestamp ledgers (``noc.sim`` ``timestamps=True``): each packet's
+  NI-injection and ejection cycles are harvested into per-inference
+  completion times and latency percentiles.
+
+The gating contract (DESIGN.md "Closed-loop serving"):
+
+* **Timing is schedule-determined.** Drain dynamics (routing, credits,
+  arbitration) never read payload *values*, so the gated schedule's
+  timing - and therefore every latency/throughput figure here - is
+  identical across ordering transforms and precisions of one workload.
+  One gated drain per offered-load point prices the whole transform axis.
+* **BT is data-determined.** The per-phase BT the closed loop *reports*
+  (``OnlineResult.request`` / ``.result``) is the canonical per-inference
+  phase drain - bit-identical to the offline ``simulate`` phases at any
+  compute latency, which is what keeps serving-row BT comparable with
+  every offline figure in the repo. Request and result traffic ride
+  disjoint virtual networks (the standard request/reply protocol-deadlock
+  separation), so the per-phase recorders are well defined. The gated
+  drains' own recorders stay available (``sched_request``/``sched_result``:
+  they include inter-inference seam transitions and stall/resume
+  interleavings) but are a different measurement, not the reported one.
+
+Mechanically the gate is a thin wrapper over the fused step: a stream's
+*effective length* at cycle c is the number of flits its release schedule
+has unlocked, and the step's own ``ptr < length`` injection guard does the
+rest - the router pipeline, recorders, and ledgers are the proven offline
+step, byte for byte. With every gate open from cycle 0 the wrapped step is
+the offline step (the oracle test pins this bit-for-bit).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .sim import (META_TAIL, SimResult, Traffic, Wire, _conservation_error,
+                  _make_step, _mc_array, _mesh_key, _result, fuse_traffic,
+                  make_state)
+from .topology import NocConfig
+from .traffic import concat_inferences
+
+__all__ = ["ArrivalProcess", "OnlineResult", "simulate_online",
+           "percentile", "latency_percentiles", "ARRIVAL_KINDS"]
+
+ARRIVAL_KINDS = ("uniform", "poisson", "backtoback")
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrivalProcess:
+    """Deterministic offered-load arrival process (cycles are the clock).
+
+    kind: ``uniform`` spaces arrivals ``1000 / load`` cycles apart,
+        ``poisson`` draws exponential gaps from a PCG64 stream seeded by
+        ``seed`` (bit-reproducible: the same seed replays the same
+        process), ``backtoback`` releases everything at cycle 0 - the
+        saturation probe.
+    load: offered load in inferences per 1000 cycles (ignored by
+        ``backtoback``).
+    """
+
+    kind: str = "uniform"
+    load: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in ARRIVAL_KINDS:
+            raise ValueError(f"kind must be one of {ARRIVAL_KINDS}, "
+                             f"got {self.kind!r}")
+        if self.kind != "backtoback" and not self.load > 0:
+            raise ValueError(f"offered load must be > 0, got {self.load!r}")
+
+    def times(self, n: int) -> np.ndarray:
+        """Arrival cycles of inferences ``0..n-1`` (non-decreasing int64;
+        the first arrival is cycle 0)."""
+        if n < 1:
+            raise ValueError(f"need n >= 1 inferences, got {n}")
+        if self.kind == "backtoback":
+            return np.zeros(n, np.int64)
+        mean_gap = 1000.0 / self.load
+        if self.kind == "uniform":
+            return np.floor(np.arange(n) * mean_gap).astype(np.int64)
+        rng = np.random.Generator(np.random.PCG64(self.seed))
+        gaps = rng.exponential(mean_gap, size=n - 1) if n > 1 else []
+        return np.concatenate(
+            [[0], np.floor(np.cumsum(gaps))]).astype(np.int64)
+
+
+class _GatedWire(NamedTuple):
+    """Fused wire plus its release schedule.
+
+    inc:     (M, K) int32 - flits gate k unlocks on stream m
+    release: (M, K) int32 - cycle gate k opens on stream m (non-decreasing
+             along K; gates whose flits must stay locked forever use
+             a sentinel far beyond max_cycles)
+    """
+
+    wire: jax.Array
+    length: jax.Array
+    inc: jax.Array
+    release: jax.Array
+
+
+def _make_online_step(mesh_key, count_headers: bool):
+    """The gated step: effective stream length = flits released by now."""
+    base = _make_step(mesh_key, count_headers, track=True, timestamps=True)
+
+    def step(state, gwire: _GatedWire, mc_nodes):
+        eff = jnp.sum(
+            jnp.where(gwire.release <= state.cycle, gwire.inc, 0),
+            axis=-1).astype(jnp.int32)
+        return base(state, Wire(gwire.wire, eff), mc_nodes)
+
+    return step
+
+
+@functools.lru_cache(maxsize=None)
+def _online_runner(mesh_key, count_headers: bool, chunk: int):
+    """Compiled ``chunk``-cycle gated driver, cached like ``_chunk_runner``
+    (one executable per (state, wire, schedule) shape signature)."""
+    step = _make_online_step(mesh_key, count_headers)
+
+    def run(state, gwire: _GatedWire, mc_nodes):
+        def body(s, _):
+            return step(s, gwire, mc_nodes), ()
+        out, _ = jax.lax.scan(body, state, None, length=chunk)
+        return out, out.ejected
+
+    return jax.jit(run, donate_argnums=0)
+
+
+def _drain_gated(cfg: NocConfig, traffic: Traffic, mc_nodes: np.ndarray,
+                 release: np.ndarray, inc: np.ndarray, *,
+                 count_headers: bool, chunk: int, max_cycles: int,
+                 allow_truncation: bool):
+    """Drain ``traffic`` under a release schedule; harvest the ledgers.
+
+    Returns ``(sim_result, inj_time, eject_time, eject_pkt, drained)`` with
+    the ledgers as host arrays over the real packet ids. The gated step's
+    own ``drained_at`` is meaningless mid-gate (its completion test sees
+    only released flits), so ``drain_cycle`` is rebuilt from the ejection
+    ledger: the cycle after the last tail ejected.
+    """
+    m = int(traffic.length.shape[0])
+    npkt = int(traffic.num_packets)
+    if npkt <= 0:
+        raise ValueError("gated drains need Traffic with num_packets set")
+    state = make_state(cfg, m, npkt=npkt, timestamps=True)
+    wire = fuse_traffic(traffic, track_pkt=True)
+    gwire = _GatedWire(wire.wire, wire.length,
+                       jnp.asarray(inc, jnp.int32),
+                       jnp.asarray(release, jnp.int32))
+    run = _online_runner(_mesh_key(cfg), count_headers, chunk)
+    nodes = jnp.asarray(mc_nodes, jnp.int32)
+    total = int(np.sum(np.asarray(traffic.length)))
+    drained = total == 0
+    while total:
+        state, ej = run(state, gwire, nodes)
+        if int(ej) == total:
+            drained = True
+            break
+        if int(state.cycle) >= max_cycles:
+            break
+    if not drained and not allow_truncation:
+        raise RuntimeError(
+            f"closed-loop drain incomplete: {int(state.ejected)}/{total} "
+            f"flits ejected after {int(state.cycle)} cycles")
+    inj_t = np.asarray(state.inj_time)[:npkt]
+    ej_t = np.asarray(state.eject_time)[:npkt]
+    drain_cycle = int(ej_t.max()) + 1 if (ej_t >= 0).any() else 0
+    res = _result(cfg, (np.asarray(state.link_bt),
+                        np.asarray(state.link_flits),
+                        np.asarray(state.inj_bt), state.ejected, state.cycle,
+                        np.int32(drain_cycle)), total)
+    return res, inj_t, ej_t, np.asarray(state.eject_pkt), drained
+
+
+def _packet_dest(traffic: Traffic) -> np.ndarray:
+    """Destination router per packet id of an unbatched Traffic (-1 for
+    ids that never appear - there are none for packetizer-built traffic)."""
+    npkt = int(traffic.num_packets)
+    dest = np.asarray(traffic.dest)
+    meta = np.asarray(traffic.meta)
+    pkt = np.asarray(traffic.pkt)
+    valid = (np.arange(dest.shape[1])[None, :]
+             < np.asarray(traffic.length)[:, None])
+    tails = valid & ((meta & META_TAIL) > 0)
+    out = np.full(npkt, -1, np.int64)
+    out[pkt[tails]] = dest[tails]
+    return out
+
+
+@dataclasses.dataclass
+class OnlineResult:
+    """One closed-loop run: per-inference timing plus per-phase BT.
+
+    completions[k] is the cycle after inference k's last result tail
+    ejected, or -1 while still in flight at the cutoff (truncated runs
+    only); latencies[k] = completions[k] - arrivals[k] (or -1). The
+    ``request``/``result`` SimResults are the canonical per-inference
+    phase drains (the BT contract - ``None`` under ``record_bt=False``);
+    ``sched_request``/``sched_result`` are the gated schedule drains whose
+    timing every latency figure comes from.
+    """
+
+    arrivals: np.ndarray            # (K,) int64 arrival cycles
+    completions: np.ndarray         # (K,) int64; -1 = in flight at cutoff
+    latencies: np.ndarray           # (K,) int64; -1 = in flight at cutoff
+    truncated: int                  # inferences still in flight at cutoff
+    request_drain_cycle: int        # gated request-network drain
+    result_drain_cycle: int         # gated result-network drain
+    delivery: np.ndarray            # (K, NR) per-router request delivery
+    release: np.ndarray             # (P, K) result-injection release cycles
+    compute_latency: np.ndarray     # (P,) per-PE-stream compute cycles
+    sched_request: SimResult
+    sched_result: Optional[SimResult]
+    request: Optional[SimResult]    # canonical request phase (BT contract)
+    result: Optional[SimResult]
+    request_inj_time: np.ndarray    # (K * NP_req,) per-packet ledgers
+    request_eject_time: np.ndarray
+    result_inj_time: np.ndarray
+    result_eject_time: np.ndarray
+
+    @property
+    def completed(self) -> int:
+        return int((self.completions >= 0).sum())
+
+    @property
+    def throughput(self) -> Optional[float]:
+        """Completed inferences per 1000 cycles over the busy span."""
+        done = self.completions[self.completions >= 0]
+        if not done.size:
+            return None
+        span = int(done.max()) - int(self.arrivals.min())
+        return float(done.size) * 1000.0 / max(span, 1)
+
+
+def simulate_online(cfg: NocConfig, request: Traffic, result: Traffic, *,
+                    arrivals: Union[ArrivalProcess, Sequence[int]],
+                    num_inferences: Optional[int] = None,
+                    compute_latency: Union[int, Sequence[int]] = 0,
+                    count_headers: bool = True, chunk: int = 2048,
+                    max_cycles: int = 2_000_000,
+                    check_conservation: bool = False,
+                    allow_truncation: bool = False,
+                    record_bt: bool = True) -> OnlineResult:
+    """Closed-loop drain of ``num_inferences`` back-to-back inferences.
+
+    request / result: ONE inference's unbatched phase traffics (e.g.
+        ``build_traffic(...)`` and ``build_result_traffic(...).variant(i)``)
+        with ``num_packets`` metadata. The result traffic's streams follow
+        the ``build_result_traffic`` convention: stream i injects at
+        ``cfg.pe_nodes[i]`` (padding streams beyond the PE count must be
+        empty).
+    arrivals: an :class:`ArrivalProcess` (needs ``num_inferences``) or an
+        explicit non-decreasing sequence of arrival cycles, one per
+        inference.
+    compute_latency: cycles between a PE receiving its last request packet
+        of an inference and releasing that inference's results - a scalar,
+        or one value per PE stream.
+    allow_truncation: return partial results when ``max_cycles`` hits with
+        inferences in flight (their completions/latencies are -1 and
+        ``truncated`` counts them) instead of raising - the saturation
+        probe's contract. Phase BT and conservation are only meaningful on
+        fully drained runs, so ``record_bt``/``check_conservation`` apply
+        as usual only when everything drained.
+    record_bt: also run the canonical per-inference phase drains and attach
+        them as ``request``/``result`` (the reported-BT contract). Skip in
+        load sweeps that join BT from an offline sweep instead.
+    """
+    if isinstance(arrivals, ArrivalProcess):
+        if num_inferences is None:
+            raise ValueError("ArrivalProcess arrivals need num_inferences")
+        arr = arrivals.times(num_inferences)
+    else:
+        arr = np.asarray(arrivals, np.int64)
+        if arr.ndim != 1 or not arr.size:
+            raise ValueError("arrivals must be a non-empty 1-D sequence")
+        if num_inferences is not None and num_inferences != arr.size:
+            raise ValueError(f"num_inferences={num_inferences} disagrees "
+                             f"with {arr.size} explicit arrivals")
+    if (np.diff(arr) < 0).any() or arr[0] < 0:
+        raise ValueError("arrival cycles must be non-negative and "
+                         "non-decreasing")
+    k = int(arr.size)
+
+    m_req = int(request.length.shape[0])
+    req_nodes = np.asarray(_mc_array(cfg, request, m_req, batched=False))
+    m_res = int(result.length.shape[0])
+    pes = np.asarray(cfg.pe_nodes, np.int64)
+    if m_res < pes.size:
+        raise ValueError(f"result traffic has {m_res} streams, config has "
+                         f"{pes.size} PEs")
+    if m_res > pes.size and np.asarray(result.length)[pes.size:].any():
+        raise ValueError("result streams beyond the PE count must be empty "
+                         "padding")
+    res_nodes = np.concatenate(
+        [pes, np.zeros(m_res - pes.size, np.int64)]).astype(np.int32)
+    lat = np.broadcast_to(
+        np.asarray(compute_latency, np.int64), (m_res,)).copy()
+    if (lat < 0).any():
+        raise ValueError("compute_latency must be >= 0")
+
+    npkt_req = int(request.num_packets)
+    npkt_res = int(result.num_packets)
+
+    # --- request network: every inference's distribution traffic, gated
+    # by the arrival process (all MC streams of inference k open together).
+    req_cat = concat_inferences(request, k)
+    req_len1 = np.asarray(request.length, np.int64)
+    req_rel = np.broadcast_to(arr[None, :], (m_req, k))
+    req_inc = np.broadcast_to(req_len1[:, None], (m_req, k))
+    sched_req, req_it, req_et, req_ep, req_drained = _drain_gated(
+        cfg, req_cat, req_nodes, req_rel, req_inc,
+        count_headers=count_headers, chunk=chunk, max_cycles=max_cycles,
+        allow_truncation=allow_truncation)
+
+    # --- per-(inference, router) delivery: cycle the last request packet
+    # destined to that PE router ejected. Routers a workload never
+    # addresses fall back to the arrival cycle (nothing to wait for -
+    # and they carry no results either).
+    pdest = _packet_dest(request)
+    et2 = req_et.reshape(k, npkt_req) if npkt_req else req_et.reshape(k, 0)
+    delivery = np.broadcast_to(arr[:, None],
+                               (k, cfg.num_routers)).astype(np.int64).copy()
+    undelivered = bool((et2 < 0).any())
+    live = pdest >= 0
+    if live.any():
+        rows = np.repeat(np.arange(k), int(live.sum()))
+        cols = np.tile(pdest[live], k)
+        np.maximum.at(delivery, (rows, cols),
+                      et2[:, live].astype(np.int64).reshape(-1))
+
+    # --- result network: per-PE release = that PE's delivery + compute
+    # latency, monotone along k (a PE processes inferences in order).
+    # Inferences whose requests were cut off never release their results.
+    far = np.int64(2**31 - 2)
+    rel = delivery[:, res_nodes.astype(np.int64)].T + lat[:, None]  # (P, K)
+    if undelivered:
+        miss = (et2 < 0).any(axis=1)        # (K,) inference lost requests
+        rel[:, miss] = far
+    rel = np.maximum.accumulate(np.minimum(rel, far), axis=1)
+    res_cat = concat_inferences(result, k)
+    res_len1 = np.asarray(result.length, np.int64)
+    res_inc = np.broadcast_to(res_len1[:, None], (m_res, k))
+    sched_res, res_it, res_et, res_ep, res_drained = _drain_gated(
+        cfg, res_cat, res_nodes, rel, res_inc,
+        count_headers=count_headers, chunk=chunk, max_cycles=max_cycles,
+        allow_truncation=allow_truncation) if npkt_res else (
+        None, np.zeros(0, np.int32), np.zeros(0, np.int32),
+        np.zeros(1, np.int32), True)
+
+    drained = req_drained and res_drained
+    if check_conservation and drained:
+        for name, tr_cat, ep in (("request", req_cat, req_ep),
+                                 ("result", res_cat, res_ep)):
+            if int(tr_cat.num_packets) <= 0:
+                continue
+            err = _conservation_error(
+                np.asarray(tr_cat.length), np.asarray(tr_cat.meta),
+                np.asarray(tr_cat.pkt), ep, int(tr_cat.num_packets))
+            if err:
+                raise RuntimeError(f"closed-loop {name}-phase conservation "
+                                   f"violated: {err}")
+
+    # --- per-inference completion: the cycle after the last result tail of
+    # inference k ejected (request delivery for pure-distribution
+    # workloads); -1 while any of its packets is still in flight.
+    if npkt_res:
+        ret2 = res_et.reshape(k, npkt_res).astype(np.int64)
+        done_k = (ret2 >= 0).all(axis=1)
+        completions = np.where(done_k, ret2.max(axis=1) + 1, -1)
+    else:
+        done_k = ((et2 >= 0).all(axis=1) if npkt_req
+                  else np.ones(k, bool))
+        completions = np.where(done_k, delivery.max(axis=1) + 1, -1)
+    latencies = np.where(completions >= 0, completions - arr, -1)
+
+    req_bt = res_bt = None
+    if record_bt and drained:
+        from .sim import simulate
+        req_bt = simulate(cfg, request, count_headers=count_headers,
+                          chunk=chunk, max_cycles=max_cycles,
+                          check_conservation=check_conservation)
+        if npkt_res:
+            res_bt = simulate(cfg, result, count_headers=count_headers,
+                              chunk=chunk, max_cycles=max_cycles,
+                              check_conservation=check_conservation,
+                              mc_nodes=res_nodes)
+
+    return OnlineResult(
+        arrivals=arr, completions=completions, latencies=latencies,
+        truncated=int((completions < 0).sum()),
+        request_drain_cycle=sched_req.drain_cycle,
+        result_drain_cycle=(sched_res.drain_cycle if sched_res else
+                            sched_req.drain_cycle),
+        delivery=delivery, release=rel, compute_latency=lat,
+        sched_request=sched_req, sched_result=sched_res,
+        request=req_bt, result=res_bt,
+        request_inj_time=req_it, request_eject_time=req_et,
+        result_inj_time=res_it, result_eject_time=res_et)
+
+
+# --- latency percentiles -------------------------------------------------
+
+
+def percentile(values: Sequence[float], q: float) -> float:
+    """The q-th percentile under linear interpolation - numpy's default
+    ``np.percentile(values, q)`` semantics, pinned by tests against the
+    numpy reference (ties, single samples, endpoints included)."""
+    if not 0.0 <= q <= 100.0:
+        raise ValueError(f"percentile must be in [0, 100], got {q!r}")
+    v = np.sort(np.asarray(values, np.float64))
+    if not v.size:
+        raise ValueError("percentile of an empty sample")
+    if v.size == 1:
+        return float(v[0])
+    pos = (q / 100.0) * (v.size - 1)
+    lo = int(np.floor(pos))
+    hi = min(lo + 1, v.size - 1)
+    frac = pos - lo
+    return float(v[lo] * (1.0 - frac) + v[hi] * frac)
+
+
+def latency_percentiles(latencies: Sequence[int],
+                        qs: Tuple[float, ...] = (50.0, 99.0)) -> dict:
+    """Percentile summary of a per-inference latency ledger.
+
+    Negative entries mark inferences still in flight at the cutoff
+    (truncated runs): they are excluded from the percentiles but MUST be
+    surfaced, so the summary always carries ``truncated`` alongside
+    ``count`` - silently dropping them would bias every percentile low.
+    Percentiles are ``None`` when nothing completed.
+    """
+    lat = np.asarray(latencies, np.int64)
+    if lat.ndim != 1:
+        raise ValueError("latencies must be 1-D")
+    done = lat[lat >= 0]
+    out = {"count": int(done.size), "truncated": int((lat < 0).sum())}
+    for q in qs:
+        key = f"p{q:g}"
+        out[key] = percentile(done, q) if done.size else None
+    if done.size:
+        out["mean"] = float(done.mean())
+        out["max"] = int(done.max())
+    else:
+        out["mean"] = out["max"] = None
+    return out

@@ -178,6 +178,14 @@ class SimState(NamedTuple):
     eject_pkt: Optional[jax.Array]   # (NP+1,) int32 or None
     drained_at: jax.Array # () int32 first cycle with everything ejected, -1
                           # while the network still holds flits
+    # Per-packet timestamp ledgers (the closed-loop serving model's
+    # latency source, see repro.noc.online): cycle the header flit left the
+    # NI and cycle the tail flit ejected at its destination, indexed by
+    # packet id with a dump slot last. ``None`` - the fields do not exist -
+    # unless the drain runs with ``timestamps=True``; like the conservation
+    # ledger, production drains pay nothing for them.
+    inj_time: Optional[jax.Array] = None     # (NP+1,) int32 or None
+    eject_time: Optional[jax.Array] = None   # (NP+1,) int32 or None
 
 
 @dataclasses.dataclass
@@ -200,9 +208,18 @@ class SimResult:
         return self.total_bt / max(int(self.link_flits.sum()), 1)
 
 
-def make_state(cfg: NocConfig, num_mcs: int, npkt: int = 0) -> SimState:
+_TIME_UNSET = np.int32(2**31 - 1)   # inj_time sentinel: "never injected"
+
+
+def make_state(cfg: NocConfig, num_mcs: int, npkt: int = 0,
+               timestamps: bool = False) -> SimState:
     """Zeroed simulator state. ``npkt``: number of packet ids to track for
-    the conservation check (0 omits the ledger and its pkt lane entirely)."""
+    the conservation check (0 omits the ledger and its pkt lane entirely).
+    ``timestamps`` adds the per-packet injection/ejection cycle ledgers
+    (requires ``npkt > 0`` - the ledgers are indexed by packet id)."""
+    if timestamps and npkt <= 0:
+        raise ValueError("timestamps=True needs npkt > 0 (the ledgers are "
+                         "indexed by packet id)")
     nr, p, v, d, l = cfg.num_routers, NUM_PORTS, cfg.num_vcs, cfg.vc_depth, cfg.lanes
     if nr > MAX_ROUTERS:
         raise ValueError(f"{nr} routers exceed the {SIDE_DEST_BITS}-bit "
@@ -227,6 +244,10 @@ def make_state(cfg: NocConfig, num_mcs: int, npkt: int = 0) -> SimState:
         cycle=jnp.zeros((), jnp.int32),
         eject_pkt=jnp.zeros((npkt + 1,), jnp.int32) if track else None,
         drained_at=jnp.full((), -1, jnp.int32),
+        inj_time=(jnp.full((npkt + 1,), _TIME_UNSET, jnp.int32)
+                  if timestamps else None),
+        eject_time=(jnp.full((npkt + 1,), -1, jnp.int32)
+                    if timestamps else None),
     )
 
 
@@ -241,8 +262,15 @@ def _mesh_key(cfg: NocConfig):
     return (cfg.rows, cfg.cols, cfg.num_vcs, cfg.vc_depth, cfg.lanes)
 
 
-def _make_step(mesh_key, count_headers: bool, track: bool):
+def _make_step(mesh_key, count_headers: bool, track: bool,
+               timestamps: bool = False):
     """One router cycle as a pure function of (state, wire, mc_nodes).
+
+    ``timestamps`` (requires ``track``) additionally records each packet's
+    header-flit NI-injection cycle and tail-flit ejection cycle into the
+    ``inj_time``/``eject_time`` ledgers - the closed-loop serving model's
+    latency source (``repro.noc.online``). Off by default; the untracked
+    production step is byte-identical with the flag off.
 
     Bit-identical to the pre-overhaul step (``repro.noc._reference``,
     pinned by tests/test_noc_step.py) with the hot-path structure changed:
@@ -262,6 +290,9 @@ def _make_step(mesh_key, count_headers: bool, track: bool):
       FIFO-count increments are reconstructed receiver-side from another
       static-index gather instead of a second scatter.
     """
+    if timestamps and not track:
+        raise ValueError("timestamps=True requires track=True (the ledgers "
+                         "are indexed by the tracked pkt lane)")
     rows, cols, num_vcs, vc_depth, lanes = mesh_key
     cfg = NocConfig(rows, cols, (), num_vcs=num_vcs, vc_depth=vc_depth,
                     lanes=lanes)    # mc-free view: routing/geometry only
@@ -421,6 +452,12 @@ def _make_step(mesh_key, count_headers: bool, track: bool):
             ledger_idx = jnp.where(ej_tail, jnp.minimum(mv_pkt, npcap), npcap)
             eject_pkt = state.eject_pkt.at[ledger_idx.reshape(-1)].add(
                 ej_tail.reshape(-1).astype(jnp.int32))
+            if timestamps:
+                # A packet's tail ejects exactly once, so max() against the
+                # -1 init records the cycle; non-tail rows write -1 into the
+                # dump slot (a no-op under max).
+                eject_time = state.eject_time.at[ledger_idx.reshape(-1)].max(
+                    jnp.where(ej_tail, state.cycle, -1).reshape(-1))
         else:
             eject_pkt = None
 
@@ -472,13 +509,27 @@ def _make_step(mesh_key, count_headers: bool, track: bool):
         inj_bt = state.inj_bt + jnp.where(icounted, itog, 0)
         inj_last = jnp.where(can[:, None], iw[..., :l], state.inj_last)
 
+        if timestamps:
+            # Header flit leaving the NI stamps the packet's injection
+            # cycle: min() against the UNSET init records the first (only)
+            # header injection; everything else dumps into the last slot.
+            ipkt = iw[..., l + 1].astype(jnp.int32)
+            npcap2 = state.inj_time.shape[0] - 1
+            inj_hdr = can & ((imeta & META_PAYLOAD) == 0)
+            t_idx = jnp.where(inj_hdr, jnp.minimum(ipkt, npcap2), npcap2)
+            inj_time = state.inj_time.at[t_idx].min(
+                jnp.where(inj_hdr, state.cycle, _TIME_UNSET))
+        else:
+            inj_time, eject_time = state.inj_time, state.eject_time
+
         total = jnp.sum(wire.length)
         drained_at = jnp.where((state.drained_at < 0) & (ejected >= total),
                                state.cycle + 1, state.drained_at)
 
         return SimState(fifo_new, head2, count_new, rr_new, link_last,
                         link_bt, link_flits, ptr_new, inj_last, inj_bt,
-                        ejected, state.cycle + 1, eject_pkt, drained_at)
+                        ejected, state.cycle + 1, eject_pkt, drained_at,
+                        inj_time, eject_time)
 
     return step
 

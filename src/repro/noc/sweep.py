@@ -38,13 +38,14 @@ from .topology import (AFFINITIES, NocConfig, PLACEMENTS, affinity_mc_table,
                        mc_placement, mesh_by_name, packet_mean_hops,
                        xy_link_loads)
 from .traffic import (DEFAULT_RESULT_WINDOW, LayerTraffic, assemble_traffic,
-                      build_result_traffic, build_traffic_streamed_multi,
-                      ordered_payloads, pad_traffic_length, payload_shapes,
-                      result_values, stream_lengths)
+                      build_result_traffic, build_traffic_batch,
+                      build_traffic_streamed_multi, ordered_payloads,
+                      pad_traffic_length, payload_shapes, result_values,
+                      stream_lengths)
 from .sim import SimResult, Traffic, simulate_batch
 
-__all__ = ["SweepGrid", "SweepReport", "run_sweep", "recovery_overhead_bits",
-           "drain_estimate"]
+__all__ = ["SweepGrid", "SweepReport", "run_sweep", "run_serving",
+           "recovery_overhead_bits", "drain_estimate"]
 
 Mesh = Union[str, NocConfig]
 LayersFn = Callable[[str], Sequence[LayerTraffic]]
@@ -122,6 +123,17 @@ class SweepGrid:
     # compaction ratio for that drain; classes absent from the table fall
     # back to ``chunk``. Scheduling only - results stay bit-identical.
     tune_path: Optional[str] = None
+    # Closed-loop serving axis (:func:`run_serving`): offered-load points
+    # in inferences per 1000 cycles. Empty disables the suite; run_sweep
+    # ignores these knobs entirely. Timing is transform-independent (drain
+    # dynamics never read payload values - see repro.noc.online), so each
+    # load point costs ONE gated drain per (mesh, placement, affinity,
+    # model) combo and the whole transform axis joins by BT.
+    offered_loads: Sequence[float] = ()
+    serving_inferences: int = 8
+    compute_latency: int = 0            # per-PE compute cycles
+    arrival: str = "uniform"            # online.ARRIVAL_KINDS process
+    arrival_seed: int = 0
 
     def __post_init__(self):
         from .sim import BACKENDS
@@ -147,6 +159,17 @@ class SweepGrid:
         if self.baseline not in self.transforms:
             raise ValueError(
                 f"baseline {self.baseline!r} not in transforms {self.transforms}")
+        from .online import ARRIVAL_KINDS
+        if self.arrival not in ARRIVAL_KINDS:
+            raise ValueError(f"arrival must be one of {ARRIVAL_KINDS}, "
+                             f"got {self.arrival!r}")
+        if any(not load > 0 for load in self.offered_loads):
+            raise ValueError("offered_loads must be > 0 "
+                             f"(got {tuple(self.offered_loads)})")
+        if self.serving_inferences < 1:
+            raise ValueError("serving_inferences must be >= 1")
+        if self.compute_latency < 0:
+            raise ValueError("compute_latency must be >= 0")
 
     def variant_axes(self):
         """The per-shape-class variant list, in batch order."""
@@ -659,6 +682,147 @@ def _grid_json(grid: SweepGrid) -> dict:
     out = dataclasses.asdict(grid)
     out["meshes"] = [_resolve_mesh(m)[0] for m in grid.meshes]
     for key in ("placements", "affinity", "transforms", "tiebreaks",
-                "precisions", "models"):
+                "precisions", "models", "offered_loads"):
         out[key] = list(out[key])
     return out
+
+
+def run_serving(grid: SweepGrid, layers_for_model: LayersFn, *,
+                out_path: Optional[str] = None,
+                check_conservation: bool = False,
+                devices="auto") -> SweepReport:
+    """The closed-loop ``serving`` suite: the BT sweep joined with an
+    offered-load latency sweep.
+
+    Runs :func:`run_sweep` (result phase forced on - serving is
+    bidirectional by definition) for the per-transform BT rows, then one
+    gated closed-loop drain (:func:`repro.noc.online.simulate_online`) per
+    (mesh, placement, affinity, model) combo and offered-load point, plus
+    a back-to-back saturation probe per combo. Timing is
+    transform-independent (drain dynamics never read payload values), so
+    the load axis is priced once per combo and the latency/BT frontier is
+    the cross product: a transform moves a combo's BT coordinate, a load
+    point its latency coordinate.
+
+    The returned report carries the BT rows unchanged; ``stats["serving"]``
+    adds ``points`` (one entry per combo x load: p50/p99/mean latency,
+    measured throughput, completed/truncated counts, gated drain cycles),
+    ``combos`` (per-combo ``saturation_tput``, ``latency_monotone`` - p50
+    non-decreasing along the sorted load axis - and the per-transform BT
+    join ``transforms[tr] = {request_bt, result_bt, adjusted_bt, ...}`` at
+    the grid's first precision/tiebreak), and the serving wall-clock.
+    """
+    from .online import ArrivalProcess, latency_percentiles, simulate_online
+
+    if not grid.offered_loads:
+        raise ValueError("run_serving needs grid.offered_loads (offered "
+                         "load points in inferences per 1000 cycles)")
+    if grid.max_packets_per_layer is None:
+        raise ValueError("run_serving uses the one-shot packetizer; set "
+                         "max_packets_per_layer")
+    base = (grid if grid.result_phase
+            else dataclasses.replace(grid, result_phase=True))
+    report = run_sweep(base, layers_for_model,
+                       check_conservation=check_conservation,
+                       devices=devices)
+
+    t0 = time.perf_counter()
+    o0 = [(by_name(grid.baseline), _QUANTIZERS[grid.precisions[0]])]
+    prec0, tb0 = grid.precisions[0], grid.tiebreaks[0]
+    loads = sorted(grid.offered_loads)
+    points: List[dict] = []
+    combos: List[dict] = []
+    layer_cache: Dict[str, Sequence[LayerTraffic]] = {}
+    for mesh_name, base_cfg in [_resolve_mesh(m) for m in grid.meshes]:
+        for model in grid.models:
+            if model not in layer_cache:
+                layer_cache[model] = layers_for_model(model)
+            layers = layer_cache[model]
+            for pl in grid.placements:
+                for aff in grid.affinity:
+                    cfg = _place(base_cfg, pl)
+                    tbl = (affinity_mc_table(cfg) if aff == "nearest"
+                           else None)
+                    req = build_traffic_batch(
+                        layers, cfg, o0,
+                        max_packets_per_layer=grid.max_packets_per_layer,
+                        mc_table=tbl).variant(0)
+                    res = build_result_traffic(
+                        layers, cfg, o0,
+                        max_packets_per_layer=grid.max_packets_per_layer,
+                        mc_table=tbl,
+                        result_window=grid.result_window).variant(0)
+                    combo_key = {"mesh": mesh_name, "placement": pl,
+                                 "affinity": aff, "model": model}
+                    combo_p50 = []
+                    for load in loads:
+                        onl = simulate_online(
+                            cfg, req, res,
+                            arrivals=ArrivalProcess(grid.arrival, load,
+                                                    grid.arrival_seed),
+                            num_inferences=grid.serving_inferences,
+                            compute_latency=grid.compute_latency,
+                            count_headers=grid.count_headers,
+                            chunk=grid.chunk, max_cycles=grid.max_cycles,
+                            check_conservation=check_conservation,
+                            record_bt=False)
+                        lp = latency_percentiles(onl.latencies)
+                        combo_p50.append(lp["p50"])
+                        points.append({
+                            **combo_key, "offered_load": load,
+                            "throughput": onl.throughput,
+                            "p50_latency": lp["p50"],
+                            "p99_latency": lp["p99"],
+                            "mean_latency": lp["mean"],
+                            "completed": lp["count"],
+                            "truncated": lp["truncated"],
+                            "request_drain_cycle": onl.request_drain_cycle,
+                            "result_drain_cycle": onl.result_drain_cycle,
+                        })
+                    sat = simulate_online(
+                        cfg, req, res,
+                        arrivals=ArrivalProcess("backtoback"),
+                        num_inferences=grid.serving_inferences,
+                        compute_latency=grid.compute_latency,
+                        count_headers=grid.count_headers,
+                        chunk=grid.chunk, max_cycles=grid.max_cycles,
+                        check_conservation=check_conservation,
+                        record_bt=False)
+                    transforms = {}
+                    for tr in grid.transforms:
+                        row = report.row(**combo_key, transform=tr,
+                                         precision=prec0, tiebreak=tb0)
+                        transforms[tr] = {
+                            "request_bt": row["total_bt"],
+                            "request_adjusted_bt": row["adjusted_bt"],
+                            "result_bt": row["result_bt"],
+                            "result_adjusted_bt": row["result_adjusted_bt"],
+                            "adjusted_reduction_pct":
+                                row["adjusted_reduction_pct"],
+                        }
+                    combos.append({
+                        **combo_key,
+                        "saturation_tput": sat.throughput,
+                        "latency_monotone": all(
+                            b >= a for a, b in zip(combo_p50, combo_p50[1:])
+                            if a is not None and b is not None),
+                        "transforms": transforms,
+                    })
+    report.stats["serving"] = {
+        "offered_loads": loads,
+        "inferences": grid.serving_inferences,
+        "compute_latency": grid.compute_latency,
+        "arrival": grid.arrival,
+        "arrival_seed": grid.arrival_seed,
+        "precision": prec0, "tiebreak": tb0,
+        "conservation_checked": bool(check_conservation),
+        "points": points,
+        "combos": combos,
+        "serving_s": round(time.perf_counter() - t0, 4),
+    }
+    if out_path:
+        os.makedirs(os.path.dirname(os.path.abspath(out_path)), exist_ok=True)
+        with open(out_path, "w") as f:
+            json.dump({"grid": _grid_json(grid), "rows": report.rows,
+                       "stats": report.stats}, f, indent=1)
+    return report

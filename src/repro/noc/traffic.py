@@ -46,7 +46,7 @@ __all__ = ["LayerTraffic", "build_traffic", "build_traffic_batch",
            "result_values", "ordered_payloads", "ordered_payloads_streamed",
            "payload_shapes", "assemble_traffic", "TrafficAssembler",
            "stream_lengths", "pad_traffic_length", "stack_traffics",
-           "conv_layer_traffic", "linear_layer_traffic",
+           "concat_inferences", "conv_layer_traffic", "linear_layer_traffic",
            "DEFAULT_RESULT_WINDOW"]
 
 # One sweep variant: an ordering transform plus an optional value->wire-dtype
@@ -354,6 +354,62 @@ def pad_traffic_length(traffic: Traffic, t: int) -> Traffic:
         words=jnp.asarray(words), dest=pad_last(traffic.dest),
         meta=pad_last(traffic.meta), vc=pad_last(traffic.vc),
         pkt=pad_last(traffic.pkt))
+
+
+def concat_inferences(traffic: Traffic, n: int) -> Traffic:
+    """Replicate a single-inference Traffic ``n`` times back-to-back.
+
+    Inference k's flits immediately follow inference k-1's within every
+    stream (the injector walks streams contiguously), and packet ids are
+    offset by ``k * num_packets`` so the per-inference conservation and
+    timestamp ledgers stay disjoint - the closed-loop serving model
+    (``repro.noc.online``) gates each inference's slice with its own
+    release cycle. Unbatched Traffic with known ``num_packets`` only; the
+    word values are replicated verbatim, so per-stream NI sequences are the
+    single-inference sequences repeated (seam transitions between
+    consecutive inferences included).
+    """
+    if traffic.length.ndim != 1:
+        raise ValueError("concat_inferences wants an unbatched Traffic "
+                         "(use .variant(i) on a batched one)")
+    npkt = int(traffic.num_packets)
+    if npkt < 0:
+        raise ValueError("concat_inferences needs num_packets metadata "
+                         "(hand-built Traffic must set it)")
+    if n < 1:
+        raise ValueError(f"need n >= 1 inferences, got {n}")
+    if n == 1:
+        return traffic
+    lengths = np.asarray(traffic.length, np.int64)
+    m = lengths.shape[0]
+    lanes = traffic.words.shape[-1]
+    t2 = int(lengths.max()) * n if m else 0
+    words = np.asarray(traffic.words)
+    dest = np.asarray(traffic.dest)
+    meta = np.asarray(traffic.meta)
+    vc = np.asarray(traffic.vc)
+    pkt = np.asarray(traffic.pkt)
+    w2 = np.zeros((m, t2, lanes), np.uint32)
+    d2 = np.zeros((m, t2), np.int32)
+    me2 = np.zeros((m, t2), np.int32)
+    v2 = np.zeros((m, t2), np.int32)
+    p2 = np.zeros((m, t2), np.int32)
+    for mi in range(m):
+        ln = int(lengths[mi])
+        if not ln:
+            continue
+        w2[mi, :n * ln] = np.tile(words[mi, :ln], (n, 1))
+        d2[mi, :n * ln] = np.tile(dest[mi, :ln], n)
+        me2[mi, :n * ln] = np.tile(meta[mi, :ln], n)
+        v2[mi, :n * ln] = np.tile(vc[mi, :ln], n)
+        p2[mi, :n * ln] = (np.tile(pkt[mi, :ln], n)
+                           + np.repeat(np.arange(n, dtype=np.int64), ln)
+                           * npkt)
+    return Traffic(
+        words=jnp.asarray(w2), dest=jnp.asarray(d2), meta=jnp.asarray(me2),
+        vc=jnp.asarray(v2), pkt=jnp.asarray(p2),
+        length=jnp.asarray((lengths * n).astype(np.int32)),
+        num_packets=npkt * n)
 
 
 def stack_traffics(traffics: Sequence[Traffic]) -> Traffic:

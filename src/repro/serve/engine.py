@@ -22,6 +22,7 @@ class GenerationConfig:
     max_new_tokens: int = 64
     temperature: float = 0.0         # 0 = greedy
     eos_id: int = -1                 # -1 = never stop early
+    sync_every: int = 8              # decode steps between host done-checks
 
 
 class Engine:
@@ -33,25 +34,44 @@ class Engine:
 
     def generate(self, prompts: jax.Array, gen: GenerationConfig,
                  key: Optional[jax.Array] = None):
-        """prompts (B, S) int32 -> (B, max_new_tokens) int32."""
+        """prompts (B, S) int32 -> (B, L) int32, L <= max_new_tokens.
+
+        The decode loop only syncs with the host every ``gen.sync_every``
+        steps: a per-step ``bool(jnp.all(done))`` blocks on every decode
+        dispatch and serializes the whole pipeline. Finished rows keep
+        emitting ``eos_id`` (the ``jnp.where`` below), so the exact output
+        of a per-step early-exit loop is reconstructible from the tokens
+        alone: trim to the first step at which every row's running output
+        contains ``eos_id``. The result is bit-identical to the per-step
+        loop; early exit still happens, within ``sync_every`` steps of
+        batch completion.
+        """
         b, s = prompts.shape
         logits, cache = self.model.prefill(self.params, prompts, self.context)
         if key is None:
             key = jax.random.PRNGKey(0)
+        sync = max(1, gen.sync_every)
         out = []
         tok = self._sample(logits, gen, key)
         done = jnp.zeros((b,), bool)
         for i in range(gen.max_new_tokens):
             out.append(tok)
             done = done | (tok == gen.eos_id)
-            if bool(jnp.all(done)):
+            if i == gen.max_new_tokens - 1:
+                break
+            if i % sync == sync - 1 and bool(jnp.all(done)):
                 break
             pos = jnp.full((b,), s + i, jnp.int32)
             logits, cache = self._decode(self.params, tok, cache, pos)
             key = jax.random.fold_in(key, i)
             tok = self._sample(logits, gen, key)
             tok = jnp.where(done, gen.eos_id, tok)
-        return jnp.stack(out, axis=1)
+        toks = jnp.stack(out, axis=1)
+        all_done = np.logical_or.accumulate(
+            np.asarray(toks) == gen.eos_id, axis=1).all(axis=0)
+        if all_done.any():
+            toks = toks[:, :int(all_done.argmax()) + 1]
+        return toks
 
     @staticmethod
     def _sample(logits, gen: GenerationConfig, key):

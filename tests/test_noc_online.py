@@ -1,0 +1,245 @@
+"""Closed-loop (online) serving model: the offline-equivalence oracle.
+
+Pins the gating contract of ``repro.noc.online``:
+
+* zero compute latency + a single inference reduces the closed loop to the
+  offline phases **bit-identically** - reported request/result BT totals
+  and per-link recorders equal ``simulate``'s, and the gated schedule
+  drain itself (all gates open from cycle 0) matches the offline drain
+  byte for byte;
+* nonzero compute latency shifts the gated result drain later but never
+  changes a reported BT total (BT is data-determined, timing is
+  schedule-determined);
+* the latency-percentile extraction matches the numpy reference on
+  hand-built ledgers, including ties, single samples, and
+  in-flight-at-cutoff entries (truncation reported, never dropped).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.wire import by_name
+from repro.noc import (ArrivalProcess, LayerTraffic, NocConfig,
+                       build_result_traffic, build_traffic,
+                       build_traffic_batch, latency_percentiles, percentile,
+                       simulate, simulate_online)
+
+CHUNK = 256
+
+
+@pytest.fixture(scope="module")
+def layers():
+    """Deterministic two-layer workload, matching the result-phase suite."""
+    key = jax.random.PRNGKey(2)
+    return [
+        LayerTraffic(jax.random.normal(key, (37, 20)),
+                     jax.random.normal(jax.random.fold_in(key, 1),
+                                       (37, 20)) * 0.3),
+        LayerTraffic(jax.random.normal(jax.random.fold_in(key, 2), (11, 9)),
+                     jax.random.normal(jax.random.fold_in(key, 3), (11, 9))),
+    ]
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return NocConfig(rows=4, cols=4, mc_nodes=(0, 15), num_vcs=3, lanes=8)
+
+
+@pytest.fixture(scope="module")
+def phase_traffic(layers, cfg):
+    """One inference's request + result traffic (O1, full precision)."""
+    variants = [(by_name("O1"), None)]
+    req = build_traffic_batch(layers, cfg, variants,
+                              max_packets_per_layer=10).variant(0)
+    res = build_result_traffic(layers, cfg, variants,
+                               max_packets_per_layer=10,
+                               result_window=6).variant(0)
+    return req, res
+
+
+def test_zero_latency_single_inference_is_offline_bit_identical(
+        cfg, phase_traffic):
+    """The oracle: one inference, zero compute latency -> the closed loop's
+    request and result phases equal the offline ``simulate`` drains
+    bit for bit (BT totals, per-link recorders, drain cycles), and the
+    gated request schedule - every gate open from cycle 0 - IS the offline
+    drain."""
+    req, res = phase_traffic
+    off_req = simulate(cfg, req, chunk=CHUNK, check_conservation=True)
+    off_res = simulate(cfg, res, chunk=CHUNK, check_conservation=True,
+                       mc_nodes=np.asarray(cfg.pe_nodes))
+
+    onl = simulate_online(cfg, req, res, arrivals=[0], compute_latency=0,
+                          chunk=CHUNK, check_conservation=True)
+
+    # reported (canonical) phase BT: bit-identical to offline
+    assert onl.request.total_bt == off_req.total_bt
+    np.testing.assert_array_equal(onl.request.link_bt, off_req.link_bt)
+    assert onl.request.drain_cycle == off_req.drain_cycle
+    assert onl.result.total_bt == off_res.total_bt
+    np.testing.assert_array_equal(onl.result.link_bt, off_res.link_bt)
+    assert onl.result.drain_cycle == off_res.drain_cycle
+
+    # the gated schedule itself reduces to the offline drain at gate-open-0
+    assert onl.sched_request.total_bt == off_req.total_bt
+    np.testing.assert_array_equal(onl.sched_request.link_bt,
+                                  off_req.link_bt)
+    assert onl.request_drain_cycle == off_req.drain_cycle
+    assert onl.sched_request.ejected == off_req.injected
+
+    # timing ledger sanity: one inference, completion after both phases
+    assert onl.truncated == 0
+    assert onl.completions.shape == (1,)
+    assert int(onl.completions[0]) == onl.result_drain_cycle
+    assert int(onl.latencies[0]) == int(onl.completions[0])
+
+
+def test_nonzero_latency_shifts_timing_never_bt(cfg, phase_traffic):
+    """The negative arm of the oracle: compute latency delays the gated
+    result drain (timing is schedule-determined) but every reported BT
+    total and recorder is unchanged (BT is data-determined)."""
+    req, res = phase_traffic
+    base = simulate_online(cfg, req, res, arrivals=[0], compute_latency=0,
+                           chunk=CHUNK)
+    slow = simulate_online(cfg, req, res, arrivals=[0],
+                           compute_latency=100, chunk=CHUNK)
+
+    assert slow.result_drain_cycle > base.result_drain_cycle
+    assert int(slow.latencies[0]) > int(base.latencies[0])
+    # request network never waits on compute
+    assert slow.request_drain_cycle == base.request_drain_cycle
+
+    assert slow.request.total_bt == base.request.total_bt
+    assert slow.result.total_bt == base.result.total_bt
+    np.testing.assert_array_equal(slow.request.link_bt,
+                                  base.request.link_bt)
+    np.testing.assert_array_equal(slow.result.link_bt, base.result.link_bt)
+
+
+def test_overlapped_inferences_conserve_and_complete(cfg, phase_traffic):
+    """Back-to-back inferences through the mesh: every packet of every
+    inference ejects exactly once (conservation enforced on the
+    concatenated gated drains) and per-inference completions respect
+    arrival order under queueing."""
+    req, res = phase_traffic
+    onl = simulate_online(cfg, req, res,
+                          arrivals=ArrivalProcess("poisson", 6.0, seed=5),
+                          num_inferences=4, compute_latency=20,
+                          chunk=CHUNK, check_conservation=True)
+    assert onl.truncated == 0
+    assert onl.completed == 4
+    assert (onl.latencies > 0).all()
+    assert (onl.completions > onl.arrivals).all()
+    # ledgers cover every packet of every inference
+    assert (onl.request_eject_time >= 0).all()
+    assert (onl.result_eject_time >= 0).all()
+    assert onl.throughput > 0
+
+
+def test_backtoback_saturation_queues(cfg, phase_traffic):
+    """The saturation probe: simultaneous arrivals serialize on the mesh,
+    so per-inference latency grows with k and throughput beats a sparse
+    uniform schedule's."""
+    req, res = phase_traffic
+    sat = simulate_online(cfg, req, res,
+                          arrivals=ArrivalProcess("backtoback"),
+                          num_inferences=4, chunk=CHUNK)
+    lat = sat.latencies
+    assert (np.diff(lat) > 0).all()          # queueing delay accumulates
+    sparse = simulate_online(cfg, req, res,
+                             arrivals=ArrivalProcess("uniform", 2.0),
+                             num_inferences=4, chunk=CHUNK)
+    assert sat.throughput > sparse.throughput
+    # offered load only stretches the schedule - BT totals are identical
+    assert sat.request.total_bt == sparse.request.total_bt
+    assert sat.result.total_bt == sparse.result.total_bt
+
+
+def test_arrival_process_contract():
+    """Determinism, spacing, and validation of the arrival processes."""
+    a = ArrivalProcess("poisson", 4.0, seed=11).times(16)
+    b = ArrivalProcess("poisson", 4.0, seed=11).times(16)
+    np.testing.assert_array_equal(a, b)                    # seeded replay
+    assert a[0] == 0 and (np.diff(a) >= 0).all()
+    c = ArrivalProcess("poisson", 4.0, seed=12).times(16)
+    assert not np.array_equal(a, c)
+
+    u = ArrivalProcess("uniform", 2.5).times(5)
+    np.testing.assert_array_equal(u, np.floor(np.arange(5) * 400.0))
+    np.testing.assert_array_equal(
+        ArrivalProcess("backtoback").times(3), np.zeros(3, np.int64))
+
+    with pytest.raises(ValueError, match="kind"):
+        ArrivalProcess("burst", 1.0)
+    with pytest.raises(ValueError, match="load"):
+        ArrivalProcess("uniform", 0.0)
+    with pytest.raises(ValueError, match="n >= 1"):
+        ArrivalProcess("uniform", 1.0).times(0)
+
+
+def test_simulate_online_validates_arrivals(cfg, phase_traffic):
+    req, res = phase_traffic
+    with pytest.raises(ValueError, match="num_inferences"):
+        simulate_online(cfg, req, res, arrivals=ArrivalProcess("uniform"))
+    with pytest.raises(ValueError, match="non-decreasing"):
+        simulate_online(cfg, req, res, arrivals=[5, 3], chunk=CHUNK)
+    with pytest.raises(ValueError, match="disagrees"):
+        simulate_online(cfg, req, res, arrivals=[0, 4], num_inferences=3,
+                        chunk=CHUNK)
+    with pytest.raises(ValueError, match="compute_latency"):
+        simulate_online(cfg, req, res, arrivals=[0], compute_latency=-1,
+                        chunk=CHUNK)
+
+
+# --- latency percentile extraction ---------------------------------------
+
+
+@pytest.mark.parametrize("values", [
+    [3.0],                                   # single sample
+    [1.0, 2.0, 3.0, 4.0],
+    [5.0, 5.0, 5.0, 5.0],                    # all ties
+    [2.0, 9.0, 9.0, 9.0, 1.0, 4.0],          # tie block mid-distribution
+    list(range(100)),
+    [7.5, -2.0, 3.25, 7.5, 100.0],
+])
+@pytest.mark.parametrize("q", [0.0, 25.0, 50.0, 90.0, 99.0, 100.0])
+def test_percentile_matches_numpy(values, q):
+    assert percentile(values, q) == pytest.approx(
+        float(np.percentile(np.asarray(values, np.float64), q)), abs=1e-12)
+
+
+def test_percentile_validation():
+    with pytest.raises(ValueError, match="empty"):
+        percentile([], 50.0)
+    with pytest.raises(ValueError, match="0, 100"):
+        percentile([1.0], 101.0)
+    with pytest.raises(ValueError, match="0, 100"):
+        percentile([1.0], -0.5)
+
+
+def test_latency_percentiles_reports_truncation():
+    """In-flight-at-cutoff entries (-1) are excluded from the percentiles
+    but surfaced as ``truncated`` - never silently dropped."""
+    lat = np.asarray([10, -1, 30, 20, -1, 40], np.int64)
+    out = latency_percentiles(lat)
+    assert out["count"] == 4 and out["truncated"] == 2
+    done = np.asarray([10, 30, 20, 40], np.float64)
+    assert out["p50"] == pytest.approx(float(np.percentile(done, 50)))
+    assert out["p99"] == pytest.approx(float(np.percentile(done, 99)))
+    assert out["mean"] == pytest.approx(25.0)
+    assert out["max"] == 40
+
+    clean = latency_percentiles(np.asarray([10, 30, 20, 40], np.int64))
+    assert clean["truncated"] == 0
+    assert clean["p50"] == out["p50"]        # truncation never biases
+
+    single = latency_percentiles(np.asarray([17], np.int64))
+    assert single["p50"] == single["p99"] == 17.0
+
+    none_done = latency_percentiles(np.asarray([-1, -1], np.int64))
+    assert none_done["count"] == 0 and none_done["truncated"] == 2
+    assert none_done["p50"] is None and none_done["mean"] is None
+
+    with pytest.raises(ValueError, match="1-D"):
+        latency_percentiles(np.zeros((2, 2), np.int64))

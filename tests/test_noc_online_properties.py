@@ -1,0 +1,143 @@
+"""Property tests (hypothesis) for the closed-loop serving model.
+
+Three invariants of ``simulate_online`` for ARBITRARY compute latencies,
+arrival gaps, and mesh sizes:
+
+* **Phase-symmetric conservation under overlap** - every request packet
+  and every result packet of every inference ejects exactly once, however
+  the phases interleave in the mesh (the packet-id ledger is asserted
+  directly, and ``check_conservation=True`` must not raise);
+* **Latency lower bound** - no inference completes faster than its
+  congestion-free floor: a request stream of ``L`` flits needs ``L``
+  injection cycles, results cannot release before the slowest gated PE,
+  and each phase needs at least one traversal cycle;
+* **Deterministic replay** - one (seed, load, kind) triple replays the
+  identical arrival schedule, completions, and BT totals.
+
+Kept separate from tests/test_noc_online.py so importorskip can stay
+module-granular (mirrors tests/test_noc_step_properties.py).
+"""
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this container")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.wire import by_name  # noqa: E402
+from repro.noc import (ArrivalProcess, LayerTraffic, NocConfig,  # noqa: E402
+                       build_result_traffic, build_traffic_batch, make_noc,
+                       simulate_online)
+
+CHUNK = 64
+
+_MESHES = [
+    NocConfig(rows=3, cols=3, mc_nodes=(0, 4), lanes=4),
+    NocConfig(rows=3, cols=4, mc_nodes=(0, 11), num_vcs=3, lanes=4),
+    make_noc(4, 4, num_mcs=4, lanes=4),
+]
+
+
+def _phases(cfg, seed, npkts):
+    key = jax.random.PRNGKey(seed)
+    layer = LayerTraffic(
+        jax.random.normal(key, (npkts, 6)),
+        jax.random.normal(jax.random.fold_in(key, 1), (npkts, 6)) * 0.5)
+    variants = [(by_name("O0"), None)]
+    req = build_traffic_batch([layer], cfg, variants).variant(0)
+    res = build_result_traffic([layer], cfg, variants,
+                               result_window=4).variant(0)
+    return req, res
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mesh=st.integers(min_value=0, max_value=len(_MESHES) - 1),
+    npkts=st.integers(min_value=3, max_value=24),
+    k=st.integers(min_value=1, max_value=4),
+    latency=st.integers(min_value=0, max_value=300),
+    gap=st.integers(min_value=0, max_value=400),
+    seed=st.integers(min_value=0, max_value=3),
+)
+def test_conservation_under_overlap(mesh, npkts, k, latency, gap, seed):
+    """Every request and result packet of every inference ejects exactly
+    once, for arbitrary latencies, arrival gaps, and meshes."""
+    cfg = _MESHES[mesh]
+    req, res = _phases(cfg, seed, npkts)
+    arrivals = np.arange(k, dtype=np.int64) * gap
+    onl = simulate_online(cfg, req, res, arrivals=arrivals,
+                          compute_latency=latency, chunk=CHUNK,
+                          check_conservation=True)
+    assert onl.truncated == 0
+    # the ledgers themselves: every concatenated packet ejected once
+    assert onl.request_eject_time.shape == (k * req.num_packets,)
+    assert (onl.request_eject_time >= 0).all()
+    assert onl.result_eject_time.shape == (k * res.num_packets,)
+    assert (onl.result_eject_time >= 0).all()
+    # gated totals cover every inference's flits
+    total_req = k * int(np.asarray(req.length).sum())
+    total_res = k * int(np.asarray(res.length).sum())
+    assert onl.sched_request.ejected == total_req
+    assert onl.sched_result.ejected == total_res
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mesh=st.integers(min_value=0, max_value=len(_MESHES) - 1),
+    npkts=st.integers(min_value=3, max_value=24),
+    k=st.integers(min_value=1, max_value=3),
+    latency=st.integers(min_value=0, max_value=200),
+    load=st.floats(min_value=0.5, max_value=20.0),
+    seed=st.integers(min_value=0, max_value=3),
+)
+def test_latency_lower_bound(mesh, npkts, k, latency, load, seed):
+    """No inference beats its congestion-free floor: the longest request
+    stream must fully inject (one flit per cycle per NI), the slowest
+    gated PE delays every result behind request delivery + compute
+    latency, and each phase needs one traversal cycle beyond injection."""
+    cfg = _MESHES[mesh]
+    req, res = _phases(cfg, seed, npkts)
+    onl = simulate_online(cfg, req, res,
+                          arrivals=ArrivalProcess("poisson", load, seed),
+                          num_inferences=k, compute_latency=latency,
+                          chunk=CHUNK)
+    req_len = np.asarray(req.length, np.int64)
+    res_len = np.asarray(res.length, np.int64)
+    floor = int(req_len.max()) + int(res_len.max()) + (latency if
+                                                       res_len.any() else 0)
+    assert (onl.latencies >= max(floor, 1)).all()
+    # completions respect the release gates: no result ejects before the
+    # earliest release cycle of a stream that actually carries packets
+    live = res_len > 0
+    if live.any():
+        first_release = int(onl.release[live].min())
+        assert int(onl.result_eject_time.min()) > first_release
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    kind=st.sampled_from(["uniform", "poisson", "backtoback"]),
+    load=st.floats(min_value=0.5, max_value=10.0),
+    k=st.integers(min_value=1, max_value=4),
+    seed=st.integers(min_value=0, max_value=6),
+)
+def test_deterministic_replay(kind, load, k, seed):
+    """One (kind, load, seed) triple replays the identical arrival
+    schedule, completions, and BT totals - the closed loop is a pure
+    function of its inputs."""
+    cfg = _MESHES[0]
+    req, res = _phases(cfg, seed=1, npkts=9)
+    ap = ArrivalProcess(kind, load, seed)
+    a = simulate_online(cfg, req, res, arrivals=ap, num_inferences=k,
+                        compute_latency=17, chunk=CHUNK)
+    b = simulate_online(cfg, req, res, arrivals=ap, num_inferences=k,
+                        compute_latency=17, chunk=CHUNK)
+    np.testing.assert_array_equal(a.arrivals, b.arrivals)
+    np.testing.assert_array_equal(a.completions, b.completions)
+    np.testing.assert_array_equal(a.latencies, b.latencies)
+    assert a.request.total_bt == b.request.total_bt
+    assert a.result.total_bt == b.result.total_bt
+    assert a.request_drain_cycle == b.request_drain_cycle
+    assert a.result_drain_cycle == b.result_drain_cycle

@@ -107,6 +107,107 @@ def test_collective_bytes_parser():
                                 "all-to-all", "collective-permute"))
 
 
+class _ScriptedModel:
+    """Deterministic Engine stand-in: step ``t``'s logits put all mass on
+    ``script[:, t]``, so greedy decode emits the script verbatim. The KV
+    cache degenerates to the step counter."""
+
+    vocab = 16
+
+    def __init__(self, script):
+        self.script = jnp.asarray(script, jnp.int32)
+
+    def prefill(self, params, prompts, context):
+        return self._logits(jnp.int32(0)), jnp.int32(0)
+
+    def decode_step(self, params, tok, cache, pos):
+        step = cache + 1
+        return self._logits(step), step
+
+    def _logits(self, step):
+        b, t = self.script.shape
+        idx = self.script[:, jnp.minimum(step, t - 1)]
+        lg = jnp.full((b, self.vocab), -1e9, jnp.float32)
+        return lg.at[jnp.arange(b), idx].set(0.0)
+
+
+def _per_step_reference_generate(engine, prompts, gen, key=None):
+    """The seed Engine.generate loop verbatim: one blocking
+    ``bool(jnp.all(done))`` host sync per decode step."""
+    b, s = prompts.shape
+    logits, cache = engine.model.prefill(engine.params, prompts,
+                                         engine.context)
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    out = []
+    tok = engine._sample(logits, gen, key)
+    done = jnp.zeros((b,), bool)
+    for i in range(gen.max_new_tokens):
+        out.append(tok)
+        done = done | (tok == gen.eos_id)
+        if bool(jnp.all(done)):
+            break
+        pos = jnp.full((b,), s + i, jnp.int32)
+        logits, cache = engine._decode(engine.params, tok, cache, pos)
+        key = jax.random.fold_in(key, i)
+        tok = engine._sample(logits, gen, key)
+        tok = jnp.where(done, gen.eos_id, tok)
+    return jnp.stack(out, axis=1)
+
+
+def test_engine_generate_matches_per_step_reference():
+    """The block-synced decode loop (host done-check every ``sync_every``
+    steps plus a final trim) must reproduce the per-step early-exit loop
+    bit-for-bit - same tokens, same early-exit length - while issuing
+    strictly fewer blocking syncs and still cutting the decode short."""
+    eos = 7
+    script = [[4, 2, eos, 1, 1, 1, 1, 1, 1, 1, 1, 1],
+              [5, 3, 6, 2, eos, 1, 1, 1, 1, 1, 1, 1]]
+    prompts = jnp.zeros((2, 3), jnp.int32)
+    gen = GenerationConfig(max_new_tokens=12, eos_id=eos, sync_every=4)
+
+    engine = Engine(_ScriptedModel(script), params={}, context=32)
+    inner = engine._decode
+    ref = _per_step_reference_generate(engine, prompts, gen)
+    assert ref.shape == (2, 5)          # rows finish at steps 2 and 4
+
+    calls = []
+    engine._decode = lambda *a: calls.append(0) or inner(*a)
+    out = engine.generate(prompts, gen)
+    assert out.shape == ref.shape
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # EOS early exit survives the block sync: well short of max_new_tokens
+    assert len(calls) < gen.max_new_tokens - 1
+
+    # no-EOS path: full length, still bit-identical
+    gen_full = GenerationConfig(max_new_tokens=12, eos_id=-1, sync_every=4)
+    ref_full = _per_step_reference_generate(engine, prompts, gen_full)
+    out_full = engine.generate(prompts, gen_full)
+    assert out_full.shape == (2, 12)
+    np.testing.assert_array_equal(np.asarray(out_full), np.asarray(ref_full))
+
+
+def test_serve_offered_load_loop():
+    """The arrival-driven serving loop: every request served, latency
+    summary well-formed, deterministic arrival replay from the seed."""
+    from repro.launch.serve import serve_offered_load
+
+    engine = Engine(_ScriptedModel([[4, 2, 3, 1]]), params={}, context=32)
+    prompts = jnp.zeros((6, 3), jnp.int32)
+    gen = GenerationConfig(max_new_tokens=4)
+    outs, stats = serve_offered_load(engine, prompts, gen, load=200.0,
+                                     arrival="poisson", seed=3, pace=False)
+    assert len(outs) == 6
+    assert all(o.shape == (1, 4) for o in outs)
+    assert stats["count"] == 6 and stats["truncated"] == 0
+    assert stats["p50"] is not None and stats["p99"] >= stats["p50"]
+    assert stats["throughput_rps"] > 0
+    from repro.noc.online import ArrivalProcess
+    a1 = ArrivalProcess("poisson", 200.0, 3).times(6)
+    a2 = ArrivalProcess("poisson", 200.0, 3).times(6)
+    np.testing.assert_array_equal(a1, a2)
+
+
 def test_collective_bytes_while_trip_count():
     """Collectives inside a scan body count trip_count times (XLA prints
     the body once; traffic happens every iteration)."""
