@@ -21,7 +21,7 @@ import time
 import traceback
 
 from . import (table1, fig1_expectation, fig10_11, fig12, fig13,
-               table2_power, darknet_full, kernel_backend,
+               table2_power, darknet_full, faults, kernel_backend,
                ordered_collectives, ordering_throughput, roofline,
                serving, static_layout, step_overhaul)
 
@@ -42,6 +42,8 @@ SUITES = {
     "roofline": roofline.main,                # from dry-run artifacts
     "static_layout": static_layout.main,      # trained-vs-random layouts
     "serving": serving.main,                  # closed-loop: latency vs load
+    "faults": faults.main,                    # fault injection: BT + SLO
+                                              # under flips/dead links
 }
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_noc.json")

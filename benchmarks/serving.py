@@ -10,12 +10,23 @@ throughput and joins the per-transform BT (O0..O3a) from the offline sweep
 rows - by the gating contract the timing axis is transform-independent, so
 one gated drain per load point prices the whole transform family.
 
+Since this PR the load axis crosses a *fault-rate* axis
+(``repro.noc.faults``): every point re-drains under seeded soft errors
+with CRC-8 flit protection and bounded retransmission, under a
+per-inference deadline and queue-depth admission control, and reports SLO
+attainment + goodput + shed/failed counts alongside p50/p99. The
+PR-8 follow-on rides along: a latency SLO curve on trained DarkNet on the
+16x16 mesh (packet-subsampled - ``max_packets_per_layer`` below - to keep
+the gated fault drains tractable), recorded with the fault-rate column.
+
 Hard assertions (the suite fails rather than record nonsense): every gated
-drain conserves its packets, and p50 latency is monotonically
-non-decreasing along the offered-load axis of every combo.
+drain conserves its packets, p50 latency is monotonically non-decreasing
+along the offered-load axis of every combo, and SLO attainment is
+non-increasing along the fault-rate axis (flip schedules are nested in
+rate).
 
 ``REPRO_BENCH_SMOKE=1`` shrinks to random-init LeNet on 4x4/MC2 with two
-load points - the CI gate for the closed-loop path.
+load points x two fault rates - the CI gate for the closed-loop path.
 """
 from __future__ import annotations
 
@@ -56,51 +67,111 @@ def _grid() -> SweepGrid:
         serving_inferences=4 if SMOKE else 16,
         compute_latency=32,
         arrival="uniform",
-        chunk=1024)
+        chunk=1024,
+        fault_rates=(0.0, 1e-3) if SMOKE else (0.0, 1e-3, 5e-3),
+        fault_protect="crc8",
+        deadline=6000 if SMOKE else 20000,
+        admit_queue_depth=6 if SMOKE else 8)
 
 
-def main() -> dict:
-    grid = _grid()
+def _darknet_grid() -> SweepGrid:
+    """The PR-8 follow-on: trained DarkNet on the 16x16 mesh. Each
+    inference's traffic is packet-subsampled (8 packets/layer vs
+    darknet_full's complete streams) so the load x fault-rate cross of
+    gated retransmission drains stays tractable; the SLO curve's *shape*
+    (attainment falling with fault rate, queueing past saturation) is the
+    deliverable, not absolute DarkNet cycle counts."""
+    return SweepGrid(
+        meshes=("16x16_mc16",),
+        transforms=("O0", "O1", "O2"),
+        tiebreaks=("pattern",),
+        precisions=("fixed8",),
+        models=("darknet",),
+        max_packets_per_layer=8,
+        result_phase=True,
+        offered_loads=(1.0, 4.0, 16.0),
+        serving_inferences=8,
+        compute_latency=32,
+        arrival="uniform",
+        chunk=1024,
+        fault_rates=(0.0, 1e-3, 5e-3),
+        fault_protect="crc8",
+        deadline=20000,
+        admit_queue_depth=8)
+
+
+_POINT_KEYS = ("mesh", "model", "offered_load", "fault_rate", "throughput",
+               "p50_latency", "p99_latency", "slo_attainment", "goodput",
+               "shed", "failed", "completed", "truncated")
+_COMBO_KEYS = ("mesh", "model", "saturation_tput", "latency_monotone",
+               "slo_monotone_in_fault", "transforms")
+
+
+def _run_one(grid: SweepGrid, tag: str, out_name: str) -> dict:
     layers = _layers(grid.models[0])
     layers_fn = lambda _name: layers         # noqa: E731 - one shared load
-
-    out_path = os.path.join(OUT, "serving.json")
-    report = run_serving(grid, layers_fn, out_path=out_path,
+    report = run_serving(grid, layers_fn,
+                         out_path=os.path.join(OUT, out_name),
                          check_conservation=True)
     srv = report.stats["serving"]
 
     bad = [c for c in srv["combos"] if not c["latency_monotone"]]
     if bad:
         raise AssertionError(
-            "p50 latency not monotone in offered load for combos: "
+            f"{tag}: p50 latency not monotone in offered load for combos: "
+            + ", ".join(f"{c['mesh']}/{c['model']}" for c in bad))
+    bad = [c for c in srv["combos"]
+           if not c.get("slo_monotone_in_fault", True)]
+    if bad:
+        raise AssertionError(
+            f"{tag}: SLO attainment not monotone in fault rate for combos: "
             + ", ".join(f"{c['mesh']}/{c['model']}" for c in bad))
 
     for p in srv["points"]:
-        print(f"serving/{p['mesh']}/{p['model']}/load{p['offered_load']:g},"
-              f"{p['p50_latency']},p99={p['p99_latency']} "
-              f"tput={p['throughput']:.2f}")
+        gp = p["goodput"]
+        tput = p["throughput"]
+        print(f"{tag}/{p['mesh']}/{p['model']}/load{p['offered_load']:g}"
+              f"/rate{p['fault_rate']:g},{p['p50_latency']},"
+              f"p99={p['p99_latency']} "
+              f"tput={tput if tput is None else round(tput, 2)} "
+              f"slo={p['slo_attainment']} "
+              f"goodput={gp if gp is None else round(gp, 2)} "
+              f"shed={p['shed']} failed={p['failed']}")
     for c in srv["combos"]:
-        print(f"serving/{c['mesh']}/{c['model']}/saturation,"
+        print(f"{tag}/{c['mesh']}/{c['model']}/saturation,"
               f"{c['saturation_tput']:.2f},"
-              f"monotone={c['latency_monotone']}")
+              f"monotone={c['latency_monotone']} "
+              f"slo_monotone={c.get('slo_monotone_in_fault')}")
+    return srv
 
-    bench = {
-        "offered_loads": srv["offered_loads"],
-        "inferences": srv["inferences"],
-        "compute_latency": srv["compute_latency"],
-        "arrival": srv["arrival"],
-        "conservation_checked": srv["conservation_checked"],
-        "points": [
-            {k: p[k] for k in ("mesh", "model", "offered_load",
-                               "throughput", "p50_latency", "p99_latency",
-                               "completed", "truncated")}
-            for p in srv["points"]],
-        "combos": [
-            {k: c[k] for k in ("mesh", "model", "saturation_tput",
-                               "latency_monotone", "transforms")}
-            for c in srv["combos"]],
-        "serving_s": srv["serving_s"],
-    }
+
+def main() -> dict:
+    srv = _run_one(_grid(), "serving", "serving.json")
+    dk = None
+    if not SMOKE:
+        dk = _run_one(_darknet_grid(), "serving", "serving_darknet.json")
+
+    def _bench(s):
+        return {
+            "offered_loads": s["offered_loads"],
+            "fault_rates": s["fault_rates"],
+            "fault_protect": s["fault_protect"],
+            "deadline": s["deadline"],
+            "admit_queue_depth": s["admit_queue_depth"],
+            "inferences": s["inferences"],
+            "compute_latency": s["compute_latency"],
+            "arrival": s["arrival"],
+            "conservation_checked": s["conservation_checked"],
+            "points": [{k: p.get(k) for k in _POINT_KEYS}
+                       for p in s["points"]],
+            "combos": [{k: c.get(k) for k in _COMBO_KEYS}
+                       for c in s["combos"]],
+            "serving_s": s["serving_s"],
+        }
+
+    bench = _bench(srv)
+    if dk is not None:
+        bench["darknet_16x16"] = _bench(dk)
     return {"results": srv, "bench": bench}
 
 

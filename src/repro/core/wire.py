@@ -26,9 +26,11 @@ element order).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Optional
 
 import jax
+import numpy as np
 
 from . import ordering
 from .flits import FlitStream, pack, pack_paired
@@ -45,6 +47,10 @@ __all__ = [
     "TRANSFORMS",
     "by_name",
     "measure",
+    "PROTECTION_BITS",
+    "protection_overhead_bits",
+    "protection_syndrome_masks",
+    "crc8_reference",
 ]
 
 
@@ -222,6 +228,73 @@ TRANSFORMS = {
 
 def by_name(name: str, window: Optional[int] = None, **kw) -> WireTransform:
     return TRANSFORMS[name](name=name, window=window, **kw)
+
+
+# --------------------------------------------------------------------------
+# Flit protection codes (the fault-injection wire axis; see DESIGN.md
+# "Fault model & protection"). Charged per transmitted flit like the O2
+# recovery index: these bits ride the sideband, not the payload lanes, so
+# they never perturb the recorded payload BT - the cost is accounted
+# analytically via protection_overhead_bits.
+
+PROTECTION_BITS = {"none": 0, "parity": 1, "crc8": 8}
+
+
+def protection_overhead_bits(protect: str, num_flits: int) -> int:
+    """Total protection bits owed for ``num_flits`` transmitted flits.
+
+    Retransmitted flits carry the code again, so callers charge the
+    *transmitted* flit count (injections including retries), not the
+    logical payload size.
+    """
+    return PROTECTION_BITS[protect] * int(num_flits)
+
+
+def crc8_reference(data: bytes) -> int:
+    """Bitwise CRC-8 (poly 0x07, init 0, MSB-first, no xor-out).
+
+    With init 0 the map is linear over GF(2): ``crc(a ^ b) = crc(a) ^
+    crc(b)``, which is what lets :func:`protection_syndrome_masks` reduce
+    the per-flit code to a handful of masked popcount parities.
+    """
+    crc = 0
+    for byte in data:
+        crc ^= byte
+        for _ in range(8):
+            crc = ((crc << 1) ^ 0x07) & 0xFF if crc & 0x80 else (crc << 1) & 0xFF
+    return crc
+
+
+@functools.lru_cache(maxsize=None)
+def protection_syndrome_masks(protect: str, lanes: int) -> np.ndarray:
+    """``(code_bits, lanes)`` uint32 masks: code bit ``j`` of a flit payload
+    equals ``popcount(payload & masks[j]) & 1`` summed over the lanes.
+
+    The flit message is the payload words in lane order, little-endian
+    bytes, LSB-first bits. Because both codes are linear with zero init,
+    the code of any message is the XOR of the codes of its set bits -
+    precomputing the per-bit syndromes folds CRC8 into 8 masked parities
+    the simulator can evaluate with the ``popcount_hw`` it already has.
+    Parity is the single all-ones mask (detects odd-weight corruption
+    only; the benchmark reports what slips through).
+    """
+    pbits = PROTECTION_BITS[protect]
+    masks = np.zeros((pbits, lanes), dtype=np.uint32)
+    if protect == "parity":
+        masks[0, :] = 0xFFFFFFFF
+    elif protect == "crc8":
+        nbytes = lanes * 4
+        for pos in range(lanes * 32):
+            msg = bytearray(nbytes)
+            msg[pos // 8] = 1 << (pos % 8)
+            syndrome = crc8_reference(bytes(msg))
+            for j in range(8):
+                if syndrome >> j & 1:
+                    masks[j, pos // 32] |= np.uint32(1 << (pos % 32))
+    elif protect != "none":
+        raise KeyError(f"unknown protection scheme {protect!r}; "
+                       f"supported: {sorted(PROTECTION_BITS)}")
+    return masks
 
 
 def measure(stream: FlitStream) -> dict:

@@ -2,31 +2,41 @@
 and result phases), sweep engine, power model."""
 from .topology import (NocConfig, PAPER_NOCS, PLACEMENTS, AFFINITIES,
                        xy_route, neighbor_table, make_noc, mc_placement,
-                       mesh_by_name, affinity_mc_table, packet_mean_hops)
-from .sim import (Traffic, Wire, SimResult, simulate, simulate_batch,
-                  make_state, fuse_traffic, pack_sideband)
+                       mesh_by_name, affinity_mc_table, packet_mean_hops,
+                       alive_link_mask, fault_route_table)
+from .sim import (Traffic, Wire, SimResult, DrainTimeout, simulate,
+                  simulate_batch, make_state, fuse_traffic, pack_sideband)
 from .traffic import (LayerTraffic, build_traffic, build_traffic_batch,
                       build_traffic_streamed, build_result_traffic,
                       layer_results, conv_layer_traffic,
-                      linear_layer_traffic)
+                      linear_layer_traffic, filter_packets)
 from .sweep import (SweepGrid, SweepReport, run_sweep, run_serving,
                     recovery_overhead_bits)
 from .online import (ArrivalProcess, OnlineResult, simulate_online,
                      latency_percentiles, percentile)
+from .faults import (FaultModel, FaultDrain, StepFaults, protect_wire,
+                     drain_with_retries, simulate_faulty,
+                     STATUS_DELIVERED, STATUS_DROPPED,
+                     STATUS_RETRY_EXHAUSTED, STATUS_UNSENT)
 from . import power
 
 __all__ = [
     "NocConfig", "PAPER_NOCS", "PLACEMENTS", "AFFINITIES", "xy_route",
     "neighbor_table", "make_noc", "mc_placement", "mesh_by_name",
-    "affinity_mc_table", "packet_mean_hops",
-    "Traffic", "Wire", "SimResult", "simulate", "simulate_batch",
-    "make_state", "fuse_traffic", "pack_sideband",
+    "affinity_mc_table", "packet_mean_hops", "alive_link_mask",
+    "fault_route_table",
+    "Traffic", "Wire", "SimResult", "DrainTimeout", "simulate",
+    "simulate_batch", "make_state", "fuse_traffic", "pack_sideband",
     "LayerTraffic", "build_traffic", "build_traffic_batch",
     "build_traffic_streamed", "build_result_traffic", "layer_results",
-    "conv_layer_traffic", "linear_layer_traffic",
+    "conv_layer_traffic", "linear_layer_traffic", "filter_packets",
     "SweepGrid", "SweepReport", "run_sweep", "run_serving",
     "recovery_overhead_bits",
     "ArrivalProcess", "OnlineResult", "simulate_online",
     "latency_percentiles", "percentile",
+    "FaultModel", "FaultDrain", "StepFaults", "protect_wire",
+    "drain_with_retries", "simulate_faulty",
+    "STATUS_DELIVERED", "STATUS_DROPPED", "STATUS_RETRY_EXHAUSTED",
+    "STATUS_UNSENT",
     "power",
 ]

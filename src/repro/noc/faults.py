@@ -1,0 +1,468 @@
+"""Fault injection for the NoC: soft errors, dead links, protection, retry.
+
+The fault model (DESIGN.md "Fault model & protection") has two axes:
+
+* **Transient faults** - a seeded per-link soft-error process flips one
+  payload bit of a traversing flit with probability ``rate`` per flit-hop.
+  Flips are XORed into the payload lanes *inside the router step*, before
+  the BT recorders, so every downstream wire sees (and every BT figure
+  prices) the corrupted signal. The flip schedule is a pure counter hash of
+  ``(seed, cycle, link)``: replays are bit-exact, and a lower rate's flip
+  set is a subset of a higher rate's (same hash, smaller threshold), which
+  is what makes SLO degradation monotone in ``rate`` by construction.
+  Sideband and packet-ledger lanes are never flipped - control corruption
+  is out of scope; the model is payload corruption on data wires.
+* **Permanent (hard) faults** - ``dead_links`` / ``dead_routers`` are
+  masked out of the routing tables before the run
+  (:func:`repro.noc.topology.fault_route_table`): the detour table routes
+  around them where a path exists, and packets whose destination became
+  unreachable are dropped *pre-injection* with ``STATUS_DROPPED`` - never
+  silently lost; the conservation ledger accounts for them.
+
+Protection (``protect = none | parity | crc8``) stamps each flit's code
+into sideband bits 16.. at fuse time (:func:`protect_wire`) and re-derives
+it at ejection; both codes are linear with zero init, so detection is a
+function of the flip mask alone, never of the payload value - the gating
+contract ("timing is schedule-determined") survives fault injection, and
+one fault drain still prices every ordering transform's timing. Detected
+corrupt packets are retransmitted (:func:`drain_with_retries`) under a
+bounded retry budget with exponential ACK backoff; what remains corrupt
+after the budget is ``STATUS_RETRY_EXHAUSTED``. Undetected flips deliver
+silently - ``FaultDrain.corrupted`` and the ledger's ``silent_corrupt``
+count them from the ground-truth flip ledger (an upper bound: double
+flips on one bit cancel on the wire but still count as events).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.bits import popcount_hw
+from repro.core.wire import (PROTECTION_BITS, protection_overhead_bits,
+                             protection_syndrome_masks)
+from .online import FAR_RELEASE, _drain_gated
+from .sim import META_TAIL, SimResult, Traffic, Wire, _mc_array
+from .topology import NocConfig, fault_route_table
+from .traffic import filter_packets
+
+__all__ = [
+    "FaultModel", "StepFaults", "FaultDrain",
+    "STATUS_DELIVERED", "STATUS_DROPPED", "STATUS_RETRY_EXHAUSTED",
+    "STATUS_UNSENT",
+    "protect_wire", "drain_with_retries", "simulate_faulty",
+]
+
+# Per-packet terminal status after a fault drain. The four values
+# partition every packet id: the conservation identity
+# ``delivered + dropped + retry_exhausted + unsent == injected_packets``
+# is asserted into the ledger, not assumed.
+STATUS_DELIVERED = 0        # tail ejected, last transmission clean/undetected
+STATUS_DROPPED = 1          # destination unreachable under hard faults
+STATUS_RETRY_EXHAUSTED = 2  # still detected-corrupt after the retry budget
+STATUS_UNSENT = 3           # never delivered: gated off (shed), truncated,
+                            # or its retry never completed
+
+
+class StepFaults(NamedTuple):
+    """Hashable static fault spec threaded into ``_make_step`` (and the
+    ``lru_cache`` runner keys): one compiled step per distinct spec."""
+
+    rate: float
+    seed: int
+    protect: str
+    dead_links: Tuple[Tuple[int, int], ...]
+    dead_routers: Tuple[int, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultModel:
+    """One fault-injection scenario (deterministic given ``seed``).
+
+    rate: per-flit-hop single-bit soft-error probability (NI links and
+        router output links alike).
+    protect: flit protection scheme (``repro.core.wire.PROTECTION_BITS``);
+        its sideband bits are charged via ``protection_overhead_bits`` on
+        *transmitted* flits, retries included.
+    dead_links: ``(router, port)`` output links that are permanently dead
+        (both directions of the physical channel die together).
+    dead_routers: routers whose every channel is dead.
+    max_retries: retransmission budget per packet beyond the first send.
+    ack_latency: cycles from tail ejection to the NACK reaching the
+        source NI (round 1 re-release = eject + ack_latency).
+    backoff: multiplicative ACK-latency backoff per retry round.
+    """
+
+    rate: float = 0.0
+    seed: int = 0
+    protect: str = "none"
+    dead_links: Tuple[Tuple[int, int], ...] = ()
+    dead_routers: Tuple[int, ...] = ()
+    max_retries: int = 3
+    ack_latency: int = 32
+    backoff: int = 2
+
+    def __post_init__(self):
+        if not 0.0 <= self.rate <= 1.0:
+            raise ValueError(f"fault rate must be in [0, 1], got {self.rate!r}")
+        if self.protect not in PROTECTION_BITS:
+            raise ValueError(f"unknown protection scheme {self.protect!r}; "
+                             f"supported: {sorted(PROTECTION_BITS)}")
+        if self.max_retries < 0:
+            raise ValueError("max_retries must be >= 0")
+        if self.ack_latency < 0:
+            raise ValueError("ack_latency must be >= 0")
+        if self.backoff < 1:
+            raise ValueError("backoff must be >= 1")
+        object.__setattr__(self, "dead_links",
+                           tuple((int(r), int(p)) for r, p in self.dead_links))
+        object.__setattr__(self, "dead_routers",
+                           tuple(int(r) for r in self.dead_routers))
+
+    @property
+    def is_null(self) -> bool:
+        """True when the model injects nothing and protects nothing - the
+        scenario the bit-identity pin runs under."""
+        return (self.rate == 0.0 and self.protect == "none"
+                and not self.dead_links and not self.dead_routers)
+
+    @property
+    def has_hard_faults(self) -> bool:
+        return bool(self.dead_links or self.dead_routers)
+
+    def static(self) -> StepFaults:
+        return StepFaults(float(self.rate), int(self.seed), self.protect,
+                          self.dead_links, self.dead_routers)
+
+    def overhead_bits(self, num_flits: int) -> int:
+        return protection_overhead_bits(self.protect, num_flits)
+
+
+def protect_wire(wire: Wire, protect: str, lanes: int) -> Wire:
+    """Stamp each flit's protection code into sideband bits ``16..``.
+
+    The code is computed over the payload lanes with the same syndrome
+    masks the step's ejection check uses, so a clean flit always verifies.
+    Protection bits ride the sideband word, which the BT recorders exclude
+    by construction - their wire cost is charged analytically instead
+    (``overhead_bits_per_value`` convention, like the O2 recovery index).
+    """
+    pbits = PROTECTION_BITS[protect]
+    if not pbits:
+        return wire
+    masks = jnp.asarray(protection_syndrome_masks(protect, lanes), jnp.uint32)
+    pay = wire.wire[..., :lanes]
+    code = jnp.zeros(pay.shape[:-1], jnp.uint32)
+    for j in range(pbits):
+        pj = (popcount_hw(pay & masks[j]).sum(-1) & 1).astype(jnp.uint32)
+        code = code | (pj << j)
+    side = wire.wire[..., lanes] | (code << 16)
+    rest = wire.wire[..., lanes + 1:]
+    return Wire(jnp.concatenate([pay, side[..., None], rest], axis=-1),
+                wire.length)
+
+
+@dataclasses.dataclass
+class FaultDrain:
+    """One fault drain: cumulative recorders plus per-packet outcomes.
+
+    ``sim`` accumulates link/NI BT over *every* transmission round - the
+    honest wire cost of retransmission. ``status`` is the terminal
+    per-packet outcome (``STATUS_*``); ``corrupted`` marks silent
+    corruption among delivered packets (ground-truth flips the protection
+    scheme never saw). ``ledger`` carries the conservation identity and
+    the per-round breakdown the CI gate asserts.
+    """
+
+    sim: SimResult
+    inj_time: np.ndarray        # (NP,) first-injection cycles
+    eject_time: np.ndarray      # (NP,) last tail-ejection cycle, -1 never
+    eject_counts: np.ndarray    # (NP+1,) tail ejections per packet id
+    status: np.ndarray          # (NP,) int32 STATUS_*
+    corrupted: np.ndarray       # (NP,) bool silent corruption
+    retries: np.ndarray         # (NP,) int32 retransmissions used
+    rounds: list                # per-round dict breakdown
+    ledger: dict
+    drained: bool
+
+
+def _packet_endpoints(traffic: Traffic, mc_nodes: np.ndarray,
+                      npkt: int) -> Tuple[np.ndarray, np.ndarray]:
+    """(source_router, dest_router) per packet id (-1 for absent ids)."""
+    meta = np.asarray(traffic.meta)
+    pkt = np.asarray(traffic.pkt)
+    dest = np.asarray(traffic.dest)
+    valid = (np.arange(meta.shape[1])[None, :]
+             < np.asarray(traffic.length)[:, None])
+    tails = valid & ((meta & META_TAIL) > 0)
+    rows, _ = np.nonzero(tails)
+    psrc = np.full(npkt, -1, np.int64)
+    pdst = np.full(npkt, -1, np.int64)
+    ids = pkt[tails]
+    psrc[ids] = np.asarray(mc_nodes, np.int64)[rows]
+    pdst[ids] = dest[tails]
+    return psrc, pdst
+
+
+def _gate_counts(traffic: Traffic, keepf: np.ndarray,
+                 inc: np.ndarray) -> np.ndarray:
+    """Kept-flit count per (stream, gate) after a flit keep-mask: gate k
+    still unlocks exactly its own surviving flits once ``filter_packets``
+    compacts the stream (compaction is order-preserving)."""
+    inc = np.asarray(inc, np.int64)
+    m, k = inc.shape
+    cum = np.cumsum(inc, axis=1)
+    pos = np.arange(keepf.shape[1])
+    out = np.zeros((m, k), np.int64)
+    for i in range(m):
+        gates = np.searchsorted(cum[i], pos, side="right")
+        np.add.at(out[i], np.clip(gates[keepf[i]], 0, k - 1), 1)
+    return out
+
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(int(n) - 1, 0).bit_length() if n > 1 else 1
+
+
+def _per_packet_gates(traffic: Traffic, release_per_pkt: np.ndarray,
+                      npkt: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-packet gates for a retry round: gate j of stream m unlocks that
+    stream's j-th retried packet at its NACK-derived release cycle,
+    monotone along the stream (the NI retransmit queue is in-order). Gate
+    counts are padded to a power of two so the compiled gated runner is
+    reused across retry rounds of similar size."""
+    meta = np.asarray(traffic.meta)
+    pkt = np.asarray(traffic.pkt)
+    length = np.asarray(traffic.length)
+    m, t = meta.shape
+    valid = np.arange(t)[None, :] < length[:, None]
+    tails = valid & ((meta & META_TAIL) > 0)
+    kmax = int(tails.sum(axis=1).max()) if m else 0
+    kpad = _next_pow2(max(kmax, 1))
+    inc = np.zeros((m, kpad), np.int64)
+    rel = np.full((m, kpad), int(FAR_RELEASE), np.int64)
+    for i in range(m):
+        tpos = np.flatnonzero(tails[i])
+        if not tpos.size:
+            continue
+        counts = np.diff(np.concatenate([[-1], tpos]))
+        ids = pkt[i, tpos]
+        inc[i, :ids.size] = counts
+        rel[i, :ids.size] = release_per_pkt[ids]
+    rel = np.maximum.accumulate(np.minimum(rel, int(FAR_RELEASE)), axis=1)
+    return inc, rel
+
+
+def drain_with_retries(cfg: NocConfig, traffic: Traffic, model: FaultModel, *,
+                       mc_nodes: Union[np.ndarray, Sequence[int]],
+                       release: Optional[np.ndarray] = None,
+                       inc: Optional[np.ndarray] = None,
+                       count_headers: bool = True, chunk: int = 2048,
+                       max_cycles: int = 2_000_000,
+                       allow_truncation: bool = False,
+                       controller=None) -> FaultDrain:
+    """Drain ``traffic`` under ``model`` with bounded retransmission.
+
+    Round 0 sends everything the hard-fault reachability precheck admits
+    (unreachable packets are ``STATUS_DROPPED`` up front, their flits
+    removed from the wire and their gate budgets shrunk accordingly).
+    After each round, packets whose protection check flagged a corrupt
+    flit at ejection are rebuilt *from the clean source data* and
+    re-released at ``eject + ack_latency * backoff**round`` through the
+    same gated simulator, carrying the ``SimState`` forward so BT
+    recorders, cycle count, and ledgers accumulate across rounds -
+    retransmitted flits toggle real wires and the reported BT says so.
+    ``max_cycles`` is a whole-drain budget across all rounds.
+
+    release / inc: optional ``(M, K)`` gate schedule for round 0 (the
+        closed-loop serving path); default is one gate per stream opening
+        at cycle 0 (the offline drain).
+    controller: optional admission controller, consulted during round 0
+        only (retries of admitted packets are never shed).
+    """
+    npkt = int(traffic.num_packets)
+    if npkt <= 0:
+        raise ValueError("fault drains need Traffic with num_packets set")
+    if np.asarray(traffic.words).ndim != 3:
+        raise ValueError("fault drains take unbatched Traffic")
+    m = int(traffic.length.shape[0])
+    mc_nodes = np.asarray(mc_nodes, np.int64)
+    spec = model.static()
+
+    status = np.full(npkt, STATUS_UNSENT, np.int32)
+    base = traffic
+    if release is None:
+        rel0 = np.zeros((m, 1), np.int64)
+        inc0 = np.asarray(traffic.length, np.int64)[:, None]
+    else:
+        rel0 = np.asarray(release, np.int64)
+        inc0 = np.asarray(inc, np.int64)
+
+    # --- hard-fault reachability precheck: drop before injecting.
+    dropped = np.zeros(npkt, bool)
+    if model.has_hard_faults:
+        _, reachable = fault_route_table(cfg, spec.dead_links,
+                                         spec.dead_routers)
+        psrc, pdst = _packet_endpoints(traffic, mc_nodes, npkt)
+        present = psrc >= 0
+        dead_r = np.zeros(cfg.num_routers, bool)
+        if spec.dead_routers:
+            dead_r[list(spec.dead_routers)] = True
+        dropped = present & (~reachable[np.clip(psrc, 0, None),
+                                        np.clip(pdst, 0, None)]
+                             | dead_r[np.clip(psrc, 0, None)]
+                             | dead_r[np.clip(pdst, 0, None)])
+        if dropped.any():
+            status[dropped] = STATUS_DROPPED
+            meta = np.asarray(traffic.meta)
+            pkt = np.asarray(traffic.pkt)
+            valid = (np.arange(meta.shape[1])[None, :]
+                     < np.asarray(traffic.length)[:, None])
+            keepf = valid & ~dropped[np.clip(pkt, 0, npkt - 1)]
+            inc0 = _gate_counts(traffic, keepf, inc0)
+            base = filter_packets(traffic, ~dropped)
+
+    # --- never-release prefilter: gates pinned at FAR_RELEASE (inferences
+    # whose upstream phase failed) hold their flits forever, so those
+    # packets must not count toward the drain target. They stay
+    # STATUS_UNSENT. Skipped under a controller, whose gates all START at
+    # the far sentinel and open as arrivals are admitted.
+    if controller is None and (np.asarray(rel0) >= int(FAR_RELEASE)).any():
+        inc_arr = np.asarray(inc0, np.int64)
+        cum = np.cumsum(inc_arr, axis=1)
+        ngates = inc_arr.shape[1]
+        pos = np.arange(np.asarray(base.meta).shape[1])
+        valid = pos[None, :] < np.asarray(base.length)[:, None]
+        openg = np.asarray(rel0) < int(FAR_RELEASE)
+        keepf = np.zeros_like(valid)
+        for i in range(m):
+            gates = np.searchsorted(cum[i], pos, side="right")
+            keepf[i] = valid[i] & openg[i][np.clip(gates, 0, ngates - 1)]
+        if not keepf[valid].all():
+            keep_pkt = np.zeros(npkt, bool)
+            keep_pkt[np.unique(np.asarray(base.pkt)[keepf])] = True
+            inc0 = _gate_counts(base, keepf, inc_arr)
+            base = filter_packets(base, keep_pkt)
+
+    sent = np.zeros(npkt, bool)
+    pkt0 = np.asarray(base.pkt)
+    valid0 = (np.arange(pkt0.shape[1])[None, :]
+              < np.asarray(base.length)[:, None])
+    sent[np.unique(pkt0[valid0])] = True
+
+    cur, cur_rel, cur_inc = base, rel0, inc0
+    state = None
+    prev_flip = np.zeros(npkt, np.int64)
+    prev_bad = np.zeros(npkt, np.int64)
+    prev_ep = np.zeros(npkt, np.int64)
+    final_bad = np.zeros(npkt, np.int64)   # detections in the final round
+    last_dep = np.zeros(npkt, np.int64)    # ejections in the final round
+    final_flip = np.zeros(npkt, np.int64)
+    retries = np.zeros(npkt, np.int32)
+    tx_mask = sent.copy()                  # packets transmitted this round
+    total_tx_flits = 0
+    rounds = []
+    drained = True
+    res = inj_t = ej_t = ep_full = None
+
+    for rnd in range(model.max_retries + 1):
+        total_tx_flits += int(np.asarray(cur.length).sum())
+        res, inj_t, ej_t, ep_full, rnd_drained, state = _drain_gated(
+            cfg, cur, mc_nodes, cur_rel, cur_inc,
+            count_headers=count_headers, chunk=chunk, max_cycles=max_cycles,
+            allow_truncation=allow_truncation, faults=spec, state=state,
+            controller=controller if rnd == 0 else None)
+        drained = drained and rnd_drained
+        flip_now = np.asarray(state.flip_pkt)[:npkt].astype(np.int64)
+        bad_now = np.asarray(state.bad_pkt)[:npkt].astype(np.int64)
+        ep_now = ep_full[:npkt].astype(np.int64)
+        dflip = flip_now - prev_flip
+        dbad = bad_now - prev_bad
+        dep = ep_now - prev_ep
+        prev_flip, prev_bad, prev_ep = flip_now, bad_now, ep_now
+        tx = np.flatnonzero(tx_mask)
+        final_bad[tx] = dbad[tx]
+        final_flip[tx] = dflip[tx]
+        last_dep[tx] = dep[tx]
+        bad_ids = tx[dbad[tx] > 0]
+        rounds.append({
+            "round": rnd,
+            "packets": int(tx.size),
+            "flits": int(np.asarray(cur.length).sum()),
+            "flip_events": int(dflip.sum()),
+            "detected_bad_flits": int(dbad.sum()),
+            "corrupt_packets": int(bad_ids.size),
+            "drain_cycle": res.drain_cycle,
+        })
+        if (controller is not None
+                and getattr(controller, "restart_needed", False)):
+            # Admission restart protocol: the caller replays the whole
+            # fault drain with the enlarged shed set; everything below is
+            # discarded.
+            drained = False
+            break
+        if not rnd_drained or not bad_ids.size or rnd == model.max_retries:
+            break
+        retries[bad_ids] += 1
+        cur = filter_packets(base, bad_ids)
+        delay = model.ack_latency * model.backoff ** rnd
+        per_pkt_rel = np.full(npkt, int(FAR_RELEASE), np.int64)
+        per_pkt_rel[bad_ids] = ej_t[bad_ids].astype(np.int64) + delay
+        cur_inc, cur_rel = _per_packet_gates(cur, per_pkt_rel, npkt)
+        tx_mask = np.zeros(npkt, bool)
+        tx_mask[bad_ids] = True
+        # Re-arm the injection pointers for the round's fresh wire; every
+        # other leaf (recorders, ledgers, link state, cycle) carries over.
+        state = state._replace(inj_ptr=jnp.zeros_like(state.inj_ptr))
+
+    delivered = sent & (last_dep > 0) & (final_bad == 0)
+    exhausted = sent & (last_dep > 0) & (final_bad > 0)
+    status[delivered] = STATUS_DELIVERED
+    status[exhausted] = STATUS_RETRY_EXHAUSTED
+    corrupted = delivered & (final_flip > 0)
+
+    counts = {
+        "delivered": int((status == STATUS_DELIVERED).sum()),
+        "dropped": int((status == STATUS_DROPPED).sum()),
+        "retry_exhausted": int((status == STATUS_RETRY_EXHAUSTED).sum()),
+        "unsent": int((status == STATUS_UNSENT).sum()),
+    }
+    ledger = {
+        "injected_packets": npkt,
+        **counts,
+        "conservation_ok": sum(counts.values()) == npkt,
+        "silent_corrupt": int(corrupted.sum()),
+        "flip_events": int(prev_flip.sum()),
+        "detected_bad_flits": int(prev_bad.sum()),
+        "tail_ejections": int(prev_ep.sum()),
+        "retried_packets": int((retries > 0).sum()),
+        "total_retries": int(retries.sum()),
+        "transmission_rounds": len(rounds),
+        "transmitted_flits": total_tx_flits,
+        "protection_overhead_bits":
+            protection_overhead_bits(model.protect, total_tx_flits),
+        "drained": drained,
+    }
+    sim = dataclasses.replace(res, injected=total_tx_flits)
+    return FaultDrain(sim=sim, inj_time=inj_t, eject_time=ej_t,
+                      eject_counts=ep_full, status=status,
+                      corrupted=corrupted, retries=retries, rounds=rounds,
+                      ledger=ledger, drained=drained)
+
+
+def simulate_faulty(cfg: NocConfig, traffic: Traffic, model: FaultModel, *,
+                    mc_nodes: Optional[Sequence[int]] = None,
+                    count_headers: bool = True, chunk: int = 2048,
+                    max_cycles: int = 2_000_000,
+                    allow_truncation: bool = False) -> FaultDrain:
+    """Offline fault drain: every gate open at cycle 0 (the fault-aware
+    counterpart of :func:`repro.noc.sim.simulate`, one retry loop around
+    the same gated step). ``model.is_null`` reproduces ``simulate``'s
+    BT/drain figures exactly - the bit-identity pin in the test suite."""
+    m = int(traffic.length.shape[0])
+    nodes = np.asarray(_mc_array(cfg, traffic, m, batched=False))
+    return drain_with_retries(
+        cfg, traffic, model, mc_nodes=nodes, count_headers=count_headers,
+        chunk=chunk, max_cycles=max_cycles, allow_truncation=allow_truncation)

@@ -53,14 +53,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .sim import (META_TAIL, SimResult, Traffic, Wire, _conservation_error,
-                  _make_step, _mc_array, _mesh_key, _result, fuse_traffic,
-                  make_state)
+from .sim import (META_TAIL, SimResult, SimState, Traffic, Wire,
+                  _conservation_error, _drain_timeout, _make_step, _mc_array,
+                  _mesh_key, _result, fuse_traffic, make_state)
 from .topology import NocConfig
 from .traffic import concat_inferences
 
 __all__ = ["ArrivalProcess", "OnlineResult", "simulate_online",
            "percentile", "latency_percentiles", "ARRIVAL_KINDS"]
+
+# Release-cycle sentinel for gates that must never open (shed inferences,
+# inferences whose upstream phase failed): far beyond any max_cycles.
+FAR_RELEASE = np.int64(2**31 - 2)
 
 ARRIVAL_KINDS = ("uniform", "poisson", "backtoback")
 
@@ -120,9 +124,10 @@ class _GatedWire(NamedTuple):
     release: jax.Array
 
 
-def _make_online_step(mesh_key, count_headers: bool):
+def _make_online_step(mesh_key, count_headers: bool, faults=None):
     """The gated step: effective stream length = flits released by now."""
-    base = _make_step(mesh_key, count_headers, track=True, timestamps=True)
+    base = _make_step(mesh_key, count_headers, track=True, timestamps=True,
+                      faults=faults)
 
     def step(state, gwire: _GatedWire, mc_nodes):
         eff = jnp.sum(
@@ -134,10 +139,11 @@ def _make_online_step(mesh_key, count_headers: bool):
 
 
 @functools.lru_cache(maxsize=None)
-def _online_runner(mesh_key, count_headers: bool, chunk: int):
+def _online_runner(mesh_key, count_headers: bool, chunk: int, faults=None):
     """Compiled ``chunk``-cycle gated driver, cached like ``_chunk_runner``
-    (one executable per (state, wire, schedule) shape signature)."""
-    step = _make_online_step(mesh_key, count_headers)
+    (one executable per (state, wire, schedule) shape signature).
+    ``faults`` is a hashable fault spec (``faults.StepFaults``) or None."""
+    step = _make_online_step(mesh_key, count_headers, faults)
 
     def run(state, gwire: _GatedWire, mc_nodes):
         def body(s, _):
@@ -148,42 +154,163 @@ def _online_runner(mesh_key, count_headers: bool, chunk: int):
     return jax.jit(run, donate_argnums=0)
 
 
+class _AdmissionController:
+    """Chunk-boundary ingress admission control (the overload-shedding knob;
+    DESIGN.md "Graceful degradation").
+
+    The gated request drain calls :meth:`step` once per chunk dispatch.
+    Arrivals inside the upcoming window ``[cycle, cycle + chunk)`` are
+    decided then: an inference is admitted (its gates open at its arrival
+    cycle) unless the number of admitted-but-incomplete inferences has
+    reached ``threshold``, in which case it is shed - none of its flits
+    ever inject. Queue depth is read from the ejection ledger as of the
+    chunk boundary, so admission sees completions with up to one chunk of
+    staleness: the chunk size is part of the admission semantics exactly
+    as it is part of the gating semantics (releases quantize to chunk
+    boundaries too).
+
+    **Restart protocol.** The gated wire's effective length is a sum of
+    released gate increments, so a gate that never opens mid-stream would
+    make later gates unlock the wrong flit positions - shed flits must be
+    *removed from the wire*, which a traced drain cannot do mid-run.
+    Instead, the first :meth:`step` that sheds a NEW inference (one not in
+    ``preshed``) sets ``restart_needed`` and the drain aborts before
+    running another cycle; the caller replays the whole drain with the
+    enlarged shed set filtered out up front. Because a shed inference
+    never injected anything, the replay's dynamics are cycle-identical up
+    to the aborted boundary - the protocol is deterministic and
+    terminates after one replay per shedding boundary.
+    """
+
+    def __init__(self, arrivals: np.ndarray, threshold: int,
+                 inc: np.ndarray, chunk: int, npkt_per_inf: int,
+                 preshed: Optional[np.ndarray] = None):
+        self.arr = np.asarray(arrivals, np.int64)
+        self.k = int(self.arr.size)
+        self.threshold = int(threshold)
+        self.inc = np.asarray(inc, np.int64)            # (M, K)
+        self.chunk = int(chunk)
+        self.npkt = int(npkt_per_inf)
+        self.decided = np.zeros(self.k, bool)
+        self.admitted = np.zeros(self.k, bool)
+        self.release = np.full(self.inc.shape, FAR_RELEASE, np.int64)
+        self.restart_needed = False
+        if preshed is not None:
+            self.decided |= np.asarray(preshed, bool)
+
+    @property
+    def done(self) -> bool:
+        return bool(self.decided.all())
+
+    @property
+    def shed(self) -> np.ndarray:
+        return self.decided & ~self.admitted
+
+    def step(self, cycle: int, eject_time: np.ndarray):
+        """Decide arrivals before ``cycle + chunk``; returns the updated
+        ``(release, admitted_flit_total)`` or None when nothing changed."""
+        if self.restart_needed:
+            return None
+        todo = np.flatnonzero(~self.decided & (self.arr < cycle + self.chunk))
+        if not todo.size:
+            return None
+        et2 = np.asarray(eject_time).reshape(self.k, self.npkt)
+        outstanding = self.admitted & (et2 < 0).any(axis=1)
+        for j in todo:
+            self.decided[j] = True
+            if int(outstanding.sum()) >= self.threshold:
+                self.restart_needed = True               # shed: replay
+                continue
+            self.admitted[j] = True
+            outstanding[j] = True
+            self.release[:, j] = self.arr[j]
+        return self.release, int(self.inc[:, self.admitted].sum())
+
+
 def _drain_gated(cfg: NocConfig, traffic: Traffic, mc_nodes: np.ndarray,
                  release: np.ndarray, inc: np.ndarray, *,
                  count_headers: bool, chunk: int, max_cycles: int,
-                 allow_truncation: bool):
+                 allow_truncation: bool, faults=None,
+                 state: Optional[SimState] = None,
+                 controller: Optional[_AdmissionController] = None):
     """Drain ``traffic`` under a release schedule; harvest the ledgers.
 
-    Returns ``(sim_result, inj_time, eject_time, eject_pkt, drained)`` with
-    the ledgers as host arrays over the real packet ids. The gated step's
-    own ``drained_at`` is meaningless mid-gate (its completion test sees
-    only released flits), so ``drain_cycle`` is rebuilt from the ejection
-    ledger: the cycle after the last tail ejected.
+    Returns ``(sim_result, inj_time, eject_time, eject_pkt, drained,
+    state)`` with the ledgers as host arrays over the real packet ids. The
+    gated step's own ``drained_at`` is meaningless mid-gate (its completion
+    test sees only released flits), so ``drain_cycle`` is rebuilt from the
+    ejection ledger: the cycle after the last tail ejected.
+
+    faults: a hashable ``faults.StepFaults`` spec threaded into the step
+        (bit-flip schedule + protection checking); when set, protection
+        code bits are stamped into the fused wire's sideband and the state
+        carries the flip/bad packet ledgers.
+    state: resume from a carried :class:`SimState` (the retransmission
+        rounds of ``faults.drain_with_retries``): recorders and ledgers
+        accumulate across rounds, and the drain target is offset by the
+        carried ``ejected`` count. ``sim_result.injected`` still reports
+        only this round's flits.
+    controller: an :class:`_AdmissionController` consulted at every chunk
+        boundary; the drain completes only once the controller has decided
+        every arrival AND all admitted flits ejected.
     """
     m = int(traffic.length.shape[0])
     npkt = int(traffic.num_packets)
     if npkt <= 0:
         raise ValueError("gated drains need Traffic with num_packets set")
-    state = make_state(cfg, m, npkt=npkt, timestamps=True)
+    if state is None:
+        state = make_state(cfg, m, npkt=npkt, timestamps=True,
+                           fault_ledgers=faults is not None)
+        start_ej = 0
+    else:
+        start_ej = int(np.asarray(state.ejected))
     wire = fuse_traffic(traffic, track_pkt=True)
+    if faults is not None and faults.protect != "none":
+        from .faults import protect_wire
+        wire = protect_wire(wire, faults.protect, cfg.lanes)
     gwire = _GatedWire(wire.wire, wire.length,
                        jnp.asarray(inc, jnp.int32),
                        jnp.asarray(release, jnp.int32))
-    run = _online_runner(_mesh_key(cfg), count_headers, chunk)
+    run = _online_runner(_mesh_key(cfg), count_headers, chunk, faults)
     nodes = jnp.asarray(mc_nodes, jnp.int32)
     total = int(np.sum(np.asarray(traffic.length)))
-    drained = total == 0
-    while total:
-        state, ej = run(state, gwire, nodes)
-        if int(ej) == total:
+    drained = False
+    while True:
+        if controller is not None:
+            upd = controller.step(int(state.cycle),
+                                  np.asarray(state.eject_time)[:npkt])
+            if upd is not None:
+                new_rel, total = upd
+                gwire = gwire._replace(
+                    release=jnp.asarray(new_rel, jnp.int32))
+            if controller.restart_needed:
+                # Abort before the next chunk: the caller replays with the
+                # newly shed inferences filtered out of the wire (see the
+                # controller's restart protocol). Partial results are
+                # discarded by the caller.
+                break
+        settled = (controller is None or controller.done)
+        if total == 0 and settled:
             drained = True
             break
+        if total:
+            state, ej = run(state, gwire, nodes)
+            if int(ej) - start_ej == total and settled:
+                drained = True
+                break
+        else:
+            # Nothing admitted yet but arrivals still pending: idle the
+            # mesh one chunk so the controller's clock advances.
+            state, ej = run(state, gwire, nodes)
         if int(state.cycle) >= max_cycles:
             break
-    if not drained and not allow_truncation:
-        raise RuntimeError(
-            f"closed-loop drain incomplete: {int(state.ejected)}/{total} "
-            f"flits ejected after {int(state.cycle)} cycles")
+    restarting = controller is not None and controller.restart_needed
+    if not drained and not allow_truncation and not restarting:
+        raise _drain_timeout(
+            "closed-loop", int(state.cycle), int(state.ejected) - start_ej,
+            total, np.asarray(state.count), np.asarray(state.inj_ptr),
+            np.asarray(traffic.length),
+            eject_time=np.asarray(state.eject_time), npkt=npkt)
     inj_t = np.asarray(state.inj_time)[:npkt]
     ej_t = np.asarray(state.eject_time)[:npkt]
     drain_cycle = int(ej_t.max()) + 1 if (ej_t >= 0).any() else 0
@@ -191,7 +318,7 @@ def _drain_gated(cfg: NocConfig, traffic: Traffic, mc_nodes: np.ndarray,
                         np.asarray(state.link_flits),
                         np.asarray(state.inj_bt), state.ejected, state.cycle,
                         np.int32(drain_cycle)), total)
-    return res, inj_t, ej_t, np.asarray(state.eject_pkt), drained
+    return res, inj_t, ej_t, np.asarray(state.eject_pkt), drained, state
 
 
 def _packet_dest(traffic: Traffic) -> np.ndarray:
@@ -239,6 +366,14 @@ class OnlineResult:
     request_eject_time: np.ndarray
     result_inj_time: np.ndarray
     result_eject_time: np.ndarray
+    # --- fault-injection / graceful-degradation extensions (defaulted so
+    # the fault-free construction sites stay unchanged) -------------------
+    shed: Optional[np.ndarray] = None     # (K,) bool: refused admission
+    failed: Optional[np.ndarray] = None   # (K,) bool: dropped/exhausted/
+                                          # silently-corrupt packets
+    deadline: Optional[int] = None        # per-inference latency SLO
+    slo_attained: Optional[np.ndarray] = None  # (K,) bool when deadline set
+    fault_ledger: Optional[dict] = None   # merged request+result ledger
 
     @property
     def completed(self) -> int:
@@ -253,6 +388,35 @@ class OnlineResult:
         span = int(done.max()) - int(self.arrivals.min())
         return float(done.size) * 1000.0 / max(span, 1)
 
+    @property
+    def num_shed(self) -> int:
+        return int(self.shed.sum()) if self.shed is not None else 0
+
+    @property
+    def num_failed(self) -> int:
+        return int(self.failed.sum()) if self.failed is not None else 0
+
+    @property
+    def slo_attainment(self) -> Optional[float]:
+        """Fraction of OFFERED inferences that completed within the
+        deadline (shed and failed inferences count against it - that is
+        the point of reporting attainment under overload/faults)."""
+        if self.slo_attained is None:
+            return None
+        return float(self.slo_attained.sum()) / max(self.slo_attained.size, 1)
+
+    @property
+    def goodput(self) -> Optional[float]:
+        """SLO-attained inferences per 1000 cycles over the busy span
+        (completed inferences when no deadline is set)."""
+        ok = (self.slo_attained if self.slo_attained is not None
+              else self.completions >= 0)
+        done = self.completions[ok & (self.completions >= 0)]
+        if not done.size:
+            return None
+        span = int(done.max()) - int(self.arrivals.min())
+        return float(done.size) * 1000.0 / max(span, 1)
+
 
 def simulate_online(cfg: NocConfig, request: Traffic, result: Traffic, *,
                     arrivals: Union[ArrivalProcess, Sequence[int]],
@@ -262,7 +426,10 @@ def simulate_online(cfg: NocConfig, request: Traffic, result: Traffic, *,
                     max_cycles: int = 2_000_000,
                     check_conservation: bool = False,
                     allow_truncation: bool = False,
-                    record_bt: bool = True) -> OnlineResult:
+                    record_bt: bool = True,
+                    faults=None,
+                    deadline: Optional[int] = None,
+                    admit_queue_depth: Optional[int] = None) -> OnlineResult:
     """Closed-loop drain of ``num_inferences`` back-to-back inferences.
 
     request / result: ONE inference's unbatched phase traffics (e.g.
@@ -285,7 +452,21 @@ def simulate_online(cfg: NocConfig, request: Traffic, result: Traffic, *,
         as usual only when everything drained.
     record_bt: also run the canonical per-inference phase drains and attach
         them as ``request``/``result`` (the reported-BT contract). Skip in
-        load sweeps that join BT from an offline sweep instead.
+        load sweeps that join BT from an offline sweep instead. Canonical
+        phase drains are always CLEAN even under ``faults`` - fault-path
+        BT lives in the ``sched_request``/``sched_result`` recorders,
+        which see corrupted wires and retransmitted flits.
+    faults: a :class:`repro.noc.faults.FaultModel`. Both phase drains run
+        through ``drain_with_retries`` (bit-flip injection, protection
+        checking, bounded ACK/NACK retransmission, unreachable-packet
+        drops). Inferences with dropped or retry-exhausted request packets
+        never release results; silently corrupted deliveries complete but
+        are marked ``failed``.
+    deadline: per-inference latency SLO in cycles; sets
+        ``slo_attained[k] = completed within deadline and not failed``.
+    admit_queue_depth: overload-shedding threshold - arrivals are refused
+        admission (``shed``) while that many admitted inferences are still
+        incomplete at the chunk boundary deciding them.
     """
     if isinstance(arrivals, ArrivalProcess):
         if num_inferences is None:
@@ -302,6 +483,12 @@ def simulate_online(cfg: NocConfig, request: Traffic, result: Traffic, *,
         raise ValueError("arrival cycles must be non-negative and "
                          "non-decreasing")
     k = int(arr.size)
+    if deadline is not None and not deadline > 0:
+        raise ValueError(f"deadline must be a positive cycle count, "
+                         f"got {deadline!r}")
+    if admit_queue_depth is not None and not admit_queue_depth >= 1:
+        raise ValueError(f"admit_queue_depth must be >= 1, "
+                         f"got {admit_queue_depth!r}")
 
     m_req = int(request.length.shape[0])
     req_nodes = np.asarray(_mc_array(cfg, request, m_req, batched=False))
@@ -329,10 +516,45 @@ def simulate_online(cfg: NocConfig, request: Traffic, result: Traffic, *,
     req_len1 = np.asarray(request.length, np.int64)
     req_rel = np.broadcast_to(arr[None, :], (m_req, k))
     req_inc = np.broadcast_to(req_len1[:, None], (m_req, k))
-    sched_req, req_it, req_et, req_ep, req_drained = _drain_gated(
-        cfg, req_cat, req_nodes, req_rel, req_inc,
-        count_headers=count_headers, chunk=chunk, max_cycles=max_cycles,
-        allow_truncation=allow_truncation)
+    if faults is not None:
+        from .faults import (STATUS_DROPPED, STATUS_RETRY_EXHAUSTED,
+                             drain_with_retries)
+    ctrl = None
+    fd_req = None
+    preshed = np.zeros(k, bool)
+    while True:
+        req_cat_f, req_inc_f, req_rel_f = req_cat, req_inc, req_rel
+        if admit_queue_depth is not None:
+            ctrl = _AdmissionController(arr, admit_queue_depth, req_inc,
+                                        chunk, npkt_req, preshed=preshed)
+            req_rel_f = ctrl.release
+            if preshed.any():
+                # Shed flits must not sit in the wire (gate increments are
+                # positional): filter them out and zero their gates.
+                from .traffic import filter_packets
+                keep_pkt = np.repeat(~preshed, npkt_req)
+                req_cat_f = filter_packets(req_cat, keep_pkt)
+                req_inc_f = np.where(preshed[None, :], 0, req_inc)
+        if faults is not None:
+            fd_req = drain_with_retries(
+                cfg, req_cat_f, faults, mc_nodes=req_nodes,
+                release=req_rel_f, inc=req_inc_f,
+                count_headers=count_headers, chunk=chunk,
+                max_cycles=max_cycles, allow_truncation=allow_truncation,
+                controller=ctrl)
+            sched_req, req_it, req_et = (fd_req.sim, fd_req.inj_time,
+                                         fd_req.eject_time)
+            req_ep, req_drained = fd_req.eject_counts, fd_req.drained
+        else:
+            sched_req, req_it, req_et, req_ep, req_drained, _ = _drain_gated(
+                cfg, req_cat_f, req_nodes, req_rel_f, req_inc_f,
+                count_headers=count_headers, chunk=chunk,
+                max_cycles=max_cycles, allow_truncation=allow_truncation,
+                controller=ctrl)
+        if ctrl is None or not ctrl.restart_needed:
+            break
+        preshed = ctrl.shed.copy()
+    shed_k = ctrl.shed.copy() if ctrl is not None else np.zeros(k, bool)
 
     # --- per-(inference, router) delivery: cycle the last request packet
     # destined to that PE router ejected. Routers a workload never
@@ -342,7 +564,6 @@ def simulate_online(cfg: NocConfig, request: Traffic, result: Traffic, *,
     et2 = req_et.reshape(k, npkt_req) if npkt_req else req_et.reshape(k, 0)
     delivery = np.broadcast_to(arr[:, None],
                                (k, cfg.num_routers)).astype(np.int64).copy()
-    undelivered = bool((et2 < 0).any())
     live = pdest >= 0
     if live.any():
         rows = np.repeat(np.arange(k), int(live.sum()))
@@ -351,36 +572,102 @@ def simulate_online(cfg: NocConfig, request: Traffic, result: Traffic, *,
                       et2[:, live].astype(np.int64).reshape(-1))
 
     # --- result network: per-PE release = that PE's delivery + compute
-    # latency, monotone along k (a PE processes inferences in order).
-    # Inferences whose requests were cut off never release their results.
-    far = np.int64(2**31 - 2)
+    # latency, monotone along k (a PE processes inferences in order -
+    # inferences that never release occupy no slot in that order).
+    # Inferences whose requests were cut off, shed, dropped, or
+    # retry-exhausted never release their results.
     rel = delivery[:, res_nodes.astype(np.int64)].T + lat[:, None]  # (P, K)
-    if undelivered:
-        miss = (et2 < 0).any(axis=1)        # (K,) inference lost requests
-        rel[:, miss] = far
-    rel = np.maximum.accumulate(np.minimum(rel, far), axis=1)
+    blocked = ((et2 < 0).any(axis=1) if npkt_req
+               else np.zeros(k, bool))      # lost/unsent request packets
+    failed_req = np.zeros(k, bool)
+    if fd_req is not None:
+        st2 = fd_req.status.reshape(k, npkt_req)
+        detected = ((st2 == STATUS_DROPPED)
+                    | (st2 == STATUS_RETRY_EXHAUSTED)).any(axis=1)
+        failed_req = (detected | fd_req.corrupted.reshape(
+            k, npkt_req).any(axis=1)) & ~shed_k
+        blocked |= detected     # the PE never assembled the full request
+    rel = np.minimum(rel, FAR_RELEASE)
+    if blocked.any():
+        rel[:, blocked] = FAR_RELEASE
+    open_idx = np.flatnonzero(~blocked)
+    if open_idx.size:
+        rel[:, open_idx] = np.maximum.accumulate(rel[:, open_idx], axis=1)
     res_cat = concat_inferences(result, k)
     res_len1 = np.asarray(result.length, np.int64)
     res_inc = np.broadcast_to(res_len1[:, None], (m_res, k))
-    sched_res, res_it, res_et, res_ep, res_drained = _drain_gated(
-        cfg, res_cat, res_nodes, rel, res_inc,
-        count_headers=count_headers, chunk=chunk, max_cycles=max_cycles,
-        allow_truncation=allow_truncation) if npkt_res else (
-        None, np.zeros(0, np.int32), np.zeros(0, np.int32),
-        np.zeros(1, np.int32), True)
+    fd_res = None
+    if npkt_res:
+        res_cat_f, res_inc_f = res_cat, res_inc
+        if blocked.any():
+            # Result flits of blocked inferences never release: keep them
+            # out of the wire (and the drain target) entirely.
+            from .traffic import filter_packets
+            res_cat_f = filter_packets(res_cat, np.repeat(~blocked, npkt_res))
+            res_inc_f = np.where(blocked[None, :], 0, res_inc)
+        if faults is not None:
+            fd_res = drain_with_retries(
+                cfg, res_cat_f, faults, mc_nodes=res_nodes, release=rel,
+                inc=res_inc_f, count_headers=count_headers, chunk=chunk,
+                max_cycles=max_cycles, allow_truncation=allow_truncation)
+            sched_res, res_it, res_et = (fd_res.sim, fd_res.inj_time,
+                                         fd_res.eject_time)
+            res_ep, res_drained = fd_res.eject_counts, fd_res.drained
+        else:
+            sched_res, res_it, res_et, res_ep, res_drained, _ = _drain_gated(
+                cfg, res_cat_f, res_nodes, rel, res_inc_f,
+                count_headers=count_headers, chunk=chunk,
+                max_cycles=max_cycles, allow_truncation=allow_truncation)
+    else:
+        sched_res, res_it, res_et, res_ep, res_drained = (
+            None, np.zeros(0, np.int32), np.zeros(0, np.int32),
+            np.zeros(1, np.int32), True)
+
+    failed_k = failed_req.copy()
+    if fd_res is not None:
+        rst2 = fd_res.status.reshape(k, npkt_res)
+        failed_k |= (((rst2 == STATUS_DROPPED)
+                      | (rst2 == STATUS_RETRY_EXHAUSTED)).any(axis=1)
+                     | fd_res.corrupted.reshape(k, npkt_res).any(axis=1))
+        failed_k &= ~shed_k
 
     drained = req_drained and res_drained
     if check_conservation and drained:
-        for name, tr_cat, ep in (("request", req_cat, req_ep),
-                                 ("result", res_cat, res_ep)):
-            if int(tr_cat.num_packets) <= 0:
-                continue
-            err = _conservation_error(
-                np.asarray(tr_cat.length), np.asarray(tr_cat.meta),
-                np.asarray(tr_cat.pkt), ep, int(tr_cat.num_packets))
-            if err:
-                raise RuntimeError(f"closed-loop {name}-phase conservation "
-                                   f"violated: {err}")
+        if faults is not None:
+            for name, fd in (("request", fd_req), ("result", fd_res)):
+                if fd is not None and not fd.ledger.get("conservation_ok"):
+                    raise RuntimeError(
+                        f"closed-loop {name}-phase fault ledger violated "
+                        f"conservation: {fd.ledger}")
+        elif ctrl is not None:
+            # Shed inferences must eject exactly nothing; admitted ones
+            # exactly once per packet.
+            exp = np.repeat(ctrl.admitted.astype(req_ep.dtype), npkt_req)
+            if not np.array_equal(req_ep[:k * npkt_req], exp):
+                raise RuntimeError(
+                    "closed-loop request-phase conservation violated under "
+                    "admission control: ejection counts disagree with the "
+                    "admitted set")
+            if npkt_res:
+                exp_r = np.repeat(
+                    (ctrl.admitted & ~blocked).astype(res_ep.dtype),
+                    npkt_res)
+                if not np.array_equal(res_ep[:k * npkt_res], exp_r):
+                    raise RuntimeError(
+                        "closed-loop result-phase conservation violated "
+                        "under admission control: ejection counts disagree "
+                        "with the released set")
+        else:
+            for name, tr_cat, ep in (("request", req_cat, req_ep),
+                                     ("result", res_cat, res_ep)):
+                if int(tr_cat.num_packets) <= 0:
+                    continue
+                err = _conservation_error(
+                    np.asarray(tr_cat.length), np.asarray(tr_cat.meta),
+                    np.asarray(tr_cat.pkt), ep, int(tr_cat.num_packets))
+                if err:
+                    raise RuntimeError(f"closed-loop {name}-phase "
+                                       f"conservation violated: {err}")
 
     # --- per-inference completion: the cycle after the last result tail of
     # inference k ejected (request delivery for pure-distribution
@@ -395,6 +682,15 @@ def simulate_online(cfg: NocConfig, request: Traffic, result: Traffic, *,
         completions = np.where(done_k, delivery.max(axis=1) + 1, -1)
     latencies = np.where(completions >= 0, completions - arr, -1)
 
+    slo = None
+    if deadline is not None:
+        slo = (completions >= 0) & (latencies <= deadline) & ~failed_k
+    ledger = None
+    if faults is not None:
+        ledger = {"request": fd_req.ledger}
+        if fd_res is not None:
+            ledger["result"] = fd_res.ledger
+
     req_bt = res_bt = None
     if record_bt and drained:
         from .sim import simulate
@@ -407,9 +703,10 @@ def simulate_online(cfg: NocConfig, request: Traffic, result: Traffic, *,
                               check_conservation=check_conservation,
                               mc_nodes=res_nodes)
 
+    degradation = ctrl is not None or faults is not None
     return OnlineResult(
         arrivals=arr, completions=completions, latencies=latencies,
-        truncated=int((completions < 0).sum()),
+        truncated=int(((completions < 0) & ~shed_k & ~failed_k).sum()),
         request_drain_cycle=sched_req.drain_cycle,
         result_drain_cycle=(sched_res.drain_cycle if sched_res else
                             sched_req.drain_cycle),
@@ -417,7 +714,10 @@ def simulate_online(cfg: NocConfig, request: Traffic, result: Traffic, *,
         sched_request=sched_req, sched_result=sched_res,
         request=req_bt, result=res_bt,
         request_inj_time=req_it, request_eject_time=req_et,
-        result_inj_time=res_it, result_eject_time=res_et)
+        result_inj_time=res_it, result_eject_time=res_et,
+        shed=shed_k if degradation else None,
+        failed=failed_k if degradation else None,
+        deadline=deadline, slo_attained=slo, fault_ledger=ledger)
 
 
 # --- latency percentiles -------------------------------------------------

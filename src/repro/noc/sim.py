@@ -59,9 +59,9 @@ from repro.core.bits import popcount_hw
 from .topology import (NocConfig, NUM_PORTS, OPPOSITE, PORT_E, PORT_LOCAL,
                        PORT_N, PORT_S, PORT_W)
 
-__all__ = ["Traffic", "Wire", "SimState", "SimResult", "simulate",
-           "simulate_batch", "make_state", "fuse_traffic", "pack_sideband",
-           "BACKENDS"]
+__all__ = ["Traffic", "Wire", "SimState", "SimResult", "DrainTimeout",
+           "simulate", "simulate_batch", "make_state", "fuse_traffic",
+           "pack_sideband", "BACKENDS"]
 
 # Flit meta bitfield
 META_PAYLOAD = 1
@@ -186,6 +186,13 @@ class SimState(NamedTuple):
     # ledger, production drains pay nothing for them.
     inj_time: Optional[jax.Array] = None     # (NP+1,) int32 or None
     eject_time: Optional[jax.Array] = None   # (NP+1,) int32 or None
+    # Fault-injection ledgers (repro.noc.faults): per-packet counts of
+    # ground-truth bit-flip events (``flip_pkt``, independent of any
+    # protection scheme) and of protection-detected corrupt flits observed
+    # at ejection (``bad_pkt``). ``None`` unless the drain runs with a
+    # fault spec; the fault-free step never materializes them.
+    flip_pkt: Optional[jax.Array] = None     # (NP+1,) int32 or None
+    bad_pkt: Optional[jax.Array] = None      # (NP+1,) int32 or None
 
 
 @dataclasses.dataclass
@@ -211,15 +218,83 @@ class SimResult:
 _TIME_UNSET = np.int32(2**31 - 1)   # inj_time sentinel: "never injected"
 
 
+class DrainTimeout(RuntimeError):
+    """A drain hit ``max_cycles`` with flits still in the network.
+
+    The watchdog replacement for spinning forever (or failing with a bare
+    count): carries a diagnostic snapshot so a routing bug, dead link, or
+    undersized ``max_cycles`` is attributable from the exception alone.
+
+    Attributes:
+        cycle, ejected, total: where the drain stood when it gave up.
+        occupancy: list of ``(router, port, flits)`` for every non-empty
+            input-FIFO block (flits summed over the VCs), busiest first.
+        pending: list of ``(stream, flits_not_yet_injected)`` per source
+            stream with uninjected traffic.
+        undelivered: packet ids with no tail ejection recorded, when the
+            drain ran with the packet ledger armed; ``None`` otherwise.
+    """
+
+    def __init__(self, message: str, *, cycle: int, ejected: int, total: int,
+                 occupancy=None, pending=None, undelivered=None):
+        super().__init__(message)
+        self.cycle = cycle
+        self.ejected = ejected
+        self.total = total
+        self.occupancy = occupancy or []
+        self.pending = pending or []
+        self.undelivered = undelivered
+
+
+def _drain_timeout(context: str, cycle: int, ejected: int, total: int,
+                   count: np.ndarray, inj_ptr: np.ndarray,
+                   lengths: np.ndarray,
+                   eject_time: Optional[np.ndarray] = None,
+                   npkt: int = 0) -> DrainTimeout:
+    """Build the watchdog diagnostic from one lane's final state leaves."""
+    nr = count.shape[0] - 1                      # drop the phantom row
+    occ = count[:nr].sum(axis=-1)                # (NR, P) flits over VCs
+    rp = np.argwhere(occ > 0)
+    order = np.argsort(-occ[occ > 0], kind="stable")
+    occupancy = [(int(r), int(p_), int(occ[r, p_]))
+                 for r, p_ in rp[order]]
+    pending = [(int(i), int(lengths[i] - inj_ptr[i]))
+               for i in np.flatnonzero(inj_ptr < lengths)]
+    undelivered = None
+    if eject_time is not None and npkt > 0:
+        undelivered = np.flatnonzero(eject_time[:npkt] < 0).tolist()
+    parts = [f"{context} did not drain: {ejected}/{total} flits ejected "
+             f"after {cycle} cycles"]
+    if pending:
+        parts.append(f"{sum(n for _, n in pending)} flits uninjected across "
+                     f"{len(pending)} streams")
+    if occupancy:
+        parts.append("occupied FIFOs (router, port, flits): "
+                     f"{occupancy[:8]}" + (" ..." if len(occupancy) > 8 else ""))
+    if undelivered is not None:
+        parts.append(f"{len(undelivered)} undelivered packet ids: "
+                     f"{undelivered[:16]}"
+                     + (" ..." if len(undelivered) > 16 else ""))
+    return DrainTimeout("; ".join(parts), cycle=cycle, ejected=ejected,
+                        total=total, occupancy=occupancy, pending=pending,
+                        undelivered=undelivered)
+
+
 def make_state(cfg: NocConfig, num_mcs: int, npkt: int = 0,
-               timestamps: bool = False) -> SimState:
+               timestamps: bool = False,
+               fault_ledgers: bool = False) -> SimState:
     """Zeroed simulator state. ``npkt``: number of packet ids to track for
     the conservation check (0 omits the ledger and its pkt lane entirely).
     ``timestamps`` adds the per-packet injection/ejection cycle ledgers
-    (requires ``npkt > 0`` - the ledgers are indexed by packet id)."""
+    (requires ``npkt > 0`` - the ledgers are indexed by packet id).
+    ``fault_ledgers`` adds the per-packet flip/detection counters the
+    fault-injection step writes (requires ``timestamps``)."""
     if timestamps and npkt <= 0:
         raise ValueError("timestamps=True needs npkt > 0 (the ledgers are "
                          "indexed by packet id)")
+    if fault_ledgers and not timestamps:
+        raise ValueError("fault_ledgers=True requires timestamps=True (the "
+                         "fault step needs the timing ledgers for retries)")
     nr, p, v, d, l = cfg.num_routers, NUM_PORTS, cfg.num_vcs, cfg.vc_depth, cfg.lanes
     if nr > MAX_ROUTERS:
         raise ValueError(f"{nr} routers exceed the {SIDE_DEST_BITS}-bit "
@@ -248,6 +323,10 @@ def make_state(cfg: NocConfig, num_mcs: int, npkt: int = 0,
                   if timestamps else None),
         eject_time=(jnp.full((npkt + 1,), -1, jnp.int32)
                     if timestamps else None),
+        flip_pkt=(jnp.zeros((npkt + 1,), jnp.int32)
+                  if fault_ledgers else None),
+        bad_pkt=(jnp.zeros((npkt + 1,), jnp.int32)
+                 if fault_ledgers else None),
     )
 
 
@@ -262,9 +341,39 @@ def _mesh_key(cfg: NocConfig):
     return (cfg.rows, cfg.cols, cfg.num_vcs, cfg.vc_depth, cfg.lanes)
 
 
+def _mix32(x: jax.Array) -> jax.Array:
+    """SplitMix32 finalizer: a cheap counter-based uniform uint32 hash.
+
+    The fault schedule is a pure function of (seed, cycle, link id) through
+    this hash - no RNG state threads through the scan, so replaying a seed
+    reproduces the exact flip schedule (pinned by the replay tests), and a
+    lower soft-error rate's flip set is a subset of a higher one's (same
+    hash, smaller threshold).
+    """
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
 def _make_step(mesh_key, count_headers: bool, track: bool,
-               timestamps: bool = False):
+               timestamps: bool = False, faults=None):
     """One router cycle as a pure function of (state, wire, mc_nodes).
+
+    ``faults`` (a hashable spec with ``rate``/``seed``/``protect``/
+    ``dead_links``/``dead_routers`` fields, see
+    :class:`repro.noc.faults.StepFaults`; requires ``track`` and
+    ``timestamps``) compiles the fault-injection hooks into the step:
+    hard faults swap the closed-form X-Y route for the detour table from
+    :func:`repro.noc.topology.fault_route_table`; transient faults XOR a
+    seeded single-bit flip into the payload lanes of a traversing flit
+    *before* the BT recorder and the downstream write, so the recorded
+    wire toggles are the corrupted wire's; protection codes carried in
+    sideband bits 16+ are re-derived at ejection and mismatches land in
+    the ``bad_pkt`` ledger (ground-truth flip events land in ``flip_pkt``
+    regardless of protection). All hooks are trace-time conditionals:
+    with ``faults=None`` the emitted computation is byte-identical to
+    before the fault subsystem existed.
 
     ``timestamps`` (requires ``track``) additionally records each packet's
     header-flit NI-injection cycle and tail-flit ejection cycle into the
@@ -330,9 +439,32 @@ def _make_step(mesh_key, count_headers: bool, track: bool,
         coords[:, None] * NUM_PORTS + np.arange(4)[None, :], jnp.int32)
     phantom_row = nr * NUM_PORTS * num_vcs * vc_depth
 
+    # --- fault-injection trace-time constants (None: no fault code at all)
+    flips_on = False
+    protect_bits = 0
+    if faults is not None:
+        if not (track and timestamps):
+            raise ValueError("fault injection requires track=True and "
+                             "timestamps=True (per-packet ledgers)")
+        from repro.core.wire import PROTECTION_BITS, protection_syndrome_masks
+        from .topology import fault_route_table
+        route_np, _ = fault_route_table(cfg, tuple(faults.dead_links),
+                                        tuple(faults.dead_routers))
+        froute = jnp.asarray(route_np.reshape(-1), jnp.int32)     # (NR*NR,)
+        flips_on = float(faults.rate) > 0.0
+        if flips_on:
+            flip_thresh = jnp.uint32(
+                min(int(round(float(faults.rate) * 2.0**32)), 2**32 - 1))
+            flip_seed = np.uint32(np.uint64(int(faults.seed)) & np.uint64(0xFFFFFFFF))
+        protect_bits = PROTECTION_BITS[faults.protect]
+        if protect_bits:
+            syn = jnp.asarray(protection_syndrome_masks(faults.protect, l),
+                              jnp.uint32)                         # (pb, L)
+
     def step(state: SimState, wire: Wire, mc_nodes: jax.Array):
         m = wire.length.shape[0]
         t_cap = wire.wire.shape[1]
+        flip_pkt, bad_pkt = state.flip_pkt, state.bad_pkt
         head_r = state.head[:nr]                           # (NR, P, V)
         count_r = state.count[:nr]
         valid = count_r > 0
@@ -351,12 +483,20 @@ def _make_step(mesh_key, count_headers: bool, track: bool,
         fd = fside & _DEST_MASK                            # (NR, P, V)
 
         # --- route computation (X-Y, closed form) ---
-        dr, dc = fd // cols, fd % cols
-        out_port = jnp.where(
-            dc > rcol, PORT_E, jnp.where(
-                dc < rcol, PORT_W, jnp.where(
-                    dr > rrow, PORT_S, jnp.where(
-                        dr < rrow, PORT_N, PORT_LOCAL)))).astype(jnp.int32)
+        if faults is None:
+            dr, dc = fd // cols, fd % cols
+            out_port = jnp.where(
+                dc > rcol, PORT_E, jnp.where(
+                    dc < rcol, PORT_W, jnp.where(
+                        dr > rrow, PORT_S, jnp.where(
+                            dr < rrow, PORT_N, PORT_LOCAL)))).astype(jnp.int32)
+        else:
+            # Detour table: X-Y where intact, BFS-descending around dead
+            # links (equal to X-Y entry-for-entry when no hard faults).
+            # Garbage dests of empty FIFOs are masked by ``valid`` below.
+            r_ids = jnp.arange(nr, dtype=jnp.int32)[:, None, None]
+            out_port = jnp.take(froute, r_ids * nr + jnp.minimum(fd, nr - 1),
+                                mode="clip")
 
         # --- credit check: downstream FIFO (same VC) has space ---
         # One static-index gather of every neighbor's input-FIFO counts
@@ -411,6 +551,27 @@ def _make_step(mesh_key, count_headers: bool, track: bool,
         win_row = win_pv.reshape(-1) * d + win_head
         mv = jnp.take(fifo_rows, win_row, axis=0,
                       mode="clip").reshape(nr, p, lf)
+        if flips_on:
+            # Transient per-link soft error: hash (seed, cycle, link id)
+            # into a uniform word; a hit XORs one payload bit of the flit
+            # traversing that link this cycle. Applied *before* the BT
+            # recorder and the downstream FIFO write: the recorded wire
+            # toggles and the delivered data are the corrupted ones.
+            # Sideband and pkt lanes are never flipped (control/ledger
+            # integrity is out of scope; DESIGN.md "Fault model").
+            cyc_u = state.cycle.astype(jnp.uint32)
+            lid = jnp.arange(nr * p, dtype=jnp.uint32).reshape(nr, p)
+            h = _mix32(_mix32(lid + flip_seed)
+                       ^ (cyc_u * jnp.uint32(0x9E3779B9)))
+            hit = has & (h < flip_thresh)                       # (NR, P)
+            bitpos = _mix32(h ^ jnp.uint32(0x632BE5AB)) % jnp.uint32(32 * l)
+            hit_lane = (bitpos // 32).astype(jnp.int32)
+            hit_word = jnp.uint32(1) << (bitpos % 32)
+            lanes_ax = jnp.arange(l, dtype=jnp.int32)[None, None, :]
+            fmask = jnp.where(
+                (lanes_ax == hit_lane[..., None]) & hit[..., None],
+                hit_word[..., None], jnp.uint32(0))
+            mv = jnp.concatenate([mv[..., :l] ^ fmask, mv[..., l:]], axis=-1)
         mv_side = mv[..., l].astype(jnp.int32)
         mv_meta = (mv_side >> SIDE_META_SHIFT) & _META_MASK
 
@@ -458,6 +619,30 @@ def _make_step(mesh_key, count_headers: bool, track: bool,
                 # dump slot (a no-op under max).
                 eject_time = state.eject_time.at[ledger_idx.reshape(-1)].max(
                     jnp.where(ej_tail, state.cycle, -1).reshape(-1))
+            if flips_on:
+                # Ground-truth corruption ledger: every flip event marks
+                # the victim packet, whatever the protection scheme.
+                f_idx = jnp.where(hit, jnp.minimum(mv_pkt, npcap), npcap)
+                flip_pkt = flip_pkt.at[f_idx.reshape(-1)].add(
+                    hit.reshape(-1).astype(jnp.int32))
+            if protect_bits:
+                # MC/PE-side detection at ejection: re-derive the code over
+                # the (possibly corrupted) payload and compare with the
+                # carried sideband bits. Linearity makes the mismatch a
+                # function of the flip mask alone, never the payload - so
+                # detection (and hence retransmission timing) is
+                # schedule-determined, like the gating contract.
+                ej_any = has & (o_ids == PORT_LOCAL)
+                carried = (mv_side >> 16) & ((1 << protect_bits) - 1)
+                code = jnp.zeros((nr, p), jnp.int32)
+                for j in range(protect_bits):
+                    pj = (popcount_hw(mv[..., :l] & syn[j]).sum(-1)
+                          & 1).astype(jnp.int32)
+                    code = code | (pj << j)
+                mism = ej_any & (code != carried)
+                b_idx = jnp.where(mism, jnp.minimum(mv_pkt, npcap), npcap)
+                bad_pkt = bad_pkt.at[b_idx.reshape(-1)].add(
+                    mism.reshape(-1).astype(jnp.int32))
         else:
             eject_pkt = None
 
@@ -469,7 +654,13 @@ def _make_step(mesh_key, count_headers: bool, track: bool,
         iw = wire.wire[mrange, safe_ptr]                    # (M, LF)
         iside = iw[..., l].astype(jnp.int32)
         imeta = (iside >> SIDE_META_SHIFT) & _META_MASK
-        ivc = iside >> SIDE_VC_SHIFT
+        if protect_bits:
+            # Protection codes ride sideband bits 16+: mask them out of the
+            # VC extraction (fault-free sidebands carry nothing up there, so
+            # the unmasked shift below is the same value).
+            ivc = (iside >> SIDE_VC_SHIFT) & (MAX_VCS - 1)
+        else:
+            ivc = iside >> SIDE_VC_SHIFT
         # Pushes never touch local in-ports, so the local-port counts in
         # ``count2`` are already post-push values: injection composes with
         # the push scatter below without an intermediate count array.
@@ -478,6 +669,23 @@ def _make_step(mesh_key, count_headers: bool, track: bool,
         mc_pv = (mc_nodes * p + PORT_LOCAL) * v + ivc
         mc_cnt = jnp.take(count2_flat, mc_pv, mode="clip")
         can = active & (mc_cnt < d)
+        if flips_on:
+            # NI-link soft error: the flit entering the mesh this cycle is
+            # a flit-hop too. Same hash family, link ids offset past the
+            # router links. Applied before the combined scatter and the NI
+            # BT recorder below.
+            ilid = jnp.arange(m, dtype=jnp.uint32) + jnp.uint32(nr * p)
+            ih = _mix32(_mix32(ilid + flip_seed)
+                        ^ (cyc_u * jnp.uint32(0x9E3779B9)))
+            ihit = can & (ih < flip_thresh)                     # (M,)
+            ibitpos = (_mix32(ih ^ jnp.uint32(0x632BE5AB))
+                       % jnp.uint32(32 * l))
+            ihit_lane = (ibitpos // 32).astype(jnp.int32)
+            ihit_word = jnp.uint32(1) << (ibitpos % 32)
+            ilanes = jnp.arange(l, dtype=jnp.int32)[None, :]
+            imask = jnp.where((ilanes == ihit_lane[:, None]) & ihit[:, None],
+                              ihit_word[:, None], jnp.uint32(0))
+            iw = jnp.concatenate([iw[..., :l] ^ imask, iw[..., l:]], axis=-1)
         inj_pv = jnp.where(can, mc_pv, (nr * p + PORT_LOCAL) * v + ivc)
         islot = (jnp.take(head2_flat, inj_pv, mode="clip")
                  + jnp.take(count2_flat, inj_pv, mode="clip")) % d
@@ -519,6 +727,9 @@ def _make_step(mesh_key, count_headers: bool, track: bool,
             t_idx = jnp.where(inj_hdr, jnp.minimum(ipkt, npcap2), npcap2)
             inj_time = state.inj_time.at[t_idx].min(
                 jnp.where(inj_hdr, state.cycle, _TIME_UNSET))
+            if flips_on:
+                fi_idx = jnp.where(ihit, jnp.minimum(ipkt, npcap2), npcap2)
+                flip_pkt = flip_pkt.at[fi_idx].add(ihit.astype(jnp.int32))
         else:
             inj_time, eject_time = state.inj_time, state.eject_time
 
@@ -529,7 +740,7 @@ def _make_step(mesh_key, count_headers: bool, track: bool,
         return SimState(fifo_new, head2, count_new, rr_new, link_last,
                         link_bt, link_flits, ptr_new, inj_last, inj_bt,
                         ejected, state.cycle + 1, eject_pkt, drained_at,
-                        inj_time, eject_time)
+                        inj_time, eject_time, flip_pkt, bad_pkt)
 
     return step
 
@@ -544,12 +755,20 @@ def _resolve_backend(backend: str, track: bool) -> str:
     router-step kernel compiles through Mosaic on TPU and would only
     *interpret* on CPU, so auto picks ``pallas`` exactly when a TPU backs
     the default device and the proven fused step otherwise. The
-    conservation ledger is a debug path the kernel does not carry, so
-    tracked drains always ride the fused step (both are pinned
-    bit-identical, making the substitution unobservable).
+    conservation ledger is a debug path the kernel does not carry, so an
+    ``auto`` drain with the ledger armed resolves to the fused step (both
+    are pinned bit-identical, making the substitution unobservable) - but
+    an *explicit* ``backend="pallas"`` with ``check_conservation=True``
+    is a contradiction and raises instead of being silently overridden.
     """
     if backend not in BACKENDS:
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if backend == "pallas" and track:
+        raise ValueError(
+            "backend='pallas' cannot honor check_conservation=True: the "
+            "Pallas router kernel does not carry the packet-ledger lane. "
+            "Use backend='auto' (resolves tracked drains to the "
+            "bit-identical fused step) or drop check_conservation.")
     if backend == "auto":
         from repro.kernels.ops import on_tpu
         backend = "pallas" if on_tpu() else "fused"
@@ -799,9 +1018,14 @@ def simulate(cfg: NocConfig, traffic: Traffic, *, count_headers: bool = True,
         if drained or int(state.cycle) >= max_cycles:
             break
     if int(state.ejected) != total:
-        raise RuntimeError(
-            f"NoC did not drain: {int(state.ejected)}/{total} flits ejected "
-            f"after {int(state.cycle)} cycles")
+        # With the packet ledger armed, name the undelivered ids: a tail
+        # ejection count of zero maps to the builder's -1 sentinel.
+        undeliv = (np.where(np.asarray(state.eject_pkt)[:npkt] > 0, 0, -1)
+                   if track else None)
+        raise _drain_timeout(
+            "NoC", int(state.cycle), int(state.ejected), total,
+            np.asarray(state.count), np.asarray(state.inj_ptr),
+            np.asarray(traffic.length), eject_time=undeliv, npkt=npkt)
     if check_conservation and track:
         err = _conservation_error(
             np.asarray(traffic.length), np.asarray(traffic.meta),
@@ -966,11 +1190,21 @@ def simulate_batch(cfg: NocConfig, traffic: Traffic, *,
                 break
             if (nch - 1) * chunk >= max_cycles:
                 lag = sorted(set(live) - set(done))
-                raise RuntimeError(
-                    f"NoC did not drain for variants {lag}: "
-                    f"{[int(e[prim[x]]) for x in lag]}/"
-                    f"{[int(totals[x]) for x in lag]} flits ejected "
-                    f"after {(nch - 1) * chunk} cycles")
+                # Diagnose the first lagging lane in full (occupancy +
+                # pending) from the freshest state; the message still
+                # names every laggard. (``state`` was donated to the
+                # in-flight chunk - read ``state2``/``ej2``.)
+                row = prim[lag[0]]
+                e2 = np.asarray(ej2)
+                lens = np.asarray(traffic.length)
+                raise _drain_timeout(
+                    f"NoC variants {lag} "
+                    f"({[int(e2[prim[x]]) for x in lag]}/"
+                    f"{[int(totals[x]) for x in lag]} flits; "
+                    f"diagnostic for variant {lag[0]})",
+                    nch * chunk, int(e2[row]), int(totals[lag[0]]),
+                    np.asarray(state2.count)[row],
+                    np.asarray(state2.inj_ptr)[row], lens[lag[0]])
             if retire and done:
                 # Retire drained lanes: their recorders froze at the exact
                 # drain_cycle, so chunk k+1's rows hold their final state.

@@ -134,6 +134,24 @@ class SweepGrid:
     compute_latency: int = 0            # per-PE compute cycles
     arrival: str = "uniform"            # online.ARRIVAL_KINDS process
     arrival_seed: int = 0
+    # Fault-injection serving axis (:mod:`repro.noc.faults`): soft-error
+    # rates swept per offered-load point. Rate 0.0 with no dead links runs
+    # the pinned fault-free step (bit-identical to a grid without the
+    # axis); every other point drains through the fault-injecting step
+    # with ``fault_protect`` flit protection and bounded retransmission.
+    # Detection is payload-independent (linear codes), so serving timing
+    # stays transform-independent even under faults - the load x rate
+    # axis is still priced once per combo. ``deadline`` (cycles) turns on
+    # per-inference SLO attainment; ``admit_queue_depth`` turns on
+    # overload shedding (see ``online.simulate_online``).
+    fault_rates: Sequence[float] = ()
+    fault_protect: str = "crc8"
+    fault_seed: int = 0
+    fault_dead_links: Sequence = ()
+    fault_max_retries: int = 3
+    fault_ack_latency: int = 32
+    deadline: Optional[int] = None
+    admit_queue_depth: Optional[int] = None
 
     def __post_init__(self):
         from .sim import BACKENDS
@@ -170,6 +188,22 @@ class SweepGrid:
             raise ValueError("serving_inferences must be >= 1")
         if self.compute_latency < 0:
             raise ValueError("compute_latency must be >= 0")
+        from repro.core.wire import PROTECTION_BITS
+        if self.fault_protect not in PROTECTION_BITS:
+            raise ValueError(f"fault_protect must be one of "
+                             f"{sorted(PROTECTION_BITS)}, "
+                             f"got {self.fault_protect!r}")
+        if any(not 0.0 <= r <= 1.0 for r in self.fault_rates):
+            raise ValueError("fault_rates must lie in [0, 1] "
+                             f"(got {tuple(self.fault_rates)})")
+        if self.fault_max_retries < 0:
+            raise ValueError("fault_max_retries must be >= 0")
+        if self.fault_ack_latency < 1:
+            raise ValueError("fault_ack_latency must be >= 1")
+        if self.deadline is not None and self.deadline <= 0:
+            raise ValueError("deadline must be > 0 cycles when set")
+        if self.admit_queue_depth is not None and self.admit_queue_depth < 1:
+            raise ValueError("admit_queue_depth must be >= 1 when set")
 
     def variant_axes(self):
         """The per-shape-class variant list, in batch order."""
@@ -705,12 +739,17 @@ def run_serving(grid: SweepGrid, layers_for_model: LayersFn, *,
     point its latency coordinate.
 
     The returned report carries the BT rows unchanged; ``stats["serving"]``
-    adds ``points`` (one entry per combo x load: p50/p99/mean latency,
-    measured throughput, completed/truncated counts, gated drain cycles),
+    adds ``points`` (one entry per combo x load x fault rate: p50/p99/mean
+    latency, measured throughput, completed/truncated counts, gated drain
+    cycles; with the degradation axes on, also fault_rate/slo_attainment/
+    goodput/shed/failed),
     ``combos`` (per-combo ``saturation_tput``, ``latency_monotone`` - p50
-    non-decreasing along the sorted load axis - and the per-transform BT
-    join ``transforms[tr] = {request_bt, result_bt, adjusted_bt, ...}`` at
-    the grid's first precision/tiebreak), and the serving wall-clock.
+    non-decreasing along the sorted load axis at the lowest fault rate,
+    restricted to load points where the admission controller shed
+    nothing (shedding caps queueing, so p50 plateaus by design) - and
+    the per-transform BT join ``transforms[tr] = {request_bt, result_bt,
+    adjusted_bt, ...}`` at the grid's first precision/tiebreak), and the
+    serving wall-clock.
     """
     from .online import ArrivalProcess, latency_percentiles, simulate_online
 
@@ -730,6 +769,24 @@ def run_serving(grid: SweepGrid, layers_for_model: LayersFn, *,
     o0 = [(by_name(grid.baseline), _QUANTIZERS[grid.precisions[0]])]
     prec0, tb0 = grid.precisions[0], grid.tiebreaks[0]
     loads = sorted(grid.offered_loads)
+    frates = sorted(set(grid.fault_rates))
+    fault_axis = bool(frates)
+    if not frates:
+        frates = [0.0]
+    dead = tuple(tuple(int(x) for x in d) for d in grid.fault_dead_links)
+    degradation = (fault_axis or bool(dead) or grid.deadline is not None
+                   or grid.admit_queue_depth is not None)
+
+    def _fault_model(rate: float):
+        # Rate 0 with no dead links is the pinned clean path: faults=None
+        # keeps the drain bit-identical to a grid without the fault axis.
+        if rate == 0.0 and not dead:
+            return None
+        from .faults import FaultModel
+        return FaultModel(rate=rate, seed=grid.fault_seed,
+                          protect=grid.fault_protect, dead_links=dead,
+                          max_retries=grid.fault_max_retries,
+                          ack_latency=grid.fault_ack_latency)
     points: List[dict] = []
     combos: List[dict] = []
     layer_cache: Dict[str, Sequence[LayerTraffic]] = {}
@@ -755,30 +812,57 @@ def run_serving(grid: SweepGrid, layers_for_model: LayersFn, *,
                     combo_key = {"mesh": mesh_name, "placement": pl,
                                  "affinity": aff, "model": model}
                     combo_p50 = []
+                    slo_by_load: Dict[float, List] = {}
                     for load in loads:
-                        onl = simulate_online(
-                            cfg, req, res,
-                            arrivals=ArrivalProcess(grid.arrival, load,
-                                                    grid.arrival_seed),
-                            num_inferences=grid.serving_inferences,
-                            compute_latency=grid.compute_latency,
-                            count_headers=grid.count_headers,
-                            chunk=grid.chunk, max_cycles=grid.max_cycles,
-                            check_conservation=check_conservation,
-                            record_bt=False)
-                        lp = latency_percentiles(onl.latencies)
-                        combo_p50.append(lp["p50"])
-                        points.append({
-                            **combo_key, "offered_load": load,
-                            "throughput": onl.throughput,
-                            "p50_latency": lp["p50"],
-                            "p99_latency": lp["p99"],
-                            "mean_latency": lp["mean"],
-                            "completed": lp["count"],
-                            "truncated": lp["truncated"],
-                            "request_drain_cycle": onl.request_drain_cycle,
-                            "result_drain_cycle": onl.result_drain_cycle,
-                        })
+                        for rate in frates:
+                            onl = simulate_online(
+                                cfg, req, res,
+                                arrivals=ArrivalProcess(grid.arrival, load,
+                                                        grid.arrival_seed),
+                                num_inferences=grid.serving_inferences,
+                                compute_latency=grid.compute_latency,
+                                count_headers=grid.count_headers,
+                                chunk=grid.chunk,
+                                max_cycles=grid.max_cycles,
+                                check_conservation=check_conservation,
+                                record_bt=False,
+                                faults=_fault_model(rate),
+                                deadline=grid.deadline,
+                                admit_queue_depth=grid.admit_queue_depth)
+                            lp = latency_percentiles(onl.latencies)
+                            # p50 is only guaranteed non-decreasing in
+                            # offered load while every inference is
+                            # admitted: once the admission controller
+                            # sheds, queueing is capped and p50 plateaus
+                            # by design, so those points are excluded
+                            # from the monotonicity verdict.
+                            if rate == frates[0] and not onl.num_shed:
+                                combo_p50.append(lp["p50"])
+                            point = {
+                                **combo_key, "offered_load": load,
+                                "throughput": onl.throughput,
+                                "p50_latency": lp["p50"],
+                                "p99_latency": lp["p99"],
+                                "mean_latency": lp["mean"],
+                                "completed": lp["count"],
+                                "truncated": lp["truncated"],
+                                "request_drain_cycle":
+                                    onl.request_drain_cycle,
+                                "result_drain_cycle":
+                                    onl.result_drain_cycle,
+                            }
+                            if degradation:
+                                point.update({
+                                    "fault_rate": rate,
+                                    "deadline": grid.deadline,
+                                    "slo_attainment": onl.slo_attainment,
+                                    "goodput": onl.goodput,
+                                    "shed": onl.num_shed,
+                                    "failed": onl.num_failed,
+                                })
+                                slo_by_load.setdefault(load, []).append(
+                                    onl.slo_attainment)
+                            points.append(point)
                     sat = simulate_online(
                         cfg, req, res,
                         arrivals=ArrivalProcess("backtoback"),
@@ -800,14 +884,24 @@ def run_serving(grid: SweepGrid, layers_for_model: LayersFn, *,
                             "adjusted_reduction_pct":
                                 row["adjusted_reduction_pct"],
                         }
-                    combos.append({
+                    combo = {
                         **combo_key,
                         "saturation_tput": sat.throughput,
                         "latency_monotone": all(
                             b >= a for a, b in zip(combo_p50, combo_p50[1:])
                             if a is not None and b is not None),
                         "transforms": transforms,
-                    })
+                    }
+                    if fault_axis and grid.deadline is not None:
+                        # SLO attainment non-increasing along the sorted
+                        # fault-rate axis at every load (flip schedules are
+                        # nested in rate, so this holds by construction).
+                        combo["slo_monotone_in_fault"] = all(
+                            a >= b
+                            for curve in slo_by_load.values()
+                            for a, b in zip(curve, curve[1:])
+                            if a is not None and b is not None)
+                    combos.append(combo)
     report.stats["serving"] = {
         "offered_loads": loads,
         "inferences": grid.serving_inferences,
@@ -816,6 +910,11 @@ def run_serving(grid: SweepGrid, layers_for_model: LayersFn, *,
         "arrival_seed": grid.arrival_seed,
         "precision": prec0, "tiebreak": tb0,
         "conservation_checked": bool(check_conservation),
+        "fault_rates": frates if fault_axis else [],
+        "fault_protect": grid.fault_protect if degradation else None,
+        "fault_dead_links": [list(d) for d in dead],
+        "deadline": grid.deadline,
+        "admit_queue_depth": grid.admit_queue_depth,
         "points": points,
         "combos": combos,
         "serving_s": round(time.perf_counter() - t0, 4),

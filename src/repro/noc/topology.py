@@ -22,7 +22,8 @@ __all__ = ["NocConfig", "PORT_N", "PORT_E", "PORT_S", "PORT_W", "PORT_LOCAL",
            "NUM_PORTS", "OPPOSITE", "xy_route", "neighbor_table", "PAPER_NOCS",
            "PLACEMENTS", "AFFINITIES", "mc_placement", "make_noc",
            "mesh_by_name", "mean_hop_counts", "xy_link_loads",
-           "affinity_mc_table", "packet_mean_hops"]
+           "affinity_mc_table", "packet_mean_hops", "alive_link_mask",
+           "fault_route_table"]
 
 PORT_N, PORT_E, PORT_S, PORT_W, PORT_LOCAL = 0, 1, 2, 3, 4
 NUM_PORTS = 5
@@ -302,6 +303,119 @@ def xy_link_loads(cfg: NocConfig, lengths) -> np.ndarray:
             for r in range(r0, r1, -1):                 # or north
                 loads[r * cfg.cols + c1, PORT_N] += w
     return loads
+
+
+def alive_link_mask(cfg: NocConfig, dead_links: Tuple[Tuple[int, int], ...] = (),
+                    dead_routers: Tuple[int, ...] = ()) -> np.ndarray:
+    """``(NR, 4)`` bool: which inter-router out-directions survive the hard
+    faults.
+
+    ``dead_links`` entries are ``(router, out_port)`` pairs naming a
+    physical channel; the channel is bidirectional, so the opposite
+    direction dies with it. Dead routers kill all four of their channels
+    (both directions) — a flit can neither enter nor traverse them.
+    Directions off the mesh edge are dead by construction.
+    """
+    nr = cfg.num_routers
+    nb = np.asarray(neighbor_table(cfg))
+    alive = nb[:, :4] >= 0
+    for router, port in dead_links:
+        if not (0 <= router < nr and 0 <= port < 4):
+            raise ValueError(f"dead link ({router}, {port}) out of range for "
+                             f"a {cfg.rows}x{cfg.cols} mesh")
+        other = int(nb[router, port])
+        if other < 0:
+            raise ValueError(f"dead link ({router}, {port}) points off the "
+                             "mesh edge - no physical channel there")
+        alive[router, port] = False
+        alive[other, int(OPPOSITE[port])] = False
+    for router in dead_routers:
+        if not 0 <= router < nr:
+            raise ValueError(f"dead router {router} out of range")
+        alive[router, :] = False
+        for port in range(4):
+            other = int(nb[router, port])
+            if other >= 0:
+                alive[other, int(OPPOSITE[port])] = False
+    return alive
+
+
+def fault_route_table(cfg: NocConfig,
+                      dead_links: Tuple[Tuple[int, int], ...] = (),
+                      dead_routers: Tuple[int, ...] = ()):
+    """Fault-adaptive routing table and reachability matrix.
+
+    Returns ``(table, reachable)`` where ``table[router, dest]`` is the
+    out-port (int32, shape (NR, NR)) and ``reachable[src, dest]`` says a
+    packet injected at ``src`` can reach ``dest`` over alive channels.
+
+    The table starts from the exact X-Y table and is repaired **only**
+    where the X-Y path is broken: a router whose entire X-Y path to the
+    destination is alive keeps its X-Y port (with no hard faults the
+    result equals :func:`xy_route` entry for entry — the zero-fault
+    bit-identity pin). Broken-but-reachable entries detour along a
+    BFS-shortest alive path, always stepping to a neighbor strictly
+    closer (in BFS distance) to the destination — loop-free by
+    construction, with a deterministic port preference (X-Y port first,
+    then N/E/S/W). Detours abandon dimension order, so the X-Y deadlock
+    argument no longer covers them; the drain watchdog
+    (:class:`repro.noc.sim.DrainTimeout`) is the backstop.
+
+    Entries for unreachable (src, dest) pairs keep their X-Y port and are
+    meaningless; callers must pre-filter such packets via ``reachable``
+    (``repro.noc.faults`` reports them as ``dropped``).
+    """
+    nr = cfg.num_routers
+    alive = alive_link_mask(cfg, dead_links, dead_routers)
+    nb = np.asarray(neighbor_table(cfg))
+    dead_r = np.zeros(nr, bool)
+    dead_r[list(dead_routers)] = True
+    table = np.array(xy_route(cfg), dtype=np.int32)
+    reachable = np.zeros((nr, nr), dtype=bool)
+    unreach = nr + 1
+    rows = np.arange(nr) // cfg.cols
+    cols = np.arange(nr) % cfg.cols
+    for d in range(nr):
+        if dead_r[d]:
+            continue                                 # no one reaches a dead router
+        # BFS distance to d over alive channels (killed symmetrically, so a
+        # reverse search from d equals forward reachability to d).
+        dist = np.full(nr, unreach, np.int32)
+        dist[d] = 0
+        frontier = [d]
+        while frontier:
+            nxt = []
+            for cur in frontier:
+                for port in range(4):
+                    n = int(nb[cur, port])
+                    if n >= 0 and alive[cur, port] and dist[n] == unreach:
+                        dist[n] = dist[cur] + 1
+                        nxt.append(n)
+            frontier = nxt
+        reachable[:, d] = dist < unreach
+        # X-Y-intact routers, in Manhattan-distance order: each X-Y hop lands
+        # strictly closer, so "good" propagates from the destination outward.
+        good = np.zeros(nr, bool)
+        good[d] = True
+        manhattan = np.abs(rows - rows[d]) + np.abs(cols - cols[d])
+        for r in np.argsort(manhattan, kind="stable"):
+            if r == d:
+                continue
+            port = int(table[r, d])
+            n = int(nb[r, port])
+            good[r] = n >= 0 and alive[r, port] and good[n]
+        # Repair broken-but-reachable entries with a BFS-descending detour.
+        for r in range(nr):
+            if r == d or good[r] or dist[r] == unreach:
+                continue
+            prefs = [int(table[r, d])]
+            prefs += [p for p in range(4) if p not in prefs]
+            for port in prefs:
+                n = int(nb[r, port])
+                if n >= 0 and alive[r, port] and dist[n] == dist[r] - 1:
+                    table[r, d] = port
+                    break
+    return table, reachable
 
 
 # The paper's three evaluated NoC configurations (Sec. V-B).

@@ -46,8 +46,8 @@ __all__ = ["LayerTraffic", "build_traffic", "build_traffic_batch",
            "result_values", "ordered_payloads", "ordered_payloads_streamed",
            "payload_shapes", "assemble_traffic", "TrafficAssembler",
            "stream_lengths", "pad_traffic_length", "stack_traffics",
-           "concat_inferences", "conv_layer_traffic", "linear_layer_traffic",
-           "DEFAULT_RESULT_WINDOW"]
+           "concat_inferences", "filter_packets", "conv_layer_traffic",
+           "linear_layer_traffic", "DEFAULT_RESULT_WINDOW"]
 
 # One sweep variant: an ordering transform plus an optional value->wire-dtype
 # quantizer (None transmits raw float32 words).
@@ -410,6 +410,62 @@ def concat_inferences(traffic: Traffic, n: int) -> Traffic:
         vc=jnp.asarray(v2), pkt=jnp.asarray(p2),
         length=jnp.asarray((lengths * n).astype(np.int32)),
         num_packets=npkt * n)
+
+
+def filter_packets(traffic: Traffic, keep_ids) -> Traffic:
+    """Keep only the flits of the given packet ids, compacting each stream.
+
+    ``keep_ids``: packet ids to retain (array-like of ints, or a boolean
+    mask of length ``num_packets``). Flits of other packets are removed
+    and each stream's survivors slide forward in original order (the NI
+    walks streams contiguously); ``length`` shrinks accordingly, the tail
+    is zeroed padding, and ``num_packets`` is preserved - surviving
+    packets keep their ids/ledger slots. The fault-injection layer uses
+    this twice: to drop packets to unreachable destinations before
+    injection, and to build retransmission traffic from the original
+    (clean) flits of detected-corrupt packets. Unbatched Traffic only.
+    """
+    if traffic.length.ndim != 1:
+        raise ValueError("filter_packets wants an unbatched Traffic "
+                         "(use .variant(i) on a batched one)")
+    npkt = int(traffic.num_packets)
+    if npkt < 0:
+        raise ValueError("filter_packets needs num_packets metadata "
+                         "(hand-built Traffic must set it)")
+    keep_ids = np.asarray(keep_ids)
+    if keep_ids.dtype == bool:
+        keep_pkt = keep_ids
+        if keep_pkt.shape != (npkt,):
+            raise ValueError(f"boolean keep mask must have shape ({npkt},), "
+                             f"got {keep_pkt.shape}")
+    else:
+        keep_pkt = np.zeros(npkt, bool)
+        keep_pkt[keep_ids.astype(np.int64)] = True
+    lengths = np.asarray(traffic.length, np.int64)
+    m, t = np.asarray(traffic.meta).shape
+    valid = np.arange(t)[None, :] < lengths[:, None]
+    pkt = np.asarray(traffic.pkt)
+    keep = valid & keep_pkt[np.clip(pkt, 0, npkt - 1)]
+    # Stable compaction: kept flits first, original order preserved.
+    order = np.argsort(~keep, axis=1, kind="stable")
+    rows = np.arange(m)[:, None]
+    new_len = keep.sum(axis=1).astype(np.int32)
+    live = np.arange(t)[None, :] < new_len[:, None]
+
+    def take(a, fill=0):
+        out = np.asarray(a)[rows, order]
+        return np.where(live, out, fill)
+
+    words = np.asarray(traffic.words)[rows, order]      # (M, T, L) rows move
+    words = np.where(live[..., None], words, 0).astype(np.uint32)
+    return Traffic(
+        words=jnp.asarray(words),
+        dest=jnp.asarray(take(traffic.dest).astype(np.int32)),
+        meta=jnp.asarray(take(traffic.meta).astype(np.int32)),
+        vc=jnp.asarray(take(traffic.vc).astype(np.int32)),
+        pkt=jnp.asarray(take(traffic.pkt).astype(np.int32)),
+        length=jnp.asarray(new_len),
+        num_packets=npkt)
 
 
 def stack_traffics(traffics: Sequence[Traffic]) -> Traffic:

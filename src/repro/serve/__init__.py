@@ -1,3 +1,3 @@
-from .engine import Engine, GenerationConfig
+from .engine import AdmissionController, Engine, GenerationConfig
 
-__all__ = ["Engine", "GenerationConfig"]
+__all__ = ["AdmissionController", "Engine", "GenerationConfig"]

@@ -14,7 +14,90 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["GenerationConfig", "Engine"]
+__all__ = ["GenerationConfig", "Engine", "AdmissionController"]
+
+
+@dataclasses.dataclass
+class AdmissionController:
+    """Deadline / queue-depth admission control for a serving loop.
+
+    The graceful-degradation policy shared with the cycle-accurate NoC
+    serving model (``repro.noc.online.simulate_online``): a request
+    offered while ``max_queue_depth`` admitted requests are still
+    outstanding is *shed* (rejected at admission, never started), and an
+    admitted request whose completion latency exceeds ``deadline`` time
+    units - or that completes ``failed`` - misses its SLO. This object is
+    pure bookkeeping: the caller drives time (cycles, seconds - any
+    monotone clock) through ``offer``/``complete`` and reads ``stats``.
+
+    Goodput counts only SLO-attained completions, per 1000 time units of
+    busy span (first offer to last completion), matching
+    ``OnlineResult.goodput`` so engine-level and NoC-level numbers are
+    directly comparable.
+    """
+    max_queue_depth: Optional[int] = None
+    deadline: Optional[float] = None
+    offered: int = 0
+    shed: int = 0
+    failed: int = 0
+    slo_attained: int = 0
+    completed: int = 0
+    _outstanding: dict = dataclasses.field(default_factory=dict)
+    _t_first: Optional[float] = None
+    _t_last: Optional[float] = None
+
+    def __post_init__(self):
+        if self.max_queue_depth is not None and self.max_queue_depth < 1:
+            raise ValueError("max_queue_depth must be >= 1 when set")
+        if self.deadline is not None and self.deadline <= 0:
+            raise ValueError("deadline must be > 0 when set")
+
+    @property
+    def queue_depth(self) -> int:
+        return len(self._outstanding)
+
+    def offer(self, req_id, now: float) -> bool:
+        """Offer a request at time ``now``; True iff admitted."""
+        self.offered += 1
+        if self._t_first is None or now < self._t_first:
+            self._t_first = now
+        if (self.max_queue_depth is not None
+                and len(self._outstanding) >= self.max_queue_depth):
+            self.shed += 1
+            return False
+        if req_id in self._outstanding:
+            raise ValueError(f"request {req_id!r} already outstanding")
+        self._outstanding[req_id] = now
+        return True
+
+    def complete(self, req_id, now: float, failed: bool = False) -> bool:
+        """Mark an admitted request finished; True iff it made its SLO."""
+        start = self._outstanding.pop(req_id)
+        self.completed += 1
+        self._t_last = now if self._t_last is None else max(self._t_last, now)
+        if failed:
+            self.failed += 1
+            return False
+        ok = self.deadline is None or (now - start) <= self.deadline
+        self.slo_attained += int(ok)
+        return ok
+
+    def stats(self) -> dict:
+        span = (None if self._t_first is None or self._t_last is None
+                else max(self._t_last - self._t_first, 1.0))
+        return {
+            "offered": self.offered,
+            "admitted": self.offered - self.shed,
+            "shed": self.shed,
+            "completed": self.completed,
+            "failed": self.failed,
+            "outstanding": len(self._outstanding),
+            "slo_attained": self.slo_attained,
+            "slo_attainment": (self.slo_attained / self.offered
+                               if self.offered else None),
+            "goodput": (1000.0 * self.slo_attained / span
+                        if span else None),
+        }
 
 
 @dataclasses.dataclass(frozen=True)

@@ -1,0 +1,267 @@
+"""Fault-injection NoC: the bit-identity pin and the protection contract.
+
+Pins the ISSUE-9 guarantees of ``repro.noc.faults``:
+
+* **Zero-fault bit-identity** - a null ``FaultModel`` drains through
+  ``simulate_faulty`` with total_bt/link_bt/drain_cycle identical to both
+  ``simulate`` and the frozen seed driver (``noc._reference``) on the
+  pinned 36-cell grid;
+* **Protection correctness** - the syndrome-mask codes equal the bitwise
+  CRC-8 reference; ``protect_wire`` stamps codes a clean ejection always
+  verifies; CRC-8 detects the injected flips of the pinned schedule while
+  ``protect=none`` ships them silently;
+* **Hard faults** - a dead mid-mesh link detour-delivers everything, a
+  dead router's packets are reported dropped (never silently lost), and
+  the conservation ledger closes either way;
+* **Seeded replay** - one (rate, seed) pair replays the identical drain;
+* the drain watchdog (``DrainTimeout`` diagnostics), the explicit
+  ``backend="pallas"`` + ``check_conservation`` contradiction, and the
+  serving-layer deadline/admission degradation knobs.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.wire import (by_name, crc8_reference,
+                             protection_syndrome_masks)
+from repro.noc import (ArrivalProcess, DrainTimeout, FaultModel,
+                       LayerTraffic, build_result_traffic,
+                       build_traffic_batch, make_noc, protect_wire,
+                       simulate, simulate_faulty, simulate_online,
+                       STATUS_DELIVERED, STATUS_DROPPED)
+from repro.noc._reference import simulate_reference
+
+CHUNK = 256
+
+
+@pytest.fixture(scope="module")
+def layers():
+    key = jax.random.PRNGKey(3)
+    return [
+        LayerTraffic(jax.random.normal(key, (24, 12)),
+                     jax.random.normal(jax.random.fold_in(key, 1),
+                                       (24, 12)) * 0.4),
+        LayerTraffic(jax.random.normal(jax.random.fold_in(key, 2), (10, 8)),
+                     jax.random.normal(jax.random.fold_in(key, 3), (10, 8))),
+    ]
+
+
+@pytest.fixture(scope="module")
+def cfg36():
+    """The pinned 36-cell grid of the acceptance criteria."""
+    return make_noc(6, 6, num_mcs=4, lanes=8)
+
+
+@pytest.fixture(scope="module")
+def traffic36(layers, cfg36):
+    return build_traffic_batch(layers, cfg36, [(by_name("O1"), None)],
+                               max_packets_per_layer=8).variant(0)
+
+
+def test_zero_fault_bit_identity(cfg36, traffic36):
+    clean = simulate(cfg36, traffic36, chunk=CHUNK)
+    ref = simulate_reference(cfg36, traffic36, chunk=CHUNK)
+    fd = simulate_faulty(cfg36, traffic36, FaultModel(), chunk=CHUNK)
+    # The frozen seed driver predates drain_cycle (None) - BT recorders
+    # are the shared contract; the fused path adds the drain-cycle pin.
+    for other in (clean, ref):
+        assert fd.sim.total_bt == other.total_bt
+        np.testing.assert_array_equal(np.asarray(fd.sim.link_bt),
+                                      np.asarray(other.link_bt))
+        np.testing.assert_array_equal(np.asarray(fd.sim.inj_bt),
+                                      np.asarray(other.inj_bt))
+    assert fd.sim.drain_cycle == clean.drain_cycle
+    led = fd.ledger
+    assert led["conservation_ok"]
+    assert led["delivered"] == led["injected_packets"]
+    assert led["dropped"] == led["retry_exhausted"] == led["unsent"] == 0
+    assert led["protection_overhead_bits"] == 0
+    assert led["transmission_rounds"] == 1
+    assert np.all(fd.status == STATUS_DELIVERED)
+
+
+def test_null_model_predicate():
+    assert FaultModel().is_null
+    assert not FaultModel(rate=1e-3).is_null
+    assert not FaultModel(protect="crc8").is_null
+    assert not FaultModel(dead_links=((0, 1),)).is_null
+    with pytest.raises(ValueError):
+        FaultModel(rate=1.5)
+    with pytest.raises(ValueError):
+        FaultModel(protect="hamming")
+
+
+def test_syndrome_masks_match_crc8_reference():
+    lanes = 8
+    masks = protection_syndrome_masks("crc8", lanes)
+    rng = np.random.default_rng(0)
+    for _ in range(16):
+        payload = rng.integers(0, 2**32, size=lanes, dtype=np.uint64
+                               ).astype(np.uint32)
+        code = 0
+        for j in range(masks.shape[0]):
+            bits = np.bitwise_count(payload & masks[j]).sum() & 1
+            code |= int(bits) << j
+        msg = b"".join(int(w).to_bytes(4, "little") for w in payload)
+        assert code == crc8_reference(msg)
+
+
+def test_protect_wire_stamps_verifiable_codes(cfg36, traffic36):
+    from repro.noc import fuse_traffic
+    lanes = cfg36.lanes
+    fused = fuse_traffic(traffic36, False)
+    wire = protect_wire(fused, "crc8", lanes)
+    raw = np.asarray(fused.wire)
+    stamped = np.asarray(wire.wire)
+    np.testing.assert_array_equal(stamped[..., :lanes], raw[..., :lanes])
+    # Codes live in sideband bits 16+; dest/meta/vc bits stay untouched.
+    np.testing.assert_array_equal(stamped[..., lanes] & 0xFFFF,
+                                  raw[..., lanes] & 0xFFFF)
+    lengths = np.asarray(traffic36.length)
+    for s in range(stamped.shape[0]):
+        for f in range(min(int(lengths[s]), 4)):
+            msg = b"".join(int(w).to_bytes(4, "little")
+                           for w in stamped[s, f, :lanes])
+            assert int(stamped[s, f, lanes]) >> 16 == crc8_reference(msg)
+
+
+def test_seeded_replay_determinism(cfg36, traffic36):
+    model = FaultModel(rate=5e-2, seed=11, protect="crc8")
+    a = simulate_faulty(cfg36, traffic36, model, chunk=CHUNK)
+    b = simulate_faulty(cfg36, traffic36, model, chunk=CHUNK)
+    assert a.sim.total_bt == b.sim.total_bt
+    assert a.sim.drain_cycle == b.sim.drain_cycle
+    assert a.ledger == b.ledger
+    np.testing.assert_array_equal(a.status, b.status)
+    np.testing.assert_array_equal(a.retries, b.retries)
+
+    c = simulate_faulty(cfg36, traffic36,
+                        FaultModel(rate=5e-2, seed=12, protect="crc8"),
+                        chunk=CHUNK)
+    assert (c.ledger["flip_events"] != a.ledger["flip_events"]
+            or c.sim.total_bt != a.sim.total_bt)
+
+
+def test_crc8_detects_flips_none_ships_them(cfg36, traffic36):
+    protected = simulate_faulty(
+        cfg36, traffic36, FaultModel(rate=5e-2, seed=7, protect="crc8"),
+        chunk=CHUNK)
+    led = protected.ledger
+    assert led["flip_events"] > 0
+    assert led["detected_bad_flits"] > 0
+    assert led["silent_corrupt"] == 0
+    assert led["retried_packets"] > 0
+    assert led["transmission_rounds"] > 1
+    assert led["conservation_ok"]
+    # Protection bits are charged on every transmitted flit, retries
+    # included.
+    assert led["protection_overhead_bits"] == 8 * led["transmitted_flits"]
+
+    bare = simulate_faulty(cfg36, traffic36,
+                           FaultModel(rate=5e-2, seed=7), chunk=CHUNK)
+    bled = bare.ledger
+    assert bled["flip_events"] > 0
+    assert bled["detected_bad_flits"] == 0
+    assert bled["silent_corrupt"] > 0
+    assert bled["transmission_rounds"] == 1
+    assert bled["delivered"] == bled["injected_packets"]
+
+
+def test_dead_link_detours_and_delivers(cfg36, traffic36):
+    model = FaultModel(dead_links=((cfg36.cols + 1, 1),))
+    fd = simulate_faulty(cfg36, traffic36, model, chunk=CHUNK)
+    led = fd.ledger
+    assert led["conservation_ok"]
+    assert led["dropped"] == 0
+    assert led["delivered"] == led["injected_packets"]
+
+
+def test_dead_router_drops_with_reason(cfg36, traffic36):
+    dead = cfg36.cols + 1                 # a PE, not an MC
+    assert dead not in cfg36.mc_nodes
+    fd = simulate_faulty(cfg36, traffic36,
+                         FaultModel(dead_routers=(dead,)), chunk=CHUNK)
+    led = fd.ledger
+    assert led["conservation_ok"]
+    from repro.noc.faults import _packet_endpoints
+    _, pdst = _packet_endpoints(traffic36, np.asarray(cfg36.mc_nodes),
+                                int(traffic36.num_packets))
+    to_dead = pdst == dead
+    assert led["dropped"] == int(to_dead.sum()) > 0
+    assert np.all(fd.status[to_dead] == STATUS_DROPPED)
+    assert led["delivered"] == led["injected_packets"] - led["dropped"]
+
+
+def test_drain_timeout_diagnostic(cfg36, traffic36):
+    with pytest.raises(DrainTimeout) as ei:
+        simulate(cfg36, traffic36, max_cycles=8, chunk=8,
+                 check_conservation=True)
+    e = ei.value
+    assert e.cycle >= 8 and e.ejected < e.total
+    assert e.occupancy or e.pending
+    assert e.undelivered is not None and len(e.undelivered) > 0
+
+
+def test_pallas_backend_rejects_conservation(cfg36, traffic36):
+    with pytest.raises(ValueError, match="pallas"):
+        simulate(cfg36, traffic36, backend="pallas",
+                 check_conservation=True, chunk=CHUNK)
+
+
+@pytest.fixture(scope="module")
+def serving_setup():
+    cfg = make_noc(4, 4, num_mcs=2, lanes=4)
+    key = jax.random.PRNGKey(5)
+    layer = LayerTraffic(jax.random.normal(key, (12, 6)),
+                         jax.random.normal(jax.random.fold_in(key, 1),
+                                           (12, 6)))
+    variants = [(by_name("O0"), None)]
+    req = build_traffic_batch([layer], cfg, variants,
+                              max_packets_per_layer=6).variant(0)
+    res = build_result_traffic([layer], cfg, variants,
+                               max_packets_per_layer=6,
+                               result_window=4).variant(0)
+    return cfg, req, res
+
+
+def test_online_deadline_slo(serving_setup):
+    cfg, req, res = serving_setup
+    kw = dict(arrivals=ArrivalProcess("uniform", 4.0, 0),
+              num_inferences=4, chunk=64, check_conservation=True,
+              record_bt=False)
+    relaxed = simulate_online(cfg, req, res, deadline=10**6, **kw)
+    assert relaxed.slo_attainment == 1.0
+    assert relaxed.num_failed == relaxed.num_shed == 0
+    tight = simulate_online(cfg, req, res, deadline=1, **kw)
+    assert tight.slo_attainment == 0.0
+    assert tight.goodput is None or tight.goodput == 0.0
+    with pytest.raises(ValueError):
+        simulate_online(cfg, req, res, deadline=0, **kw)
+
+
+def test_online_admission_sheds_under_overload(serving_setup):
+    cfg, req, res = serving_setup
+    onl = simulate_online(cfg, req, res,
+                          arrivals=ArrivalProcess("backtoback"),
+                          num_inferences=6, chunk=64,
+                          admit_queue_depth=1, deadline=10**6,
+                          check_conservation=True, record_bt=False)
+    assert onl.num_shed > 0
+    assert onl.num_shed + int((onl.completions >= 0).sum()) <= 6
+    # Shed inferences never complete and never count toward SLO.
+    shed = np.asarray(onl.shed)
+    assert np.all(onl.completions[shed] < 0)
+    assert onl.slo_attainment <= (6 - onl.num_shed) / 6
+
+
+def test_online_fault_ledger_closes(serving_setup):
+    cfg, req, res = serving_setup
+    onl = simulate_online(cfg, req, res,
+                          arrivals=ArrivalProcess("uniform", 4.0, 0),
+                          num_inferences=4, chunk=64,
+                          faults=FaultModel(rate=1e-3, protect="crc8"),
+                          deadline=10**6,
+                          check_conservation=True, record_bt=False)
+    for phase in ("request", "result"):
+        assert onl.fault_ledger[phase]["conservation_ok"]
+    assert onl.slo_attainment is not None

@@ -1,0 +1,116 @@
+"""Property tests (hypothesis) for the fault-injection drain.
+
+Three invariants of ``simulate_faulty`` for ARBITRARY small meshes,
+packet counts, fault rates, and protection schemes:
+
+* **Conservation under faults** - every packet ends in exactly one of
+  delivered / dropped / retry-exhausted / unsent, and the ledger's
+  breakdown sums to the injected count (the ISSUE-9 acceptance identity);
+* **Null-model equivalence** - rate 0 + protect none + no hard faults
+  reproduces ``simulate``'s total_bt and drain_cycle exactly;
+* **Seeded replay** - the same (model, traffic) pair drains identically,
+  ledger and per-packet status included.
+
+Kept separate from tests/test_noc_faults.py so importorskip can stay
+module-granular (mirrors tests/test_noc_online_properties.py).
+"""
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this container")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core.wire import by_name  # noqa: E402
+from repro.noc import (FaultModel, LayerTraffic, NocConfig,  # noqa: E402
+                       build_traffic_batch, make_noc, simulate,
+                       simulate_faulty, STATUS_DELIVERED, STATUS_DROPPED,
+                       STATUS_RETRY_EXHAUSTED, STATUS_UNSENT)
+
+CHUNK = 64
+
+_MESHES = [
+    NocConfig(rows=3, cols=3, mc_nodes=(0, 4), lanes=4),
+    NocConfig(rows=3, cols=4, mc_nodes=(0, 11), num_vcs=3, lanes=4),
+    make_noc(4, 4, num_mcs=4, lanes=4),
+]
+
+_STATUSES = {STATUS_DELIVERED, STATUS_DROPPED, STATUS_RETRY_EXHAUSTED,
+             STATUS_UNSENT}
+
+
+def _traffic(cfg, seed, npkts):
+    key = jax.random.PRNGKey(seed)
+    layer = LayerTraffic(
+        jax.random.normal(key, (npkts, 6)),
+        jax.random.normal(jax.random.fold_in(key, 1), (npkts, 6)) * 0.5)
+    return build_traffic_batch([layer], cfg, [(by_name("O0"), None)]
+                               ).variant(0)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mesh=st.integers(min_value=0, max_value=len(_MESHES) - 1),
+    npkts=st.integers(min_value=3, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    rate=st.sampled_from([0.0, 1e-3, 2e-2, 1e-1]),
+    protect=st.sampled_from(["none", "parity", "crc8"]),
+    retries=st.integers(min_value=0, max_value=3),
+)
+def test_conservation_under_faults(mesh, npkts, seed, rate, protect,
+                                   retries):
+    cfg = _MESHES[mesh]
+    traffic = _traffic(cfg, seed % 7, npkts)
+    model = FaultModel(rate=rate, seed=seed, protect=protect,
+                       max_retries=retries)
+    fd = simulate_faulty(cfg, traffic, model, chunk=CHUNK)
+    led = fd.ledger
+    assert led["conservation_ok"]
+    assert (led["delivered"] + led["dropped"] + led["retry_exhausted"]
+            + led["unsent"] == led["injected_packets"] == npkts)
+    assert set(np.unique(fd.status)) <= _STATUSES
+    # Retries only happen for detected corruption, within budget.
+    assert int(fd.retries.max(initial=0)) <= retries
+    if protect == "none":
+        # Nothing is ever detected, so nothing retries or exhausts.
+        assert led["retry_exhausted"] == 0 and led["total_retries"] == 0
+    assert led["transmitted_flits"] >= int(np.asarray(traffic.length).sum())
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    mesh=st.integers(min_value=0, max_value=len(_MESHES) - 1),
+    npkts=st.integers(min_value=3, max_value=16),
+    seed=st.integers(min_value=0, max_value=10),
+)
+def test_null_model_matches_simulate(mesh, npkts, seed):
+    cfg = _MESHES[mesh]
+    traffic = _traffic(cfg, seed, npkts)
+    clean = simulate(cfg, traffic, chunk=CHUNK)
+    fd = simulate_faulty(cfg, traffic, FaultModel(seed=seed), chunk=CHUNK)
+    assert fd.sim.total_bt == clean.total_bt
+    assert fd.sim.drain_cycle == clean.drain_cycle
+    np.testing.assert_array_equal(np.asarray(fd.sim.link_bt),
+                                  np.asarray(clean.link_bt))
+
+
+@settings(max_examples=8, deadline=None)
+@given(
+    mesh=st.integers(min_value=0, max_value=len(_MESHES) - 1),
+    npkts=st.integers(min_value=3, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    rate=st.sampled_from([1e-2, 1e-1]),
+)
+def test_seeded_replay(mesh, npkts, seed, rate):
+    cfg = _MESHES[mesh]
+    traffic = _traffic(cfg, seed % 5, npkts)
+    model = FaultModel(rate=rate, seed=seed, protect="crc8")
+    a = simulate_faulty(cfg, traffic, model, chunk=CHUNK)
+    b = simulate_faulty(cfg, traffic, model, chunk=CHUNK)
+    assert a.ledger == b.ledger
+    assert a.sim.total_bt == b.sim.total_bt
+    np.testing.assert_array_equal(a.status, b.status)
+    np.testing.assert_array_equal(np.asarray(a.sim.link_bt),
+                                  np.asarray(b.sim.link_bt))
