@@ -1,0 +1,223 @@
+"""Ordering x compression co-design: does transmission ordering still pay
+once the flit payloads are MSR-compressed?
+
+MSR compression (``repro.core.msr``, the sweep's fifth knob) shrinks every
+8-bit payload lane to a dense 5-bit code stream - fewer flits per packet,
+fewer link toggles per flit, plus an analytically-charged escape sideband.
+That directly attacks the same quantity the O1-O3 orderings attack (bit
+transitions on the payload lanes), so the honest question for the paper's
+contribution is whether ordering's *adjusted* win survives on compressed
+traffic. This suite sweeps O0/O1/O2/O3 x {none, msr} on a mid-size LeNet
+mesh (6x6/MC4) and the full, unsubsampled DarkNet traffic on 16x16/MC16
+(streamed packetization), and records per-cell BT, drain cycles, flits,
+and escape overhead, the msr/none ratios per transform, and two verdicts:
+
+* ``ordering_pays_after_compression`` - the *best* non-baseline ordering
+  still beats O0 on overhead-adjusted BT when both ride MSR-compressed
+  lanes, on every workload (the co-design claim; suite fails if it flips).
+  The per-transform gains are recorded too, because the split is the
+  finding: O1's zero-overhead descending order keeps paying on 5-bit
+  lanes, while the O3 min-Hamming chain - whose objective is wired to the
+  8-bit flit layout - loses its edge once the dense 5-bit re-packing
+  scrambles which code bits land adjacent on the wire, and its recovery
+  index then drags the adjusted number below the O0 floor;
+* ``compression_none_identical`` - the ``compression="none"`` rows agree
+  field-by-field with a control grid that never names the axis (the
+  default-off pin; suite fails if it drifts).
+
+``REPRO_BENCH_SMOKE=1`` shrinks to random-init LeNet on 4x4/MC2 with a
+4-packet budget - the CI gate for the codec-through-sweep path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+
+from repro.data import glyph_batch
+from repro.noc import SweepGrid, run_sweep
+
+from ._trained import get_trained, random_params
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments")
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+TRANSFORMS = ("O0", "O1", "O2", "O3")
+
+
+def _layers(name: str):
+    if SMOKE:
+        model, params = random_params(name)
+    else:
+        model, params, _ = get_trained(name)
+    hw, ch = model.input_shape[0], model.input_shape[-1]
+    x, _ = glyph_batch(jax.random.PRNGKey(11), 1, hw=hw, channels=ch)
+    return model.layer_traffic(params, x[0])
+
+
+def _workloads():
+    """(label, model, grid) per workload; the control grid is the same
+    sweep with the compression axis left at its default."""
+    if SMOKE:
+        return [("lenet_4x4", SweepGrid(
+            meshes=("4x4_mc2",), transforms=TRANSFORMS,
+            tiebreaks=("pattern",), precisions=("fixed8",),
+            models=("lenet",), compression=("none", "msr"),
+            max_packets_per_layer=4, chunk=128))]
+    return [
+        ("lenet_6x6", SweepGrid(
+            meshes=("6x6_mc4",), transforms=TRANSFORMS,
+            tiebreaks=("pattern",), precisions=("fixed8",),
+            models=("lenet",), compression=("none", "msr"),
+            max_packets_per_layer=40, chunk=2048)),
+        ("darknet_full_16x16", SweepGrid(
+            meshes=("16x16_mc16",), transforms=TRANSFORMS,
+            tiebreaks=("pattern",), precisions=("fixed8",),
+            models=("darknet",), compression=("none", "msr"),
+            max_packets_per_layer=None,      # full traffic -> streamed
+            stream_chunk_packets=4096, chunk=4096)),
+    ]
+
+
+def _check_none_identical(report, grid, layers_fn) -> bool:
+    """Control arm: rerun the same grid without naming the compression
+    axis; the axis-on none rows must agree field-by-field (minus the three
+    axis columns, which the control predates)."""
+    control = run_sweep(dataclasses.replace(grid, compression=("none",)),
+                        layers_fn)
+    none_rows = [r for r in report.rows if r["compression"] == "none"]
+    assert len(none_rows) == len(control.rows), \
+        f"control row count {len(control.rows)} != {len(none_rows)}"
+    for got, want in zip(none_rows, control.rows):
+        for key in want:
+            assert got[key] == want[key], \
+                f"compression=none drifted from the axis-default path at " \
+                f"{want['transform']}/{key}: {got[key]} != {want[key]}"
+    return True
+
+
+def run() -> dict:
+    results = {}
+    workloads = {}
+    wall = 0.0
+    for label, grid in _workloads():
+        layers = _layers(grid.models[0])
+        layers_fn = lambda _n: layers        # noqa: E731 - one shared load
+
+        t0 = time.perf_counter()
+        report = run_sweep(grid, layers_fn)
+        wl_wall = time.perf_counter() - t0
+        wall += wl_wall
+
+        mesh = grid.meshes[0]
+        for r in report.rows:
+            results[f"{label}/{mesh}/{r['transform']}/{r['compression']}"] = {
+                "total_bt": r["total_bt"],
+                "adjusted_bt": r["adjusted_bt"],
+                "overhead_bits": r["overhead_bits"],
+                "compression_overhead_bits": r["compression_overhead_bits"],
+                "cycles": r["cycles"], "flits": r["flits"],
+                "bt_per_flit": round(r["bt_per_flit"], 3),
+            }
+
+        # The co-design join: per transform, what did compression do to
+        # BT, drain cycles, and flit volume?
+        by_transform = {}
+        for tr in grid.transforms:
+            none = report.row(transform=tr, compression="none")
+            msr = report.row(transform=tr, compression="msr")
+            assert msr["flits"] <= none["flits"], \
+                f"{label}/{tr}: MSR increased flit volume"
+            by_transform[tr] = {
+                "bt_ratio": round(msr["total_bt"] / none["total_bt"], 4),
+                "adjusted_bt_ratio": round(
+                    msr["adjusted_bt"] / none["adjusted_bt"], 4),
+                "flit_ratio": round(msr["flits"] / none["flits"], 4),
+                "cycle_delta_pct": round(
+                    (1 - msr["cycles"] / none["cycles"]) * 100, 2),
+                "escape_overhead_share_pct": round(
+                    (msr["compression_overhead_bits"] // 2)
+                    / msr["adjusted_bt"] * 100, 2),
+            }
+
+        # Ordering's honest win, with and without compression underneath:
+        # per transform the overhead-adjusted gain over O0, and the best
+        # ordering per compression mode (which ordering to co-design with
+        # is exactly what moves between the two columns).
+        gains = {}
+        best = {}
+        for comp in grid.compression:
+            base = report.row(transform=grid.baseline, compression=comp)
+            gains[comp] = {
+                tr: round((1 - report.row(transform=tr, compression=comp)
+                           ["adjusted_bt"] / base["adjusted_bt"]) * 100, 3)
+                for tr in grid.transforms if tr != grid.baseline}
+            best[comp] = max(gains[comp], key=gains[comp].get)
+        pays = gains["msr"][best["msr"]] > 0
+        assert pays, \
+            f"{label}: no ordering's adjusted win survives MSR " \
+            f"({gains['msr']}) - the co-design claim failed"
+
+        none_identical = _check_none_identical(report, grid, layers_fn)
+
+        workloads[label] = {
+            "mesh": mesh, "model": grid.models[0],
+            "streamed": report.stats["streamed"],
+            "packets": int(sum(
+                int(l.inputs.shape[0]) for l in layers)
+                if grid.max_packets_per_layer is None else sum(
+                    min(int(l.inputs.shape[0]), grid.max_packets_per_layer)
+                    for l in layers)),
+            "wall_s": round(wl_wall, 3),
+            "by_transform": by_transform,
+            "adjusted_gain_pct": gains,
+            "best_ordering": best,
+            "ordering_pays_after_compression": pays,
+            "compression_none_identical": none_identical,
+        }
+
+    overall_pays = all(w["ordering_pays_after_compression"]
+                       for w in workloads.values())
+    overall_identical = all(w["compression_none_identical"]
+                            for w in workloads.values())
+    assert overall_pays and overall_identical
+    bench = {
+        "transforms": list(TRANSFORMS),
+        "compression": ["none", "msr"],
+        "wall_s": round(wall, 3),
+        "workloads": workloads,
+        "ordering_pays_after_compression": overall_pays,
+        "compression_none_identical": overall_identical,
+    }
+    return {"results": results, "bench": bench}
+
+
+def main(print_csv=True):
+    out = run()
+    os.makedirs(OUT, exist_ok=True)
+    with open(os.path.join(OUT, "compression.json"), "w") as f:
+        json.dump(out["results"], f, indent=1)
+    if print_csv:
+        b = out["bench"]
+        for key, r in out["results"].items():
+            print(f"compression/{key},0,bt={r['total_bt']}"
+                  f" adj={r['adjusted_bt']} cycles={r['cycles']}"
+                  f" flits={r['flits']}"
+                  f" escape_bits={r['compression_overhead_bits']}")
+        for label, w in b["workloads"].items():
+            gm = w["adjusted_gain_pct"]["msr"]
+            print(f"compression/{label}/verdict,"
+                  f"{w['wall_s'] * 1e6:.0f},"
+                  f"best_none={w['best_ordering']['none']}"
+                  f" best_msr={w['best_ordering']['msr']}"
+                  f"({gm[w['best_ordering']['msr']]}%)"
+                  f" pays={w['ordering_pays_after_compression']}"
+                  f" none_identical={w['compression_none_identical']}")
+    return out
+
+
+if __name__ == "__main__":
+    main()

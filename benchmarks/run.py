@@ -20,8 +20,8 @@ import sys
 import time
 import traceback
 
-from . import (table1, fig1_expectation, fig10_11, fig12, fig13,
-               table2_power, darknet_full, faults, kernel_backend,
+from . import (table1, compression, fig1_expectation, fig10_11, fig12,
+               fig13, table2_power, darknet_full, faults, kernel_backend,
                ordered_collectives, ordering_throughput, roofline,
                serving, static_layout, step_overhaul)
 
@@ -44,6 +44,8 @@ SUITES = {
     "serving": serving.main,                  # closed-loop: latency vs load
     "faults": faults.main,                    # fault injection: BT + SLO
                                               # under flips/dead links
+    "compression": compression.main,          # ordering x MSR co-design:
+                                              # does ordering pay on 5b lanes
 }
 
 BENCH_PATH = os.path.join(os.path.dirname(__file__), "..", "BENCH_noc.json")

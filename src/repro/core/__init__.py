@@ -6,8 +6,9 @@ Public API:
     bt        - measured + expected bit-transition metrics (Eqs. 1-3)
     ordering  - descending / affiliated (O1) / separated (O2) orderings
     wire      - composable WireTransform API used by the NoC and dist layers
+    msr       - MSR 8b->5b flit compression codec (the compression knob)
 """
-from . import bits, flits, bt, ordering, wire
+from . import bits, flits, bt, msr, ordering, wire
 from .bits import popcount, popcount_hw, transitions
 from .flits import FlitStream, pack, pack_paired, unpack
 from .bt import (
@@ -20,9 +21,15 @@ from .ordering import (
     Ordered, PairedOrdered,
 )
 from .wire import WireTransform, by_name as wire_transform, measure as measure_stream
+from .msr import (
+    MsrCompressed, compress as msr_compress, decompress as msr_decompress,
+    msr_overhead_bits, msr_pack, msr_pack_paired,
+)
 
 __all__ = [
-    "bits", "flits", "bt", "ordering", "wire",
+    "bits", "flits", "bt", "msr", "ordering", "wire",
+    "MsrCompressed", "msr_compress", "msr_decompress",
+    "msr_overhead_bits", "msr_pack", "msr_pack_paired",
     "popcount", "popcount_hw", "transitions",
     "FlitStream", "pack", "pack_paired", "unpack",
     "bt_stream", "bt_per_flit", "bt_between", "expected_bt_pair",

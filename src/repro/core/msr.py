@@ -1,0 +1,378 @@
+"""MSR (Most-Significant-Run) flit compression: 8b -> 5b payload codes.
+
+Trained int8 tensors are dominated by near-zero values whose top bits are
+sign-extension copies: whenever the ``MSR_RUN = 4`` most significant bits of
+a byte form a run of the sign bit, the value fits in ``CODE_BITS = 5``
+two's-complement bits and the wire only needs its low five. The codec splits
+a value stream into fixed windows and produces
+
+* a dense 5-bit *code* per value (the low five bits - always, so the flit
+  geometry stays data-independent, which is what lets the packetizer keep
+  one skeleton per layer and the streamed path stay bit-identical to the
+  one-shot path), and
+* per-window *escape metadata* for the rare outliers whose MSR is shorter
+  than the threshold: an outlier count plus, per outlier, its window
+  position and its ``ESCAPE_BITS = 3`` explicit top bits.
+
+The payload lanes therefore always shrink 8b -> 5b (fewer flits on every
+link, for every input), while the escape records ride the sideband and are
+charged analytically at half a transition per bit - exactly like the O2
+recovery index (``ordering.index_overhead_bits``) and the flit-protection
+codes (``wire.protection_overhead_bits``); see DESIGN.md "MSR compression".
+
+``decompress(compress(x)) == x`` is bit-exact for every int8/uint8 input;
+the numpy reference implementation pins the jitted kernels
+(tests/test_msr.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .flits import FlitStream, num_flits
+
+__all__ = [
+    "MSR_RUN", "CODE_BITS", "ESCAPE_BITS", "MsrCompressed",
+    "compress", "decompress", "compress_reference", "decompress_reference",
+    "outlier_mask", "msr_overhead_bits", "msr_stream_overhead_bits",
+    "escape_bits", "compressed_bytes", "compressed_payload_flits",
+    "compressed_paired_payload_flits", "msr_pack", "msr_pack_paired",
+    "msr_pack_reference", "msr_pack_paired_reference",
+    "unpack_codes_reference",
+]
+
+MSR_RUN = 4                       # MSB run length that makes a value an inlier
+CODE_BITS = 9 - MSR_RUN           # 1 sign bit + (8 - MSR_RUN) value bits = 5
+ESCAPE_BITS = 8 - CODE_BITS       # explicit top bits per outlier record = 3
+_SIGN_BIT = 1 << (CODE_BITS - 1)          # 0x10: sign bit of a 5-bit code
+_CODE_MASK = (1 << CODE_BITS) - 1         # 0x1F
+_TOP_ONES = (1 << ESCAPE_BITS) - 1        # 0b111
+_EXT_MASK = _TOP_ONES << CODE_BITS        # 0xE0: sign-extension of the top 3
+
+
+class MsrCompressed(NamedTuple):
+    """One compressed stream, split into fixed ordering windows.
+
+    codes:   ``(num_windows, window)`` uint8 - the 5-bit code per value
+             (low ``CODE_BITS`` bits; the dense wire payload).
+    outlier: ``(num_windows, window)`` bool - True where the top
+             ``MSR_RUN`` bits are NOT a sign run (escape record needed).
+    top:     ``(num_windows, window)`` uint8 - the outlier's explicit top
+             ``ESCAPE_BITS`` bits (0 at inlier slots).
+    window / count / shape / dtype: window size, real value count before
+             padding, and the original array shape/dtype for decompress.
+    """
+
+    codes: jax.Array
+    outlier: jax.Array
+    top: jax.Array
+    window: int
+    count: int
+    shape: Tuple[int, ...]
+    dtype: str
+
+    def overhead_bits(self) -> int:
+        """Escape-metadata bits this stream owes (count field per window
+        plus a (position, top-bits) record per outlier)."""
+        return msr_stream_overhead_bits(self.window, self.codes.shape[0],
+                                        int(np.asarray(self.outlier).sum()))
+
+
+# --- byte views ------------------------------------------------------------
+
+def _to_bytes_jnp(values) -> jax.Array:
+    v = jnp.asarray(values).reshape(-1)
+    if v.dtype == jnp.uint8:
+        return v
+    if v.dtype == jnp.int8:
+        return jax.lax.bitcast_convert_type(v, jnp.uint8)
+    raise TypeError(f"MSR codec wants int8/uint8 values, got {v.dtype}")
+
+
+def _to_bytes_np(values) -> np.ndarray:
+    a = np.asarray(values)
+    if a.dtype == np.uint8:
+        return a.reshape(-1)
+    if a.dtype == np.int8:
+        return a.reshape(-1).view(np.uint8)
+    raise TypeError(f"MSR codec wants int8/uint8 values, got {a.dtype}")
+
+
+def _from_bytes(flat: np.ndarray, dtype: str, shape: Tuple[int, ...],
+                xp) -> np.ndarray:
+    if np.dtype(dtype) == np.int8:
+        flat = (flat.view(np.int8) if xp is np
+                else jax.lax.bitcast_convert_type(flat, jnp.int8))
+    return flat.reshape(shape)
+
+
+# --- codec -----------------------------------------------------------------
+
+@jax.jit
+def _compress_kernel(u: jax.Array):
+    top = (u >> CODE_BITS).astype(jnp.uint8)
+    predicted = jnp.where((u & _SIGN_BIT) != 0,
+                          jnp.uint8(_TOP_ONES), jnp.uint8(0))
+    outlier = top != predicted
+    codes = (u & _CODE_MASK).astype(jnp.uint8)
+    return codes, outlier, jnp.where(outlier, top, jnp.uint8(0))
+
+
+@jax.jit
+def _decompress_kernel(codes, outlier, top):
+    ext = jnp.where((codes & _SIGN_BIT) != 0,
+                    jnp.uint8(_EXT_MASK), jnp.uint8(0))
+    escaped = ((top << CODE_BITS) | codes).astype(jnp.uint8)
+    return jnp.where(outlier, escaped, codes | ext).astype(jnp.uint8)
+
+
+def _windowed(u, window: int, xp):
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    n = int(u.shape[0])
+    nw = -(-n // window)
+    pad = nw * window - n
+    u = xp.pad(u, (0, pad))
+    return u.reshape(nw, window), n
+
+
+def compress(values, window: int) -> MsrCompressed:
+    """MSR-compress ``values`` (int8/uint8, any shape) in fixed windows.
+
+    The last window is zero-padded (a zero byte is always an inlier).
+    Jitted; :func:`compress_reference` is the pinned numpy oracle.
+    """
+    a = jnp.asarray(values)
+    u, count = _windowed(_to_bytes_jnp(a), window, jnp)
+    codes, outlier, top = _compress_kernel(u)
+    return MsrCompressed(codes, outlier, top, window, count,
+                         tuple(a.shape), str(a.dtype))
+
+
+def decompress(comp: MsrCompressed) -> jax.Array:
+    """Bit-exact inverse of :func:`compress`."""
+    flat = _decompress_kernel(comp.codes, comp.outlier,
+                              comp.top).reshape(-1)[:comp.count]
+    return _from_bytes(flat, comp.dtype, comp.shape, jnp)
+
+
+def compress_reference(values, window: int) -> MsrCompressed:
+    """Pure-numpy reference codec (the oracle the jitted kernel must match
+    bit for bit)."""
+    a = np.asarray(values)
+    u, count = _windowed(_to_bytes_np(a), window, np)
+    top = (u >> CODE_BITS).astype(np.uint8)
+    predicted = np.where(u & _SIGN_BIT, _TOP_ONES, 0).astype(np.uint8)
+    outlier = top != predicted
+    codes = (u & _CODE_MASK).astype(np.uint8)
+    return MsrCompressed(codes, outlier, np.where(outlier, top, 0).astype(np.uint8),
+                         window, count, tuple(a.shape), str(a.dtype))
+
+
+def decompress_reference(comp: MsrCompressed) -> np.ndarray:
+    codes = np.asarray(comp.codes, np.uint8)
+    outlier = np.asarray(comp.outlier, bool)
+    top = np.asarray(comp.top, np.uint8)
+    ext = np.where(codes & _SIGN_BIT, _EXT_MASK, 0).astype(np.uint8)
+    escaped = ((top.astype(np.uint16) << CODE_BITS) | codes).astype(np.uint8)
+    flat = np.where(outlier, escaped, codes | ext).reshape(-1)[:comp.count]
+    return _from_bytes(flat, comp.dtype, comp.shape, np)
+
+
+def outlier_mask(values) -> np.ndarray:
+    """Boolean mask (same shape) of values needing an escape record -
+    equivalently ``(v < -16) | (v > 15)`` on the int8 view. Numpy; outlier
+    status is per-value, so this is independent of windowing, ordering, or
+    packet grouping."""
+    a = np.asarray(values)
+    u = _to_bytes_np(a)
+    top = u >> CODE_BITS
+    predicted = np.where(u & _SIGN_BIT, _TOP_ONES, 0)
+    return (top != predicted).reshape(a.shape)
+
+
+# --- escape-metadata accounting --------------------------------------------
+
+def _count_field_bits(window: int) -> int:
+    # The per-window outlier counter addresses 0..window inclusive.
+    return max(1, int(window).bit_length())
+
+
+def _pos_field_bits(window: int) -> int:
+    # Same contract as ordering.index_overhead_bits: one of `window` slots.
+    return max(1, int(window - 1).bit_length())
+
+
+def msr_stream_overhead_bits(window: int, num_windows, num_outliers) -> int:
+    """Escape bits for ``num_windows`` windows of ``window`` transmitted
+    slots holding ``num_outliers`` outliers in total: a count field per
+    window plus a (position, top-bits) record per outlier."""
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    return (int(num_windows) * _count_field_bits(window)
+            + int(num_outliers) * (_pos_field_bits(window) + ESCAPE_BITS))
+
+
+def msr_overhead_bits(window: int, num_outliers) -> int:
+    """Escape bits one window of ``window`` slots owes for ``num_outliers``
+    outliers."""
+    return msr_stream_overhead_bits(window, 1, num_outliers)
+
+
+def escape_bits(values, window: int) -> int:
+    """Total escape bits for ``values`` transmitted in ``window``-slot
+    windows: a 2-D ``(num_windows, k<=window)`` operand matrix (one row per
+    packet, rows zero-padded on the wire to ``window`` slots - padding
+    zeros are inliers), or a flat stream split into ``ceil(n/window)``
+    windows."""
+    a = np.asarray(values)
+    if a.ndim == 2:
+        if a.shape[1] > window:
+            raise ValueError(f"operand rows of {a.shape[1]} values do not "
+                             f"fit a {window}-slot window")
+        nwin = int(a.shape[0])
+    else:
+        nwin = -(-a.size // window) if a.size else 0
+    n_out = int(outlier_mask(a).sum())
+    return msr_stream_overhead_bits(window, nwin, n_out)
+
+
+# --- compressed flit geometry ----------------------------------------------
+
+def compressed_bytes(n_slots: int) -> int:
+    """Bytes of the dense 5-bit code stream for ``n_slots`` values."""
+    return -(-CODE_BITS * int(n_slots) // 8)
+
+
+def compressed_payload_flits(n_values, lanes: int):
+    """Payload flits of an MSR-compressed single stream of ``n_values``
+    values: values are lane-padded exactly like :func:`flits.pack` (the
+    transform may deal real values anywhere in the lane-rounded slots), the
+    5-bit codes are densely packed into bytes, and the bytes are
+    lane-padded into 8-bit flit lanes. Never exceeds the uncompressed
+    ``ceil(n/lanes)``. Scalar in, int out; array in, int64 array out."""
+    n = np.asarray(n_values, np.int64)
+    slots = -(-n // lanes) * lanes
+    nbytes = -(-(CODE_BITS * slots) // 8)
+    nf = -(-nbytes // lanes)
+    return int(nf) if np.ndim(n_values) == 0 else nf
+
+
+def compressed_paired_payload_flits(n_values, lanes: int):
+    """Payload flits of an MSR-compressed paired stream of ``n_values``
+    (input, weight) pairs - each half-flit stream compressed independently
+    (mirrors :func:`flits.pack_paired`)."""
+    if lanes % 2:
+        raise ValueError("paired packing needs an even lane count")
+    half = lanes // 2
+    n = np.asarray(n_values, np.int64)
+    slots = -(-n // half) * half
+    nbytes = -(-(CODE_BITS * slots) // 8)
+    nf = -(-nbytes // half)
+    return int(nf) if np.ndim(n_values) == 0 else nf
+
+
+# --- dense 5-bit packing + flit streams ------------------------------------
+
+def _pack_codes(codes: jax.Array) -> jax.Array:
+    """Densely bit-pack 5-bit codes into bytes, LSB-first (code ``i``
+    occupies bit positions ``[5i, 5i+5)`` of the little-endian bitstream).
+    Traceable; shapes are static per call site."""
+    n = int(codes.shape[0])
+    shifts = jnp.arange(CODE_BITS, dtype=jnp.uint8)
+    bits = (codes[:, None] >> shifts) & jnp.uint8(1)
+    flat = bits.reshape(-1)
+    pad = (-CODE_BITS * n) % 8
+    flat = jnp.pad(flat, (0, pad))
+    weights = jnp.uint32(1) << jnp.arange(8, dtype=jnp.uint32)
+    return (flat.reshape(-1, 8).astype(jnp.uint32)
+            * weights).sum(axis=1).astype(jnp.uint8)
+
+
+def _pack_codes_reference(codes: np.ndarray) -> np.ndarray:
+    codes = np.asarray(codes, np.uint8).reshape(-1)
+    bits = np.unpackbits(codes[:, None], axis=1,
+                         bitorder="little")[:, :CODE_BITS]
+    return np.packbits(bits.reshape(-1), bitorder="little")
+
+
+def unpack_codes_reference(data, n: int) -> np.ndarray:
+    """Recover ``n`` 5-bit codes from a dense byte stream (numpy)."""
+    bits = np.unpackbits(np.asarray(data, np.uint8),
+                         bitorder="little")[:CODE_BITS * n]
+    if n == 0:
+        return np.zeros(0, np.uint8)
+    return np.packbits(bits.reshape(n, CODE_BITS), axis=1,
+                       bitorder="little")[:, 0]
+
+
+def msr_pack(values, lanes: int) -> FlitStream:
+    """Compress a flat value stream and pack the 5-bit codes into flits.
+
+    Mirrors :func:`repro.core.flits.pack`: values zero-padded to a lane
+    multiple (a zero's code is zero), dense code bytes zero-padded to a
+    lane multiple, one byte per 8-bit lane. Escape metadata never rides the
+    payload - it is charged analytically via
+    :func:`msr_stream_overhead_bits`, so the flit geometry is a pure
+    function of the value count."""
+    u = _to_bytes_jnp(values)
+    n = int(u.shape[0])
+    slots = num_flits(n, lanes) * lanes
+    u = jnp.pad(u, (0, slots - n))
+    data = _pack_codes(u & _CODE_MASK)
+    nf = -(-int(data.shape[0]) // lanes)
+    data = jnp.pad(data, (0, nf * lanes - int(data.shape[0])))
+    return FlitStream(data.reshape(nf, lanes), lanes, 8)
+
+
+def msr_pack_paired(inputs, weights, lanes: int) -> FlitStream:
+    """Paired-stream :func:`msr_pack`: inputs compressed into the left
+    half-flit, weights into the right (the Fig. 2 layout, each half's code
+    stream packed independently so it toggles only against itself)."""
+    if lanes % 2:
+        raise ValueError("paired packing needs an even lane count")
+    half = lanes // 2
+    ui, uw = _to_bytes_jnp(inputs), _to_bytes_jnp(weights)
+    if ui.shape != uw.shape:
+        raise ValueError("inputs and weights must have the same element count")
+    n = int(ui.shape[0])
+    pad = num_flits(n, half) * half - n
+    di = _pack_codes(jnp.pad(ui, (0, pad)) & _CODE_MASK)
+    dw = _pack_codes(jnp.pad(uw, (0, pad)) & _CODE_MASK)
+    nf = -(-int(di.shape[0]) // half)
+    di = jnp.pad(di, (0, nf * half - int(di.shape[0]))).reshape(nf, half)
+    dw = jnp.pad(dw, (0, nf * half - int(dw.shape[0]))).reshape(nf, half)
+    return FlitStream(jnp.concatenate([di, dw], axis=1), lanes, 8)
+
+
+def msr_pack_reference(values, lanes: int) -> np.ndarray:
+    """Numpy reference of :func:`msr_pack` - returns the words array."""
+    u = _to_bytes_np(values)
+    n = u.shape[0]
+    slots = num_flits(n, lanes) * lanes
+    u = np.pad(u, (0, slots - n))
+    data = _pack_codes_reference(u & _CODE_MASK)
+    nf = -(-data.shape[0] // lanes)
+    data = np.pad(data, (0, nf * lanes - data.shape[0]))
+    return data.reshape(nf, lanes)
+
+
+def msr_pack_paired_reference(inputs, weights, lanes: int) -> np.ndarray:
+    """Numpy reference of :func:`msr_pack_paired` - returns the words."""
+    if lanes % 2:
+        raise ValueError("paired packing needs an even lane count")
+    half = lanes // 2
+    ui, uw = _to_bytes_np(inputs), _to_bytes_np(weights)
+    if ui.shape != uw.shape:
+        raise ValueError("inputs and weights must have the same element count")
+    n = ui.shape[0]
+    pad = num_flits(n, half) * half - n
+    di = _pack_codes_reference(np.pad(ui, (0, pad)) & _CODE_MASK)
+    dw = _pack_codes_reference(np.pad(uw, (0, pad)) & _CODE_MASK)
+    nf = -(-di.shape[0] // half)
+    di = np.pad(di, (0, nf * half - di.shape[0])).reshape(nf, half)
+    dw = np.pad(dw, (0, nf * half - dw.shape[0])).reshape(nf, half)
+    return np.concatenate([di, dw], axis=1)

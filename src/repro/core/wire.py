@@ -32,7 +32,7 @@ from typing import Optional
 import jax
 import numpy as np
 
-from . import ordering
+from . import msr, ordering
 from .flits import FlitStream, pack, pack_paired
 from . import bt as bt_mod
 
@@ -51,6 +51,8 @@ __all__ = [
     "protection_overhead_bits",
     "protection_syndrome_masks",
     "crc8_reference",
+    "COMPRESSIONS",
+    "compression_overhead_bits",
 ]
 
 
@@ -73,11 +75,26 @@ class WireTransform:
         """
         return 0
 
+    def order(self, inputs: jax.Array, weights: jax.Array, lanes: int):
+        """The transform's value reordering alone: ``(inputs, weights) ->
+        (ordered_inputs, ordered_weights)``, before any flit packing.
+
+        ``apply`` is always ``pack_paired(*order(...))``; the compression
+        knob (``repro.noc.traffic``) swaps the packer for the MSR codec's
+        while reusing the exact same ordering, so ordered values have one
+        definition per transform regardless of the wire encoding."""
+        return inputs, weights
+
+    def order_single(self, values: jax.Array, lanes: int) -> jax.Array:
+        """Single-stream ordering alone (``apply_single`` = ``pack`` of it)."""
+        return values
+
     def apply(self, inputs: jax.Array, weights: jax.Array, lanes: int) -> FlitStream:
-        return pack_paired(inputs, weights, lanes)
+        oi, ow = self.order(inputs, weights, lanes)
+        return pack_paired(oi, ow, lanes)
 
     def apply_single(self, values: jax.Array, lanes: int) -> FlitStream:
-        return pack(values, lanes)
+        return pack(self.order_single(values, lanes), lanes)
 
 
 class IdentityTransform(WireTransform):
@@ -100,14 +117,13 @@ class DescendingTransform(WireTransform):
         # preserved (single): a recovery index is owed either way.
         return ordering.index_overhead_bits(window)
 
-    def apply_single(self, values: jax.Array, lanes: int) -> FlitStream:
-        ordered = ordering.descending_order(
+    def order_single(self, values: jax.Array, lanes: int) -> jax.Array:
+        return ordering.descending_order(
             values, window=self.window, fill=self.fill,
             lanes=lanes if self.fill == "interleave" else None,
-            tiebreak=self.tiebreak)
-        return pack(ordered.values, lanes)
+            tiebreak=self.tiebreak).values
 
-    def apply(self, inputs: jax.Array, weights: jax.Array, lanes: int) -> FlitStream:
+    def order(self, inputs: jax.Array, weights: jax.Array, lanes: int):
         # Without pairing semantics, order each half independently.
         oi = ordering.descending_order(
             inputs, window=self.window, fill=self.fill,
@@ -117,7 +133,7 @@ class DescendingTransform(WireTransform):
             weights, window=self.window, fill=self.fill,
             lanes=(lanes // 2) if self.fill == "interleave" else None,
             tiebreak=self.tiebreak)
-        return pack_paired(oi.values, ow.values, lanes)
+        return oi.values, ow.values
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,16 +147,15 @@ class AffiliatedTransform(WireTransform):
         # popcount-sorted stream still owes the index that restores order.
         return 0 if paired else ordering.index_overhead_bits(window)
 
-    def apply(self, inputs: jax.Array, weights: jax.Array, lanes: int) -> FlitStream:
+    def order(self, inputs: jax.Array, weights: jax.Array, lanes: int):
         po = ordering.affiliated_order(inputs, weights, window=self.window,
                                        tiebreak=self.tiebreak)
-        return pack_paired(po.inputs, po.weights, lanes)
+        return po.inputs, po.weights
 
-    def apply_single(self, values: jax.Array, lanes: int) -> FlitStream:
+    def order_single(self, values: jax.Array, lanes: int) -> jax.Array:
         # A lone weight stream under O1 is just descending ordering.
-        ordered = ordering.descending_order(values, window=self.window,
-                                            tiebreak=self.tiebreak)
-        return pack(ordered.values, lanes)
+        return ordering.descending_order(values, window=self.window,
+                                         tiebreak=self.tiebreak).values
 
 
 @dataclasses.dataclass(frozen=True)
@@ -152,15 +167,14 @@ class SeparatedTransform(WireTransform):
     def overhead_bits_per_value(self, window: int, paired: bool = True) -> int:
         return ordering.index_overhead_bits(window)
 
-    def apply(self, inputs: jax.Array, weights: jax.Array, lanes: int) -> FlitStream:
+    def order(self, inputs: jax.Array, weights: jax.Array, lanes: int):
         po = ordering.separated_order(inputs, weights, window=self.window,
                                       tiebreak=self.tiebreak)
-        return pack_paired(po.inputs, po.weights, lanes)
+        return po.inputs, po.weights
 
-    def apply_single(self, values: jax.Array, lanes: int) -> FlitStream:
-        ordered = ordering.descending_order(values, window=self.window,
-                                            tiebreak=self.tiebreak)
-        return pack(ordered.values, lanes)
+    def order_single(self, values: jax.Array, lanes: int) -> jax.Array:
+        return ordering.descending_order(values, window=self.window,
+                                         tiebreak=self.tiebreak).values
 
 
 @dataclasses.dataclass(frozen=True)
@@ -182,17 +196,16 @@ class MinHammingTransform(WireTransform):
     def overhead_bits_per_value(self, window: int, paired: bool = True) -> int:
         return ordering.index_overhead_bits(window)
 
-    def apply(self, inputs: jax.Array, weights: jax.Array, lanes: int) -> FlitStream:
+    def order(self, inputs: jax.Array, weights: jax.Array, lanes: int):
         po = ordering.separated_min_hamming_order(
             inputs, weights, window=self.window, lanes=lanes // 2,
             beam=self.beam, starts=self.starts)
-        return pack_paired(po.inputs, po.weights, lanes)
+        return po.inputs, po.weights
 
-    def apply_single(self, values: jax.Array, lanes: int) -> FlitStream:
-        ordered = ordering.min_hamming_order(
+    def order_single(self, values: jax.Array, lanes: int) -> jax.Array:
+        return ordering.min_hamming_order(
             values, window=self.window, lanes=lanes,
-            beam=self.beam, starts=self.starts)
-        return pack(ordered.values, lanes)
+            beam=self.beam, starts=self.starts).values
 
 
 @dataclasses.dataclass(frozen=True)
@@ -209,11 +222,11 @@ class MinHammingAffiliatedTransform(MinHammingTransform):
     def overhead_bits_per_value(self, window: int, paired: bool = True) -> int:
         return 0 if paired else ordering.index_overhead_bits(window)
 
-    def apply(self, inputs: jax.Array, weights: jax.Array, lanes: int) -> FlitStream:
+    def order(self, inputs: jax.Array, weights: jax.Array, lanes: int):
         po = ordering.affiliated_min_hamming_order(
             inputs, weights, window=self.window, lanes=lanes // 2,
             beam=self.beam, starts=self.starts)
-        return pack_paired(po.inputs, po.weights, lanes)
+        return po.inputs, po.weights
 
 
 TRANSFORMS = {
@@ -248,6 +261,34 @@ def protection_overhead_bits(protect: str, num_flits: int) -> int:
     logical payload size.
     """
     return PROTECTION_BITS[protect] * int(num_flits)
+
+
+# MSR payload compression (see repro.core.msr and DESIGN.md "MSR
+# compression"). The 5-bit codes ride the payload lanes (real flit-count
+# reduction); the per-window escape records - outlier count + (position,
+# top bits) per outlier - ride the sideband like the recovery index and the
+# protection codes, charged analytically at half a transition per bit.
+
+COMPRESSIONS = ("none", "msr")
+
+
+def compression_overhead_bits(compression: str, values, window: int) -> int:
+    """Escape/metadata bits a compression scheme owes for transmitting
+    ``values`` in ``window``-slot windows (a 2-D operand matrix charges one
+    window per row; a flat stream is split into ``ceil(n/window)``).
+
+    ``none`` owes nothing. ``msr`` owes the per-window escape records
+    (:func:`repro.core.msr.escape_bits`); outlier status is per-value, so
+    the charge is invariant under every WireTransform's within-window
+    permutation - compression overhead is a (model, precision) property,
+    never an ordering property.
+    """
+    if compression == "none":
+        return 0
+    if compression != "msr":
+        raise KeyError(f"unknown compression scheme {compression!r}; "
+                       f"supported: {COMPRESSIONS}")
+    return msr.escape_bits(values, window)
 
 
 def crc8_reference(data: bytes) -> int:

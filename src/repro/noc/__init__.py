@@ -6,8 +6,9 @@ from .topology import (NocConfig, PAPER_NOCS, PLACEMENTS, AFFINITIES,
                        alive_link_mask, fault_route_table)
 from .sim import (Traffic, Wire, SimResult, DrainTimeout, simulate,
                   simulate_batch, make_state, fuse_traffic, pack_sideband)
-from .traffic import (LayerTraffic, build_traffic, build_traffic_batch,
-                      build_traffic_streamed, build_result_traffic,
+from .traffic import (COMPRESSIONS, LayerTraffic, build_traffic,
+                      build_traffic_batch, build_traffic_streamed,
+                      build_result_traffic, compression_overhead,
                       layer_results, conv_layer_traffic,
                       linear_layer_traffic, filter_packets)
 from .sweep import (SweepGrid, SweepReport, run_sweep, run_serving,
@@ -27,8 +28,9 @@ __all__ = [
     "fault_route_table",
     "Traffic", "Wire", "SimResult", "DrainTimeout", "simulate",
     "simulate_batch", "make_state", "fuse_traffic", "pack_sideband",
-    "LayerTraffic", "build_traffic", "build_traffic_batch",
-    "build_traffic_streamed", "build_result_traffic", "layer_results",
+    "COMPRESSIONS", "LayerTraffic", "build_traffic", "build_traffic_batch",
+    "build_traffic_streamed", "build_result_traffic",
+    "compression_overhead", "layer_results",
     "conv_layer_traffic", "linear_layer_traffic", "filter_packets",
     "SweepGrid", "SweepReport", "run_sweep", "run_serving",
     "recovery_overhead_bits",

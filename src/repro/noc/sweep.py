@@ -32,16 +32,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.wire import WireTransform, by_name
+from repro.core import msr
+from repro.core.wire import COMPRESSIONS, WireTransform, by_name
 from repro.quant import quantize_fixed8
 from .topology import (AFFINITIES, NocConfig, PLACEMENTS, affinity_mc_table,
                        mc_placement, mesh_by_name, packet_mean_hops,
                        xy_link_loads)
 from .traffic import (DEFAULT_RESULT_WINDOW, LayerTraffic, assemble_traffic,
                       build_result_traffic, build_traffic_batch,
-                      build_traffic_streamed_multi, ordered_payloads,
-                      pad_traffic_length, payload_shapes, result_values,
-                      stream_lengths)
+                      build_traffic_streamed_multi, compression_overhead,
+                      ordered_payloads, pad_traffic_length, payload_shapes,
+                      result_values, stream_lengths)
 from .sim import SimResult, Traffic, simulate_batch
 
 __all__ = ["SweepGrid", "SweepReport", "run_sweep", "run_serving",
@@ -79,6 +80,16 @@ class SweepGrid:
         stream split).
     transforms: WireTransform names (``repro.core.wire.by_name``); the
         ``baseline`` transform anchors the per-cell reduction percentages.
+    compression: flit payload compression schemes (``core.wire.COMPRESSIONS``)
+        - the fifth ordering knob, crossed with every other axis. ``"none"``
+        (the default) is the seed packetizer and its rows are bit-identical
+        to a grid without the axis; ``"msr"`` runs every packet payload
+        through the MSR 8b->5b codec (``repro.core.msr``) after ordering,
+        shrinking flit counts and shifting drain cycles, and charges the
+        per-window escape metadata at half a transition per bit in
+        ``compression_overhead_bits`` / ``adjusted_bt`` - exactly how the
+        O2 recovery index is priced. MSR reads int8 payloads, so ``"msr"``
+        requires ``precisions`` to be exactly ``("fixed8",)`` subsets.
     max_packets_per_layer: deterministic-stride neuron subsampling budget;
         ``None`` packetizes the *full* layers through the streamed
         chunked path (``build_traffic_streamed``) instead of the one-shot
@@ -103,6 +114,7 @@ class SweepGrid:
     tiebreaks: Sequence[str] = ("pattern",)
     precisions: Sequence[str] = ("float32", "fixed8")
     models: Sequence[str] = ("lenet",)
+    compression: Sequence[str] = ("none",)
     max_packets_per_layer: Optional[int] = 40
     stream_chunk_packets: int = 4096
     count_headers: bool = True
@@ -177,6 +189,18 @@ class SweepGrid:
         if self.baseline not in self.transforms:
             raise ValueError(
                 f"baseline {self.baseline!r} not in transforms {self.transforms}")
+        unknown = set(self.compression) - set(COMPRESSIONS)
+        if unknown:
+            raise ValueError(f"unknown compression {sorted(unknown)}; "
+                             f"supported: {COMPRESSIONS}")
+        if not self.compression:
+            raise ValueError("need at least one compression scheme")
+        if "msr" in self.compression:
+            nonint = set(self.precisions) - {"fixed8"}
+            if nonint:
+                raise ValueError(
+                    "compression 'msr' reads int8 payloads; drop precisions "
+                    f"{sorted(nonint)} or sweep compression=('none',)")
         from .online import ARRIVAL_KINDS
         if self.arrival not in ARRIVAL_KINDS:
             raise ValueError(f"arrival must be one of {ARRIVAL_KINDS}, "
@@ -253,10 +277,10 @@ def cached_ordered_payloads(cache: Dict[tuple, list], model: str,
                             layers: Sequence[LayerTraffic], lanes: int,
                             variants, axes,
                             max_packets_per_layer: Optional[int],
-                            timings: Optional[Dict[str, float]] = None
-                            ) -> list:
+                            timings: Optional[Dict[str, float]] = None,
+                            compression: str = "none") -> list:
     """Ordered payloads for ``variants``, cached per (model, lanes,
-    transform, precision).
+    transform, precision, compression).
 
     The transform value is the frozen ``WireTransform`` dataclass, so the
     key carries the ordering name, window, tiebreak, and beam/starts
@@ -274,12 +298,13 @@ def cached_ordered_payloads(cache: Dict[tuple, list], model: str,
     """
     stacks = []
     for (tr, q), (prec, _, _) in zip(variants, axes):
-        key = (model, lanes, tr, prec)
+        key = (model, lanes, tr, prec, compression)
         if key not in cache:
             t0 = time.perf_counter()
             cache[key] = ordered_payloads(
                 layers, lanes, [(tr, q)],
-                max_packets_per_layer=max_packets_per_layer)
+                max_packets_per_layer=max_packets_per_layer,
+                compression=compression)
             if timings is not None:
                 timings[tr.name] = (timings.get(tr.name, 0.0)
                                     + time.perf_counter() - t0)
@@ -444,23 +469,33 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
         key = (cfg.rows, cfg.cols, cfg.num_vcs, cfg.vc_depth, cfg.lanes)
         size_groups.setdefault(key, []).append(cfg)
 
+    # Escape-metadata bits per (model, precision, lanes, compression) and
+    # result-stream outlier counts per (model, precision): analytic,
+    # value-only quantities shared by every mesh/placement/affinity cell.
+    comp_cache: Dict[tuple, int] = {}
+    routlier_cache: Dict[tuple, int] = {}
     nv = len(variants)
     ndev = len(devs) if devs else 1
     for mesh_name, base_cfg in resolved:
-        for model in grid.models:
+        # Compression joins as an extra shape class per (mesh, model): MSR
+        # shrinks per-packet flit counts, so none/msr cells can never share
+        # a packetization skeleton or a compiled drain lane.
+        for model, comp in [(m, c) for m in grid.models
+                            for c in grid.compression]:
             if model not in layer_cache:
                 layer_cache[model] = layers_for_model(model)
             layers = layer_cache[model]
 
             t0 = time.perf_counter()
-            pkey = (model, base_cfg.lanes)
+            pkey = (model, base_cfg.lanes, comp)
             if pkey not in shape_cache:
                 if streamed:
                     # One single-packet geometry probe per model; the
                     # payloads themselves never materialize whole.
                     shape_cache[pkey] = payload_shapes(
                         layers, base_cfg.lanes, variants,
-                        max_packets_per_layer=grid.max_packets_per_layer)
+                        max_packets_per_layer=grid.max_packets_per_layer,
+                        compression=comp)
                 else:
                     # The one-shot path reads the geometry off the
                     # payload arrays it needs anyway - probing all
@@ -469,7 +504,7 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
                         ordered_cache, model, layers, base_cfg.lanes,
                         variants, axes,
                         max_packets_per_layer=grid.max_packets_per_layer,
-                        timings=pack_by_tr)
+                        timings=pack_by_tr, compression=comp)
                     shape_cache[pkey] = [(w.shape[1], w.shape[2])
                                          for w in payload_cache[pkey]]
             group = size_groups[(base_cfg.rows, base_cfg.cols,
@@ -513,7 +548,8 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
                 combo_traffics = build_traffic_streamed_multi(
                     layers, [cfg for _, _, cfg in placed], variants,
                     chunk_packets=grid.stream_chunk_packets,
-                    num_streams=mc_pad, shapes=shapes, mc_tables=tables)
+                    num_streams=mc_pad, shapes=shapes, mc_tables=tables,
+                    compression=comp)
             else:
                 combo_traffics = [
                     assemble_traffic(payload_cache[pkey], cfg,
@@ -570,7 +606,9 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
                         layers, cfg, variants,
                         max_packets_per_layer=grid.max_packets_per_layer,
                         mc_table=tbl, result_window=grid.result_window,
-                        num_streams=pe_pad, values=rvalue_cache[model]))
+                        num_streams=pe_pad, values=rvalue_cache[model],
+                        compression=comp))
+                rnpkts = [int(p.num_packets) for p in rparts]
                 rt_pad = max(int(p.words.shape[-2]) for p in rparts)
                 # Injection-bound estimate per combo (the longest PE
                 # stream floors the drain), dealt across device shards
@@ -610,7 +648,8 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
             entry = {
                 "mesh": mesh_name, "placements": list(grid.placements),
                 "affinity": list(grid.affinity),
-                "model": model, "variants": len(results),
+                "model": model, "compression": comp,
+                "variants": len(results),
                 "packetize_s": round(t1 - t0, 4),
                 "simulate_s": round(t2 - t1, 4),
                 "cycles_per_sec": round(class_cycles / (t2 - t1), 1)
@@ -642,11 +681,24 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
                     overhead = recovery_overhead_bits(
                         layers, transform,
                         max_packets_per_layer=grid.max_packets_per_layer)
+                    # MSR escape metadata (per-window outlier count + per-
+                    # outlier position and top bits). Whether a value is an
+                    # outlier is a property of the value, not of its
+                    # position, so the bit budget is transform-independent:
+                    # one analytic pass per (model, precision, lanes).
+                    ckey = (model, prec, base_cfg.lanes, comp)
+                    if ckey not in comp_cache:
+                        comp_cache[ckey] = compression_overhead(
+                            layers, _QUANTIZERS[prec], base_cfg.lanes, comp,
+                            max_packets_per_layer=grid.max_packets_per_layer)
+                    comp_overhead = comp_cache[ckey]
                     # Charge each recovery-index bit half a transition (the
                     # toggle expectation of an uninformative bit stream): the
                     # index rides the same links as the payload, so an honest
                     # reduction figure must pay for it (paper Sec. IV-C1).
-                    adjusted_bt = res.total_bt + overhead // 2
+                    # MSR escape bits get the identical price - same links,
+                    # same uninformative-stream toggle expectation.
+                    adjusted_bt = res.total_bt + overhead // 2 + comp_overhead // 2
                     base = base_bt[(prec, tb)]
                     if rr:
                         # The result phase is a *single* stream: any
@@ -655,15 +707,30 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
                         # result value per request packet.
                         roverhead = npackets * transform.overhead_bits_per_value(
                             min(rw, npackets), paired=False)
-                        radj = rr.total_bt + roverhead // 2
+                        rcomp = 0
+                        if comp == "msr":
+                            rokey = (model, prec)
+                            if rokey not in routlier_cache:
+                                vi = axes.index((prec, tb, tr))
+                                routlier_cache[rokey] = int(sum(
+                                    int(msr.outlier_mask(lay[vi]).sum())
+                                    for lay in rvalue_cache[model]))
+                            # Result packets pad to lane-rounded slots, so
+                            # the escape window is the padded slot count.
+                            rslots = -(-rw // base_cfg.lanes) * base_cfg.lanes
+                            rcomp = msr.msr_stream_overhead_bits(
+                                rslots, rnpkts[pi], routlier_cache[rokey])
+                        radj = rr.total_bt + roverhead // 2 + rcomp // 2
                         rbase = base_rbt[(prec, tb)]
                     rows.append({
                         "mesh": mesh_name, "placement": placement,
                         "affinity": aff, "model": model, "precision": prec,
                         "transform": tr, "tiebreak": tb,
+                        "compression": comp,
                         "total_bt": res.total_bt,
                         "adjusted_bt": adjusted_bt,
                         "overhead_bits": overhead,
+                        "compression_overhead_bits": comp_overhead,
                         "cycles": res.drain_cycle,
                         "flits": res.injected,
                         "bt_per_flit": res.bt_per_flit,
@@ -674,6 +741,8 @@ def run_sweep(grid: SweepGrid, layers_for_model: LayersFn, *,
                         "result_cycles": rr.drain_cycle if rr else None,
                         "result_flits": rr.injected if rr else None,
                         "result_overhead_bits": roverhead if rr else None,
+                        "result_compression_overhead_bits":
+                            rcomp if rr else None,
                         "result_adjusted_bt": radj if rr else None,
                         "result_adjusted_reduction_pct": (
                             (1 - radj / rbase) * 100 if rr else None),
@@ -716,7 +785,7 @@ def _grid_json(grid: SweepGrid) -> dict:
     out = dataclasses.asdict(grid)
     out["meshes"] = [_resolve_mesh(m)[0] for m in grid.meshes]
     for key in ("placements", "affinity", "transforms", "tiebreaks",
-                "precisions", "models", "offered_loads"):
+                "precisions", "models", "compression", "offered_loads"):
         out[key] = list(out[key])
     return out
 
@@ -759,6 +828,13 @@ def run_serving(grid: SweepGrid, layers_for_model: LayersFn, *,
     if grid.max_packets_per_layer is None:
         raise ValueError("run_serving uses the one-shot packetizer; set "
                          "max_packets_per_layer")
+    if set(grid.compression) != {"none"}:
+        raise ValueError(
+            "run_serving prices drain timing once per combo on the O0 "
+            "baseline packetization; the compression axis changes flit "
+            "geometry per scheme, so serving grids must keep "
+            "compression=('none',) (BT-only compression rows come from "
+            "run_sweep)")
     base = (grid if grid.result_phase
             else dataclasses.replace(grid, result_phase=True))
     report = run_sweep(base, layers_for_model,

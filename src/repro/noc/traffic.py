@@ -36,7 +36,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.wire import WireTransform
+from repro.core import msr
+from repro.core.wire import (COMPRESSIONS, WireTransform,
+                             compression_overhead_bits)
 from .topology import NocConfig
 from .sim import Traffic, META_PAYLOAD, META_TAIL
 
@@ -47,7 +49,8 @@ __all__ = ["LayerTraffic", "build_traffic", "build_traffic_batch",
            "payload_shapes", "assemble_traffic", "TrafficAssembler",
            "stream_lengths", "pad_traffic_length", "stack_traffics",
            "concat_inferences", "filter_packets", "conv_layer_traffic",
-           "linear_layer_traffic", "DEFAULT_RESULT_WINDOW"]
+           "linear_layer_traffic", "DEFAULT_RESULT_WINDOW",
+           "COMPRESSIONS", "compression_overhead"]
 
 # One sweep variant: an ordering transform plus an optional value->wire-dtype
 # quantizer (None transmits raw float32 words).
@@ -108,9 +111,32 @@ def _subsample(layer: LayerTraffic,
     return inp, wgt
 
 
+def _check_compression(compression: str) -> None:
+    if compression not in COMPRESSIONS:
+        raise ValueError(f"unknown compression {compression!r}; "
+                         f"supported: {COMPRESSIONS}")
+
+
+def _packet_words(transform: WireTransform, i: jax.Array, w: jax.Array,
+                  lanes: int, compression: str) -> jax.Array:
+    """One packet's payload words under (transform, compression).
+
+    ``none`` is the transform's own packer (``apply``, bit-identical to the
+    pre-compression path). ``msr`` reuses the exact same value ordering
+    (``WireTransform.order``) but packs the 8b values as dense 5-bit MSR
+    codes - fewer flits per packet, data-independent geometry (escape
+    metadata is charged analytically, never materialized on the lanes)."""
+    if compression == "none":
+        return transform.apply(i, w, lanes).words
+    oi, ow = transform.order(i, w, lanes)
+    return msr.msr_pack_paired(oi, ow, lanes).words
+
+
 @functools.lru_cache(maxsize=None)
-def _packet_fn(transform: WireTransform, lanes: int):
-    """Vmapped packet transform, memoized per (transform, lanes).
+def _packet_fn(transform: WireTransform, lanes: int,
+               compression: str = "none"):
+    """Vmapped packet transform, memoized per (transform, lanes,
+    compression).
 
     WireTransforms are frozen dataclasses, so they key the cache. The vmap
     is deliberately left un-jitted: its primitives (argsort, gathers,
@@ -120,20 +146,21 @@ def _packet_fn(transform: WireTransform, lanes: int):
     pass per model a sweep performs."""
 
     def one_packet(i, w):
-        return transform.apply(i, w, lanes).words
+        return _packet_words(transform, i, w, lanes, compression)
 
     return jax.vmap(one_packet)
 
 
 def _payload_words(inp: jax.Array, wgt: jax.Array, transform: WireTransform,
-                   quantizer, lanes: int) -> np.ndarray:
+                   quantizer, lanes: int,
+                   compression: str = "none") -> np.ndarray:
     """Ordered payload flits for every neuron of one layer: (n, F, L) u32.
 
     One vmap over neurons applies the WireTransform packet-by-packet (the
     ordering window is the packet payload)."""
     if quantizer is not None:
         inp, wgt = quantizer(inp), quantizer(wgt)
-    words = _packet_fn(transform, lanes)(inp, wgt)
+    words = _packet_fn(transform, lanes, compression)(inp, wgt)
     return np.asarray(words.astype(jnp.uint32))
 
 
@@ -143,26 +170,31 @@ def ordered_payloads(
     variants: Sequence[Variant],
     *,
     max_packets_per_layer: Optional[int] = None,
+    compression: str = "none",
 ) -> List[np.ndarray]:
     """Ordered payload words per layer, stacked over variants: (B, n, F, L).
 
     This is the mesh-independent half of packetization (the transform sees
     only packet payloads and the flit width); the sweep engine computes it
     once per model and re-assembles it for every mesh / MC-count cell via
-    :func:`assemble_traffic`.
+    :func:`assemble_traffic`. ``compression="msr"`` packs each ordered
+    packet through the MSR codec instead of the raw 8b packer - fewer
+    payload flits per packet, same data-independent geometry contract.
     """
     if not variants:
         raise ValueError("need at least one (transform, quantizer) variant")
+    _check_compression(compression)
     out: List[np.ndarray] = []
     for layer in layers:
         inp, wgt = _subsample(layer, max_packets_per_layer)
         if inp.shape[0] == 0:
             # Probe the geometry instead of transforming nothing - a
             # quantizer's scale reduction has no identity on empty operands.
-            (_, fpay), = payload_shapes([layer], lanes, variants)
+            (_, fpay), = payload_shapes([layer], lanes, variants,
+                                        compression=compression)
             out.append(np.zeros((len(variants), 0, fpay, lanes), np.uint32))
             continue
-        per_variant = [_payload_words(inp, wgt, tr, q, lanes)
+        per_variant = [_payload_words(inp, wgt, tr, q, lanes, compression)
                        for tr, q in variants]
         shapes = {w.shape for w in per_variant}
         if len(shapes) != 1:
@@ -173,16 +205,18 @@ def ordered_payloads(
 
 
 @functools.lru_cache(maxsize=None)
-def _packet_chunk_fn(transform: WireTransform, lanes: int):
+def _packet_chunk_fn(transform: WireTransform, lanes: int,
+                     compression: str = "none"):
     """Jitted wrapper of :func:`_packet_fn` for the streamed path.
 
-    One whole-program compile per (transform, lanes, chunk shape) that every
-    chunk of every layer with that operand width reuses - the streamed
-    packetizer pads its ragged final chunk up to the fixed chunk size
-    precisely so this executable is hit on every call. Wrapping the shared
-    vmap keeps the one-shot and streamed paths on a single transform kernel.
+    One whole-program compile per (transform, lanes, compression, chunk
+    shape) that every chunk of every layer with that operand width reuses -
+    the streamed packetizer pads its ragged final chunk up to the fixed
+    chunk size precisely so this executable is hit on every call. Wrapping
+    the shared vmap keeps the one-shot and streamed paths on a single
+    transform kernel.
     """
-    fn = _packet_fn(transform, lanes)
+    fn = _packet_fn(transform, lanes, compression)
     return jax.jit(lambda i, w: fn(i, w).astype(jnp.uint32))
 
 
@@ -192,15 +226,19 @@ def payload_shapes(
     variants: Sequence[Variant],
     *,
     max_packets_per_layer: Optional[int] = None,
+    compression: str = "none",
 ) -> List[Tuple[int, int]]:
     """Per-layer ``(n_packets, payload_flits)`` without materializing any
     payloads: the flit geometry is probed on a single packet per variant.
 
     Lets the streamed path (and the sweep engine's stream-length padding)
-    size everything up front at O(1) cost per layer.
+    size everything up front at O(1) cost per layer. The probe holds under
+    compression because MSR flit geometry is a pure function of the operand
+    width (fixed 5-bit codes; escapes ride the sideband).
     """
     if not variants:
         raise ValueError("need at least one (transform, quantizer) variant")
+    _check_compression(compression)
     out: List[Tuple[int, int]] = []
     for layer in layers:
         inp, wgt = _subsample(layer, max_packets_per_layer)
@@ -213,7 +251,8 @@ def payload_shapes(
         shapes = set()
         for tr, q in variants:
             i0, w0 = (i1, w1) if q is None else (q(i1), q(w1))
-            shapes.add(tuple(tr.apply(i0[0], w0[0], lanes).words.shape))
+            shapes.add(tuple(_packet_words(tr, i0[0], w0[0], lanes,
+                                           compression).shape))
         if len(shapes) != 1:
             raise ValueError(
                 f"variants disagree on flit geometry: {sorted(shapes)}")
@@ -229,6 +268,7 @@ def ordered_payloads_streamed(
     *,
     chunk_packets: int = 4096,
     max_packets_per_layer: Optional[int] = None,
+    compression: str = "none",
 ):
     """Generator form of :func:`ordered_payloads` with bounded working set.
 
@@ -245,6 +285,7 @@ def ordered_payloads_streamed(
         raise ValueError("need at least one (transform, quantizer) variant")
     if chunk_packets < 1:
         raise ValueError(f"chunk_packets must be >= 1, got {chunk_packets}")
+    _check_compression(compression)
     for li, layer in enumerate(layers):
         inp, wgt = _subsample(layer, max_packets_per_layer)
         n = int(inp.shape[0])
@@ -260,7 +301,7 @@ def ordered_payloads_streamed(
                 if c < chunk_packets:
                     pad = ((0, chunk_packets - c), (0, 0))
                     ci, cw = jnp.pad(ci, pad), jnp.pad(cw, pad)
-                words = _packet_chunk_fn(tr, lanes)(ci, cw)
+                words = _packet_chunk_fn(tr, lanes, compression)(ci, cw)
                 per_variant.append(np.asarray(words)[:c])
             shapes = {w.shape for w in per_variant}
             if len(shapes) != 1:
@@ -672,6 +713,7 @@ def build_traffic_streamed(
     max_packets_per_layer: Optional[int] = None,
     shapes: Optional[Sequence[Tuple[int, int]]] = None,
     mc_table=None,
+    compression: str = "none",
 ) -> Traffic:
     """Packetize full (DarkNet-scale) layers in fixed-size packet chunks.
 
@@ -693,7 +735,7 @@ def build_traffic_streamed(
     return build_traffic_streamed_multi(
         layers, [cfg], variants, chunk_packets=chunk_packets,
         num_streams=num_streams, max_packets_per_layer=max_packets_per_layer,
-        shapes=shapes, mc_tables=[mc_table])[0]
+        shapes=shapes, mc_tables=[mc_table], compression=compression)[0]
 
 
 def build_traffic_streamed_multi(
@@ -706,6 +748,7 @@ def build_traffic_streamed_multi(
     max_packets_per_layer: Optional[int] = None,
     shapes: Optional[Sequence[Tuple[int, int]]] = None,
     mc_tables: Optional[Sequence] = None,
+    compression: str = "none",
 ) -> List[Traffic]:
     """Streamed packetization for SEVERAL (config, mc_table) combos at once.
 
@@ -729,13 +772,15 @@ def build_traffic_streamed_multi(
         raise ValueError("mc_tables must match cfgs")
     if shapes is None:
         shapes = payload_shapes(layers, cfgs[0].lanes, variants,
-                                max_packets_per_layer=max_packets_per_layer)
+                                max_packets_per_layer=max_packets_per_layer,
+                                compression=compression)
     asms = [TrafficAssembler(shapes, cfg, num_streams=num_streams,
                              num_variants=len(variants), mc_table=tbl)
             for cfg, tbl in zip(cfgs, mc_tables)]
     for li, start, words in ordered_payloads_streamed(
             layers, cfgs[0].lanes, variants, chunk_packets=chunk_packets,
-            max_packets_per_layer=max_packets_per_layer):
+            max_packets_per_layer=max_packets_per_layer,
+            compression=compression):
         for asm in asms:
             asm.add_chunk(li, start, words)
     return [asm.finish() for asm in asms]
@@ -748,12 +793,14 @@ def build_traffic_batch(
     *,
     max_packets_per_layer: Optional[int] = None,
     mc_table=None,
+    compression: str = "none",
 ) -> Traffic:
     """Packetize ``layers`` once per (transform, quantizer) variant into a
     batched Traffic with a leading variants axis (see
     :func:`ordered_payloads` / :func:`assemble_traffic`)."""
     payloads = ordered_payloads(layers, cfg.lanes, variants,
-                                max_packets_per_layer=max_packets_per_layer)
+                                max_packets_per_layer=max_packets_per_layer,
+                                compression=compression)
     return assemble_traffic(payloads, cfg, num_variants=len(variants),
                             mc_table=mc_table)
 
@@ -765,6 +812,7 @@ def build_traffic(
     *,
     quantizer=None,
     max_packets_per_layer: Optional[int] = None,
+    compression: str = "none",
 ) -> Traffic:
     """Packetize layers under a WireTransform into per-MC injection streams.
 
@@ -772,13 +820,50 @@ def build_traffic(
         default transmits raw float32 words.
     max_packets_per_layer: subsample neurons (deterministic stride) to bound
         simulation time; BT rates are per-flit so subsampling is unbiased.
-
-    Bit-identical to the seed loop implementation (pinned by the equivalence
-    regression test against ``repro.noc._reference``).
+    compression: ``"none"`` (the default, bit-identical to the seed loop
+        implementation, pinned against ``repro.noc._reference``) or
+        ``"msr"`` (8b->5b MSR payload codes; needs an 8-bit quantizer).
     """
     batch = build_traffic_batch(layers, cfg, [(transform, quantizer)],
-                                max_packets_per_layer=max_packets_per_layer)
+                                max_packets_per_layer=max_packets_per_layer,
+                                compression=compression)
     return batch.variant(0)
+
+
+def compression_overhead(layers: Sequence[LayerTraffic], quantizer,
+                         lanes: int, compression: str, *,
+                         max_packets_per_layer: Optional[int] = None) -> int:
+    """Total escape/metadata bits the request phase owes under
+    ``compression`` - 0 for ``"none"``.
+
+    Each packet transmits two independent half-flit windows (inputs left,
+    weights right), each padded to the lane-rounded slot count
+    ``ceil(k / (lanes/2)) * (lanes/2)``; MSR charges a per-window outlier
+    count plus a (position, top-bits) record per outlier
+    (:func:`repro.core.wire.compression_overhead_bits`). Outlier status is
+    per-value and every WireTransform only permutes values within the
+    window, so the charge is identical across the whole transform axis -
+    an honest adjusted-BT comparison adds it at half a transition per bit,
+    exactly like the O2 recovery index.
+    """
+    _check_compression(compression)
+    if compression == "none":
+        return 0
+    half = lanes // 2
+    total = 0
+    for layer in layers:
+        inp, wgt = _subsample(layer, max_packets_per_layer)
+        if inp.shape[0] == 0:
+            continue
+        if quantizer is not None:
+            inp, wgt = quantizer(inp), quantizer(wgt)
+        k = int(inp.shape[1])
+        window = -(-k // half) * half
+        total += compression_overhead_bits(compression, np.asarray(inp),
+                                           window)
+        total += compression_overhead_bits(compression, np.asarray(wgt),
+                                           window)
+    return total
 
 
 # --- result phase: PE -> MC ejection traffic -------------------------------
@@ -820,12 +905,16 @@ def result_values(
 
 
 @functools.lru_cache(maxsize=None)
-def _result_packet_fn(transform: WireTransform, lanes: int):
+def _result_packet_fn(transform: WireTransform, lanes: int,
+                      compression: str = "none"):
     """Vmapped single-stream packet transform for result payloads,
-    memoized per (transform, lanes) exactly like :func:`_packet_fn`."""
+    memoized per (transform, lanes, compression) exactly like
+    :func:`_packet_fn`."""
 
     def one_packet(vals):
-        return transform.apply_single(vals, lanes).words
+        if compression == "none":
+            return transform.apply_single(vals, lanes).words
+        return msr.msr_pack(transform.order_single(vals, lanes), lanes).words
 
     return jax.vmap(one_packet)
 
@@ -840,6 +929,7 @@ def build_result_traffic(
     result_window: Optional[int] = None,
     num_streams: Optional[int] = None,
     values: Optional[Sequence[Sequence[jax.Array]]] = None,
+    compression: str = "none",
 ) -> Traffic:
     """Packetize the result phase: per-PE injection streams of PE->MC
     result packets, as a batched Traffic (leading variants axis).
@@ -881,6 +971,7 @@ def build_result_traffic(
     """
     if not variants:
         raise ValueError("need at least one (transform, quantizer) variant")
+    _check_compression(compression)
     m, lanes, nv = cfg.num_mcs, cfg.lanes, len(variants)
     pes = np.asarray(cfg.pe_nodes, np.int64)
     p = len(pes)
@@ -891,7 +982,10 @@ def build_result_traffic(
         raise ValueError(f"result_window must be >= 1, got {w}")
     sched = _McSchedule(m, mc_table)
     mcs_nodes = np.asarray(cfg.mc_nodes, np.int64)
-    fw = -(-w // lanes)                       # payload flits per full window
+    # Payload flits per full window; under MSR compression the window's
+    # 5-bit codes pack into ceil(5 * slots / 8) bytes of 8-bit lanes.
+    fw = (-(-w // lanes) if compression == "none"
+          else msr.compressed_payload_flits(w, lanes))
 
     # Like the request-phase TrafficAssembler, assembly is scatters, not a
     # per-packet loop: each layer contributes one flat (stream row, flit
@@ -932,14 +1026,16 @@ def build_result_traffic(
         # One uniform-window transform vmap per variant; padding zeros end
         # up in the tail flits under every transform (popcount 0 sorts last
         # for O1/O2; the O3 deal confines the chained non-zeros to the
-        # first ceil(z / lanes) flits), so slicing each packet to its real
-        # flit count is exact.
+        # first ceil(z / lanes) * lanes slots), so slicing each packet to
+        # its real flit count is exact. Under MSR the kept flits cover the
+        # lane-rounded slot count's code bytes, which by the same argument
+        # hold every non-zero code; dropped bytes pack only zero codes.
         mats = []
         for v in vals:
             mat = np.zeros((npkt, w), np.asarray(v).dtype)
             mat[row, col] = np.asarray(v)[order]
             mats.append(mat)
-        words_v = [np.asarray(_result_packet_fn(tr, lanes)(
+        words_v = [np.asarray(_result_packet_fn(tr, lanes, compression)(
             jnp.asarray(mat)).astype(jnp.uint32))
             for (tr, _), mat in zip(variants, mats)]
         shapes = {wv.shape for wv in words_v}
@@ -954,7 +1050,9 @@ def build_result_traffic(
         pk_mc = uniq[pk_grp] % m
         pk_idx = np.arange(npkt) - pkt_base[pk_grp]  # window index in group
         pk_c = np.minimum(counts[pk_grp] - pk_idx * w, w)
-        pk_fpay = (-(-pk_c // lanes)).astype(np.int64)
+        pk_fpay = (np.asarray((-(-pk_c // lanes)) if compression == "none"
+                              else msr.compressed_payload_flits(pk_c, lanes))
+                   ).astype(np.int64)
         f_tot = pk_fpay + 1                          # + header flit
         dest_pk = mcs_nodes[pk_mc].astype(np.int32)
         ids_pk = (pkt_id + np.arange(npkt)).astype(np.int64)

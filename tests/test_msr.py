@@ -1,0 +1,237 @@
+"""MSR codec oracle: the jitted 8b->5b kernels are pinned bit-for-bit to
+the numpy reference, the round trip is exact on every representable byte,
+the compressed flit geometry never exceeds the uncompressed one, and the
+escape-metadata accounting matches the closed form on every
+(window, outlier-count) combination."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import msr
+from repro.core.flits import num_flits, pack, pack_paired
+from repro.core.msr import (CODE_BITS, ESCAPE_BITS, MSR_RUN, compress,
+                            compress_reference, compressed_bytes,
+                            compressed_paired_payload_flits,
+                            compressed_payload_flits, decompress,
+                            decompress_reference, escape_bits, msr_pack,
+                            msr_pack_paired, msr_pack_paired_reference,
+                            msr_pack_reference, msr_overhead_bits,
+                            msr_stream_overhead_bits, outlier_mask,
+                            unpack_codes_reference)
+
+ALL_INT8 = np.arange(-128, 128, dtype=np.int8)
+ALL_UINT8 = np.arange(256, dtype=np.uint8)
+
+
+def test_constants_are_the_papers_msr4():
+    # 4-bit sign run -> 5-bit codes with 3 explicit escape top bits.
+    assert MSR_RUN == 4
+    assert CODE_BITS == 5
+    assert ESCAPE_BITS == 3
+    assert CODE_BITS + ESCAPE_BITS == 8
+
+
+@pytest.mark.parametrize("window", [1, 3, 5, 16, 64, 256])
+def test_roundtrip_exhaustive_all_256_int8(window):
+    """decompress(compress(x)) == x for every int8 value, at several
+    window sizes (including ones that force ragged final windows)."""
+    got = decompress(compress(ALL_INT8, window))
+    np.testing.assert_array_equal(np.asarray(got), ALL_INT8)
+    ref = decompress_reference(compress_reference(ALL_INT8, window))
+    np.testing.assert_array_equal(ref, ALL_INT8)
+
+
+@pytest.mark.parametrize("window", [1, 7, 32, 256])
+def test_roundtrip_exhaustive_all_256_uint8(window):
+    got = decompress(compress(ALL_UINT8, window))
+    np.testing.assert_array_equal(np.asarray(got), ALL_UINT8)
+    ref = decompress_reference(compress_reference(ALL_UINT8, window))
+    np.testing.assert_array_equal(ref, ALL_UINT8)
+
+
+def test_jitted_kernel_matches_numpy_reference_bit_for_bit():
+    """Every field of the compressed form agrees between the jitted codec
+    and the numpy oracle, on every byte value at once."""
+    for values in (ALL_INT8, ALL_UINT8):
+        for window in (1, 6, 16, 200):
+            a = compress(values, window)
+            b = compress_reference(values, window)
+            np.testing.assert_array_equal(np.asarray(a.codes), b.codes)
+            np.testing.assert_array_equal(np.asarray(a.outlier), b.outlier)
+            np.testing.assert_array_equal(np.asarray(a.top), b.top)
+            assert (a.window, a.count, a.shape, a.dtype) == \
+                (b.window, b.count, b.shape, b.dtype)
+            assert a.overhead_bits() == b.overhead_bits()
+            np.testing.assert_array_equal(np.asarray(decompress(a)),
+                                          decompress_reference(b))
+
+
+def test_worked_examples_from_the_paper():
+    """The two SNIPPETS worked examples: 13 -> 01101, -10 -> 10110 (both
+    inliers; the top four bits are a sign run)."""
+    c = compress_reference(np.array([13, -10], np.int8), 2)
+    assert not c.outlier.any()
+    assert c.codes.reshape(-1).tolist() == [0b01101, 0b10110]
+
+
+def test_outlier_mask_is_the_range_predicate():
+    """A value escapes iff it falls outside the 5-bit two's-complement
+    range [-16, 15] - as bytes, outside {0..15, 240..255}."""
+    v = ALL_INT8
+    np.testing.assert_array_equal(outlier_mask(v), (v < -16) | (v > 15))
+    u = ALL_UINT8
+    np.testing.assert_array_equal(outlier_mask(u),
+                                  (u > 15) & (u < 240))
+    # shape-preserving
+    assert outlier_mask(v.reshape(16, 16)).shape == (16, 16)
+
+
+def test_mixed_inlier_outlier_windows_roundtrip():
+    """Windows that mix inliers and outliers in every slot pattern of a
+    4-value window still round-trip exactly."""
+    inl, out = np.int8(7), np.int8(-100)
+    for pattern in range(16):
+        vals = np.array([out if (pattern >> i) & 1 else inl
+                         for i in range(4)], np.int8)
+        c = compress(vals, 4)
+        assert int(np.asarray(c.outlier).sum()) == bin(pattern).count("1")
+        np.testing.assert_array_equal(np.asarray(decompress(c)), vals)
+
+
+def test_padding_is_inlier_and_count_restores_shape():
+    """Ragged final windows zero-pad; zero is an inlier, so padding never
+    inflates the escape budget, and the original shape returns exactly."""
+    vals = np.array([[100, -3], [5, -128]], np.int8)
+    c = compress(vals, 3)
+    assert c.codes.shape == (2, 3)          # 4 values in 2 windows of 3
+    assert c.count == 4 and c.shape == (2, 2)
+    assert int(np.asarray(c.outlier).sum()) == 2    # 100 and -128 only
+    got = np.asarray(decompress(c))
+    assert got.shape == (2, 2) and got.dtype == np.int8
+    np.testing.assert_array_equal(got, vals)
+
+
+def test_codec_rejects_wide_dtypes():
+    with pytest.raises(TypeError, match="int8"):
+        compress(np.arange(4, dtype=np.int32), 4)
+    with pytest.raises(TypeError, match="int8"):
+        compress_reference(np.arange(4, dtype=np.float32), 4)
+    with pytest.raises(ValueError, match="window"):
+        compress(ALL_INT8, 0)
+
+
+# --- escape-metadata accounting ---------------------------------------------
+
+@pytest.mark.parametrize("window", [1, 2, 3, 4, 7, 8, 16, 64, 100])
+def test_escape_budget_matches_closed_form(window):
+    """For EVERY outlier count a window can hold, the measured escape bits
+    equal the closed form: a ceil(log2(window+1)) count field plus a
+    (ceil(log2(window)) position + 3 top bits) record per outlier."""
+    count_bits = max(1, window.bit_length())
+    pos_bits = max(1, (window - 1).bit_length())
+    for n_out in range(window + 1):
+        want = count_bits + n_out * (pos_bits + ESCAPE_BITS)
+        assert msr_overhead_bits(window, n_out) == want
+        # and the codec measures exactly that on a real window
+        vals = np.array([-100] * n_out + [1] * (window - n_out), np.int8)
+        assert compress_reference(vals, window).overhead_bits() == want
+        assert escape_bits(vals, window) == want
+
+
+def test_stream_overhead_is_per_window_sum():
+    assert msr_stream_overhead_bits(16, 10, 7) == \
+        10 * msr_overhead_bits(16, 0) + 7 * (4 + ESCAPE_BITS)
+    with pytest.raises(ValueError, match="window"):
+        msr_stream_overhead_bits(0, 1, 0)
+
+
+def test_escape_bits_2d_charges_one_window_per_row():
+    """Operand matrices charge one window per packet row (rows are padded
+    to the wire window; padding zeros are inliers)."""
+    vals = np.array([[100, 1, 1], [1, 1, 1]], np.int8)
+    assert escape_bits(vals, 4) == msr_stream_overhead_bits(4, 2, 1)
+    with pytest.raises(ValueError, match="fit"):
+        escape_bits(vals, 2)
+
+
+# --- compressed flit geometry ----------------------------------------------
+
+@pytest.mark.parametrize("lanes", [2, 4, 8, 16])
+def test_compressed_never_exceeds_uncompressed_flits(lanes):
+    """The 5-bit payload stream never needs more flits than the 8-bit one,
+    for every value count up to several hundred."""
+    for n in range(1, 400):
+        assert compressed_payload_flits(n, lanes) <= num_flits(n, lanes)
+        assert compressed_paired_payload_flits(n, lanes) <= \
+            num_flits(n, lanes // 2)
+    # vectorized form agrees with the scalar form
+    ns = np.arange(1, 400)
+    np.testing.assert_array_equal(
+        compressed_payload_flits(ns, lanes),
+        [compressed_payload_flits(int(n), lanes) for n in ns])
+
+
+@pytest.mark.parametrize("lanes", [2, 4, 8, 16])
+@pytest.mark.parametrize("n", [1, 5, 16, 63, 64, 257])
+def test_pack_geometry_matches_helpers(lanes, n):
+    """msr_pack/_paired produce exactly the flit counts the closed-form
+    helpers promise, and the numpy references match the jitted packers."""
+    rng = np.random.default_rng(n * 31 + lanes)
+    vals = rng.integers(-128, 128, n).astype(np.int8)
+    wgts = rng.integers(-128, 128, n).astype(np.int8)
+
+    fs = msr_pack(vals, lanes)
+    assert fs.words.shape == (compressed_payload_flits(n, lanes), lanes)
+    assert fs.value_bits == 8
+    np.testing.assert_array_equal(np.asarray(fs.words),
+                                  msr_pack_reference(vals, lanes))
+
+    ps = msr_pack_paired(vals, wgts, lanes)
+    assert ps.words.shape == (compressed_paired_payload_flits(n, lanes),
+                              lanes)
+    np.testing.assert_array_equal(
+        np.asarray(ps.words), msr_pack_paired_reference(vals, wgts, lanes))
+
+    # wire-level recovery: the dense code stream still holds every code
+    slots = num_flits(n, lanes) * lanes
+    codes = unpack_codes_reference(np.asarray(fs.words).reshape(-1), slots)
+    np.testing.assert_array_equal(
+        codes[:n], vals.view(np.uint8) & ((1 << CODE_BITS) - 1))
+
+
+def test_compressed_bytes_formula():
+    assert compressed_bytes(0) == 0
+    assert compressed_bytes(8) == 5       # 40 bits
+    assert compressed_bytes(3) == 2       # 15 bits -> 2 bytes
+    assert compressed_bytes(400) == 250
+
+
+@pytest.mark.parametrize("lanes", [4, 8, 16])
+def test_pack_vs_uncompressed_pack_shrinks_large_packets(lanes):
+    """On a full-size packet the compressed payload is strictly smaller
+    than flits.pack's (the tentpole's reason to exist)."""
+    rng = np.random.default_rng(0)
+    vals = rng.integers(-16, 16, 40 * lanes).astype(np.int8)
+    assert msr_pack(vals, lanes).words.shape[0] < \
+        pack(jnp.asarray(vals), lanes).words.shape[0]
+    wgts = rng.integers(-16, 16, 40 * lanes).astype(np.int8)
+    assert msr_pack_paired(vals, wgts, lanes).words.shape[0] < \
+        pack_paired(jnp.asarray(vals), jnp.asarray(wgts), lanes).words.shape[0]
+
+
+def test_pack_paired_validation():
+    vals = np.zeros(4, np.int8)
+    with pytest.raises(ValueError, match="even"):
+        msr_pack_paired(vals, vals, 3)
+    with pytest.raises(ValueError, match="element count"):
+        msr_pack_paired(vals, np.zeros(5, np.int8), 4)
+
+
+def test_module_reexports():
+    from repro.core import (MsrCompressed, msr_compress, msr_decompress,
+                            msr_overhead_bits as mob)
+    c = msr_compress(np.array([1, -1], np.int8), 2)
+    assert isinstance(c, MsrCompressed)
+    np.testing.assert_array_equal(np.asarray(msr_decompress(c)),
+                                  np.array([1, -1], np.int8))
+    assert mob(2, 0) == msr.msr_overhead_bits(2, 0)

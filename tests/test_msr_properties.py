@@ -1,0 +1,112 @@
+"""Property tests (hypothesis) for the MSR compression knob.
+
+Three contracts, each over arbitrary inputs rather than pinned examples:
+the codec round-trip is the identity for any shape/dtype/window; streamed
+packetization equals the one-shot path bit for bit under compression="msr"
+for any chunk size (chunk=1 and ragged finals included); and
+compression="none" through run_sweep is field-by-field identical to a grid
+that never heard of the axis. The deterministic halves live in
+tests/test_msr.py and tests/test_noc_sweep.py; this module holds only the
+hypothesis half so importorskip can stay module-granular."""
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed in this container")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import msr
+from repro.noc import NocConfig, SweepGrid, run_sweep
+from repro.noc.traffic import build_traffic_batch, build_traffic_streamed
+from repro.core.wire import by_name
+from repro.quant import quantize_fixed8
+
+from test_noc_stream import _assert_traffic_equal, _layers
+
+settings.register_profile("msr", max_examples=25, deadline=None)
+settings.load_profile("msr")
+
+_FIXED8 = lambda t: quantize_fixed8(t).values  # noqa: E731
+
+
+@given(data=st.data(),
+       window=st.integers(min_value=1, max_value=300),
+       dtype=st.sampled_from([np.int8, np.uint8]))
+def test_property_roundtrip_identity(data, window, dtype):
+    """P: decompress(compress(x, w)) == x bit-for-bit for any byte array,
+    any shape (flat, 2-D, or empty-ish), any window size."""
+    shape = data.draw(st.sampled_from(["flat", "matrix"]))
+    if shape == "flat":
+        n = data.draw(st.integers(0, 600))
+        dims = (n,)
+    else:
+        dims = (data.draw(st.integers(1, 24)), data.draw(st.integers(1, 24)))
+    raw = data.draw(st.binary(min_size=int(np.prod(dims)),
+                              max_size=int(np.prod(dims))))
+    vals = np.frombuffer(raw, np.uint8).astype(dtype).reshape(dims)
+
+    comp = msr.compress(vals, window)
+    got = np.asarray(msr.decompress(comp))
+    assert got.dtype == vals.dtype and got.shape == vals.shape
+    np.testing.assert_array_equal(got, vals)
+
+    ref = msr.compress_reference(vals, window)
+    np.testing.assert_array_equal(decoded := msr.decompress_reference(ref),
+                                  vals)
+    assert decoded.dtype == vals.dtype
+    # jitted kernel == numpy oracle, field by field
+    np.testing.assert_array_equal(np.asarray(comp.codes), ref.codes)
+    np.testing.assert_array_equal(np.asarray(comp.outlier), ref.outlier)
+    np.testing.assert_array_equal(np.asarray(comp.top), ref.top)
+    assert comp.overhead_bits() == ref.overhead_bits()
+
+
+@given(n=st.integers(0, 500),
+       lanes=st.sampled_from([2, 4, 8, 16, 32]))
+def test_property_compressed_flits_never_exceed(n, lanes):
+    """P: compressed payload flit counts never exceed the uncompressed
+    ceil(n/lanes) geometry, single or paired."""
+    from repro.core.flits import num_flits
+    assert msr.compressed_payload_flits(n, lanes) <= num_flits(n, lanes)
+    assert msr.compressed_paired_payload_flits(n, lanes) <= \
+        num_flits(n, lanes // 2)
+
+
+@given(data=st.data(),
+       chunk=st.integers(min_value=1, max_value=50),
+       seed=st.integers(min_value=0, max_value=2**16))
+def test_property_streamed_equals_oneshot_under_msr(data, chunk, seed):
+    """P: chunking stays invisible when the payload lanes carry MSR codes -
+    for any layer list and any chunk size (1, ragged, > total) the streamed
+    Traffic equals the one-shot Traffic bit for bit."""
+    sizes = data.draw(st.lists(
+        st.tuples(st.integers(1, 40), st.integers(1, 24)),
+        min_size=1, max_size=3))
+    layers = _layers(sizes, seed=seed)
+    cfg = NocConfig(2, 2, (0, 3), lanes=8)
+    variants = [(by_name("O2", tiebreak="pattern"), _FIXED8),
+                (by_name("O1", tiebreak="stable"), _FIXED8)]
+    ref = build_traffic_batch(layers, cfg, variants, compression="msr")
+    got = build_traffic_streamed(layers, cfg, variants, chunk_packets=chunk,
+                                 compression="msr")
+    _assert_traffic_equal(ref, got)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**16),
+       n=st.integers(min_value=2, max_value=14),
+       k=st.integers(min_value=2, max_value=20))
+def test_property_none_rows_identical_to_axisless_grid(seed, n, k):
+    """P: compression="none" is the PR-9 path - run_sweep rows agree field
+    by field with a grid that does not name the axis, for any workload."""
+    layers = _layers([(n, k)], seed=seed)
+    kw = dict(meshes=("2x2_mc1",), transforms=("O0", "O2"),
+              tiebreaks=("pattern",), precisions=("fixed8",),
+              models=("toy",), max_packets_per_layer=8, chunk=64)
+    with_axis = run_sweep(SweepGrid(compression=("none",), **kw),
+                          lambda _m: layers)
+    without = run_sweep(SweepGrid(**kw), lambda _m: layers)
+    assert len(with_axis.rows) == len(without.rows)
+    for a, b in zip(with_axis.rows, without.rows):
+        assert set(a) == set(b)
+        for key in a:
+            assert a[key] == b[key], key

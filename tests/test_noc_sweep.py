@@ -238,6 +238,18 @@ def test_sweep_grid_validation():
         SweepGrid(placements=("diagonal",))
     with pytest.raises(ValueError, match="placement"):
         SweepGrid(placements=())
+    with pytest.raises(ValueError, match="compression"):
+        SweepGrid(compression=("zip",), precisions=("fixed8",))
+    with pytest.raises(ValueError, match="compression"):
+        SweepGrid(compression=(), precisions=("fixed8",))
+    # MSR reads int8 payloads: float32 anywhere in the precision axis is
+    # rejected up front, not at packetization time.
+    with pytest.raises(ValueError, match="int8"):
+        SweepGrid(compression=("msr",))
+    with pytest.raises(ValueError, match="int8"):
+        SweepGrid(compression=("none", "msr"),
+                  precisions=("fixed8", "float32"))
+    SweepGrid(compression=("none", "msr"), precisions=("fixed8",))
 
 
 def test_mc_placement_strategies():
@@ -329,8 +341,11 @@ def test_streamed_sweep_matches_oneshot_sweep(lenet_layers):
 # are None unless SweepGrid.result_phase is on. PR 6 added the honest
 # single-stream result accounting ("result_overhead_bits"/
 # "result_adjusted_bt"/"result_adjusted_reduction_pct", also None when the
-# phase is off). The PR-3 numerics are untouched - default grids must keep
-# producing exactly these rows.
+# phase is off). PR 10 added the compression axis: "compression"/
+# "compression_overhead_bits"/"result_compression_overhead_bits" are always
+# present and pinned to ("none", 0, None-when-phase-off) on default grids.
+# The PR-3 numerics are untouched - default grids must keep producing
+# exactly these rows.
 GOLDEN_GRID = dict(meshes=("2x2_mc1",), placements=("edge", "interleaved"),
                    transforms=("O0", "O1"), tiebreaks=("pattern",),
                    precisions=("fixed8",), models=("toy",),
@@ -358,16 +373,94 @@ def test_sweep_golden_rows():
         jax.random.normal(jax.random.fold_in(key, 1), (9, 12)) * 0.5)]
     report = run_sweep(SweepGrid(**GOLDEN_GRID), lambda _n: layers)
     schema = {"mesh", "placement", "affinity", "model", "precision",
-              "transform", "tiebreak", "total_bt", "adjusted_bt",
-              "overhead_bits", "cycles", "flits", "bt_per_flit", "mean_hops",
+              "transform", "tiebreak", "compression", "total_bt",
+              "adjusted_bt", "overhead_bits", "compression_overhead_bits",
+              "cycles", "flits", "bt_per_flit", "mean_hops",
               "reduction_pct", "adjusted_reduction_pct", "result_bt",
               "result_cycles", "result_flits", "result_overhead_bits",
+              "result_compression_overhead_bits",
               "result_adjusted_bt", "result_adjusted_reduction_pct"}
     assert all(set(r) == schema for r in report.rows)
+    # Default grids ride the pinned uncompressed path: the axis columns are
+    # present but inert.
+    assert all(r["compression"] == "none" for r in report.rows)
+    assert all(r["compression_overhead_bits"] == 0 for r in report.rows)
+    assert all(r["result_compression_overhead_bits"] is None
+               for r in report.rows)
     got = [{k: r[k] for k in ("mesh", "placement", "affinity", "transform",
                               "total_bt", "cycles", "flits", "result_bt",
                               "result_cycles")} for r in report.rows]
     assert got == GOLDEN_ROWS
+
+
+# PR 10: the same golden workload swept with compression=("none", "msr").
+# The k=12 packets of this workload fit the same flit count compressed or
+# not (2 payload flits either way at 16 lanes), so cycles/flits match the
+# uncompressed pins while the 5-bit code lanes move total_bt and the
+# escape metadata shows up in compression_overhead_bits - a deliberate
+# pin of the "geometry may not shrink, accounting still must charge" edge.
+GOLDEN_MSR_ROWS = [
+    {"mesh": "2x2_mc1", "placement": "edge", "transform": "O0",
+     "total_bt": 3764, "cycles": 30, "flits": 27,
+     "compression_overhead_bits": 1105},
+    {"mesh": "2x2_mc1", "placement": "edge", "transform": "O1",
+     "total_bt": 3748, "cycles": 30, "flits": 27,
+     "compression_overhead_bits": 1105},
+    {"mesh": "2x2_mc1", "placement": "interleaved", "transform": "O0",
+     "total_bt": 3764, "cycles": 30, "flits": 27,
+     "compression_overhead_bits": 1105},
+    {"mesh": "2x2_mc1", "placement": "interleaved", "transform": "O1",
+     "total_bt": 3748, "cycles": 30, "flits": 27,
+     "compression_overhead_bits": 1105},
+]
+
+
+def _golden_layers():
+    key = jax.random.PRNGKey(5)
+    return [LayerTraffic(
+        jax.random.normal(key, (9, 12)),
+        jax.random.normal(jax.random.fold_in(key, 1), (9, 12)) * 0.5)]
+
+
+def test_sweep_golden_rows_msr():
+    """The compression axis on the golden workload: none rows stay pinned
+    bit-for-bit to the PR-3 numbers, msr rows match their own pins, and the
+    conservation ledger holds on the compressed drain (positive arm)."""
+    layers = _golden_layers()
+    report = run_sweep(SweepGrid(compression=("none", "msr"), **GOLDEN_GRID),
+                       lambda _n: layers, check_conservation=True)
+    assert len(report.rows) == 2 * len(GOLDEN_ROWS)
+    none_got = [{k: r[k] for k in ("mesh", "placement", "affinity",
+                                   "transform", "total_bt", "cycles",
+                                   "flits", "result_bt", "result_cycles")}
+                for r in report.rows if r["compression"] == "none"]
+    assert none_got == GOLDEN_ROWS
+    msr_got = [{k: r[k] for k in ("mesh", "placement", "transform",
+                                  "total_bt", "cycles",
+                                  "flits", "compression_overhead_bits")}
+               for r in report.rows if r["compression"] == "msr"]
+    assert msr_got == GOLDEN_MSR_ROWS
+    for r in report.rows:
+        if r["compression"] != "msr":
+            continue
+        # the escape bits are charged at half a transition each, exactly
+        # like the recovery index
+        assert r["adjusted_bt"] == (r["total_bt"] + r["overhead_bits"] // 2
+                                    + r["compression_overhead_bits"] // 2)
+
+
+def test_conservation_detects_corruption_under_msr(lenet_layers, pinned_cfg):
+    """Negative arm: the packet-conservation ledger still catches corrupted
+    packet ids when the payload lanes carry MSR codes (fewer flits, same
+    per-packet accounting)."""
+    traffic = build_traffic(lenet_layers, pinned_cfg, by_name("O1"),
+                            quantizer=lambda t: quantize_fixed8(t).values,
+                            max_packets_per_layer=6, compression="msr")
+    res = simulate(pinned_cfg, traffic, chunk=CHUNK, check_conservation=True)
+    assert res.ejected == res.injected > 0
+    bad = traffic._replace(pkt=jnp.zeros_like(traffic.pkt))
+    with pytest.raises(RuntimeError, match="conservation"):
+        simulate(pinned_cfg, bad, chunk=CHUNK, check_conservation=True)
 
 
 # The fig12 pinned reference grid (PAPER_NOCS x 2 precisions x 2 tiebreaks,
